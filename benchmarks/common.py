@@ -1,0 +1,57 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.configs.workloads import WORKLOADS, Workload
+from repro.core import (HwConfig, plan, simulate_dense, simulate_gated,
+                        simulate_schedule, simulate_tiled_sata)
+from repro.core.masks import synthetic_masks
+
+Row = Tuple[str, float, str]          # (name, us_per_call, derived)
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, us
+
+
+def workload_reports(name: str, seeds=(0, 1, 2), hw: HwConfig = None):
+    """(sata, dense, gated, stats, planning_us) averaged over trace seeds."""
+    w = WORKLOADS[name]
+    hw = hw or HwConfig()
+    gains_t, gains_e, gains_tg, gains_eg = [], [], [], []
+    stats = []
+    plan_us = []
+    for seed in seeds:
+        masks = synthetic_masks(seed, w.trace, w.n_heads)
+        p, us = timed(plan, masks, s_f=w.s_f)
+        plan_us.append(us)
+        if w.s_f is not None:
+            r = simulate_tiled_sata(p.tiled, w.d_k, hw)
+        else:
+            r = simulate_schedule(p.schedule, w.d_k, hw)
+        d = simulate_dense(masks, w.d_k, hw)
+        g = simulate_gated(masks, w.d_k, hw)
+        gains_t.append(r.throughput_gain(d))
+        gains_e.append(r.energy_eff_gain(d))
+        gains_tg.append(r.throughput_gain(g))
+        gains_eg.append(r.energy_eff_gain(g))
+        stats.append(p.stats)
+    return {
+        "thr": float(np.mean(gains_t)), "en": float(np.mean(gains_e)),
+        "thr_vs_gated": float(np.mean(gains_tg)),
+        "en_vs_gated": float(np.mean(gains_eg)),
+        "glob_q": float(np.mean([s.glob_q_frac for s in stats])),
+        "s_h": float(np.mean([s.avg_s_h_frac for s in stats])),
+        "n_dec": float(np.mean([s.avg_n_decrements for s in stats])),
+        "glob_head": float(np.mean([s.glob_head_frac for s in stats])),
+        "plan_us": float(np.mean(plan_us)),
+        "workload": w,
+    }

@@ -1,0 +1,241 @@
+"""One benchmark per paper table/figure (Tab. I, Fig. 4a/4b/4c,
+Sec. IV-C scaling, Sec. IV-D overhead) + the TPU kernel counterpart."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, timed, workload_reports
+from repro.configs.workloads import WORKLOADS
+from repro.core import (HwConfig, plan, scheduler_cost, simulate_dense,
+                        simulate_gated, simulate_schedule,
+                        simulate_tiled_sata)
+from repro.core.masks import SyntheticTrace, synthetic_masks
+
+
+# ---------------------------------------------------------------------------
+# Tab. I — workload specification & post-schedule statistics
+# ---------------------------------------------------------------------------
+
+def bench_tab1() -> List[Row]:
+    rows: List[Row] = []
+    for name, w in WORKLOADS.items():
+        rep = workload_reports(name)
+        rows.append((f"tab1/{name}/glob_q", rep["plan_us"],
+                     f"{rep['glob_q']:.3f} (paper {w.paper_glob_q})"))
+        rows.append((f"tab1/{name}/s_h_frac", rep["plan_us"],
+                     f"{rep['s_h']:.3f} (paper {w.paper_s_h_frac})"))
+        rows.append((f"tab1/{name}/n_dec", rep["plan_us"],
+                     f"{rep['n_dec']:.2f} (paper {w.paper_n_dec})"))
+        rows.append((f"tab1/{name}/glob_head_frac", rep["plan_us"],
+                     f"{rep['glob_head']:.4f} (paper <0.001 for TTST)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4a — QK throughput & energy-efficiency gain per workload
+# ---------------------------------------------------------------------------
+
+def bench_fig4a() -> List[Row]:
+    rows: List[Row] = []
+    for name, w in WORKLOADS.items():
+        rep = workload_reports(name)
+        rows.append((f"fig4a/{name}/throughput_gain", rep["plan_us"],
+                     f"{rep['thr']:.2f}x (paper {w.paper_throughput_gain}x)"))
+        rows.append((f"fig4a/{name}/energy_eff_gain", rep["plan_us"],
+                     f"{rep['en']:.2f}x (paper {w.paper_energy_gain}x)"))
+        rows.append((f"fig4a/{name}/vs_gated_thr", rep["plan_us"],
+                     f"{rep['thr_vs_gated']:.2f}x"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4b — BERT-based model runtime with SATA integration
+# ---------------------------------------------------------------------------
+
+def bench_fig4b() -> List[Row]:
+    """Self-attention runtime split (Energon-style BERT-base profile):
+    static projections keep dense timing, the QK stage is SATA-scheduled;
+    derived = normalized self-attention runtime vs the dense baseline."""
+    hw = HwConfig()
+    n, k, d_k, heads = 384, 48, 64, 12
+    tr = SyntheticTrace(n_tokens=n, k=k, cluster_rank=2, cluster_scale=1.0,
+                        band_width=24.0, band_scale=2.5, noise=0.35)
+    masks = synthetic_masks(0, tr, heads)
+    p, us = timed(plan, masks, s_f=32)
+    r = simulate_tiled_sata(p.tiled, d_k, hw)
+    d = simulate_dense(masks, d_k, hw)
+    qk_gain = r.throughput_gain(d)
+    # BERT-base profile: QK ≈ 28% of self-attention runtime at N=384
+    # (projections 55%, AV 17% — both unchanged by SATA).
+    qk_share = 0.28
+    normalized = (1 - qk_share) + qk_share / qk_gain
+    return [
+        ("fig4b/bert_qk_gain", us, f"{qk_gain:.2f}x"),
+        ("fig4b/bert_selfattn_runtime", us,
+         f"{normalized:.3f} of baseline (paper Fig4b: ~0.8-0.9)"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4c — integrating SATA into SOTA accelerators
+# ---------------------------------------------------------------------------
+
+def bench_fig4c() -> List[Row]:
+    """A3 / SpAtten / Energon modeled as gated accelerators at their own
+    pruning ratios; SATA adds locality scheduling on top.  A3's recursive
+    candidate search keeps a serial stage SATA cannot overlap (paper:
+    'limited improvement')."""
+    hw = HwConfig()
+    sotas = {
+        # (keep ratio, un-overlappable search fraction of runtime)
+        "a3": (0.40, 0.45),
+        "spatten": (0.50, 0.10),
+        "energon": (0.30, 0.15),
+    }
+    rows: List[Row] = []
+    gains_e, gains_t = [], []
+    for name, (keep, serial_frac) in sotas.items():
+        n, heads, d_k = 256, 8, 64
+        tr = SyntheticTrace(n_tokens=n, k=max(1, int(keep * n)),
+                            cluster_rank=2, cluster_scale=1.0,
+                            band_width=24.0, band_scale=2.0, noise=0.4)
+        masks = synthetic_masks(0, tr, heads)
+        p, us = timed(plan, masks, s_f=32)
+        r = simulate_tiled_sata(p.tiled, d_k, hw)
+        g = simulate_gated(masks, d_k, hw)
+        thr = r.throughput_gain(g)
+        en = r.energy_eff_gain(g)
+        # Amdahl over the accelerator's non-schedulable stage
+        thr_eff = 1.0 / (serial_frac + (1 - serial_frac) / thr)
+        en_eff = 1.0 / (serial_frac + (1 - serial_frac) / en)
+        gains_t.append(thr_eff)
+        gains_e.append(en_eff)
+        rows.append((f"fig4c/{name}/throughput_gain", us, f"{thr_eff:.2f}x"))
+        rows.append((f"fig4c/{name}/energy_gain", us, f"{en_eff:.2f}x"))
+    rows.append(("fig4c/avg_energy_gain", 0.0,
+                 f"{np.mean(gains_e):.2f}x (paper avg 1.34x)"))
+    rows.append(("fig4c/avg_throughput_gain", 0.0,
+                 f"{np.mean(gains_t):.2f}x (paper avg 1.30x)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Sec. IV-C — tile-size (S_f) scaling study
+# ---------------------------------------------------------------------------
+
+def bench_scaling_sf() -> List[Row]:
+    hw = HwConfig()
+    w = WORKLOADS["kvt_tiny"]
+    masks = synthetic_masks(0, w.trace, w.n_heads)
+    d = simulate_dense(masks, w.d_k, hw)
+    rows: List[Row] = []
+    best = (None, 0.0)
+    for s_f in (11, 18, 22, 33, 66, 99, 198):
+        p, us = timed(plan, masks, s_f=s_f if s_f < 198 else None)
+        if p.tiled is not None:
+            r = simulate_tiled_sata(p.tiled, w.d_k, hw)
+            zskip = p.tiled.zero_skip_fraction
+        else:
+            r = simulate_schedule(p.schedule, w.d_k, hw)
+            zskip = 0.0
+        gain = r.throughput_gain(d)
+        if gain > best[1]:
+            best = (s_f, gain)
+        rows.append((f"scaling_sf/kvt_tiny/sf{s_f}", us,
+                     f"thr {gain:.2f}x zskip {zskip:.2f}"))
+    rows.append(("scaling_sf/kvt_tiny/best", 0.0,
+                 f"S_f={best[0]} at {best[1]:.2f}x "
+                 f"(paper optimum S_f=0.11N=22)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Sec. IV-D — scheduler overhead
+# ---------------------------------------------------------------------------
+
+def bench_overhead() -> List[Row]:
+    hw = HwConfig()
+    rows: List[Row] = []
+    # energy overhead vs D_k at S_f=22 (paper: <5% when D_k >= 64...)
+    for d_k in (16, 32, 64, 128, 4800):
+        w = WORKLOADS["kvt_tiny"]
+        masks = synthetic_masks(0, w.trace, w.n_heads)
+        p, us = timed(plan, masks, s_f=22)
+        r = simulate_tiled_sata(p.tiled, d_k, hw)
+        frac = r.scheduler_energy_pj / r.energy_pj
+        rows.append((f"overhead/energy_dk{d_k}", us,
+                     f"{frac*100:.2f}% (paper <5% for D_k>=64)"))
+    # latency overhead vs S_f (paper: <5% when S_f <= 24)
+    for s_f in (11, 22, 28, 33):
+        w = WORKLOADS["kvt_tiny"]
+        masks = synthetic_masks(0, w.trace, w.n_heads)
+        p, _ = timed(plan, masks, s_f=s_f)
+        r = simulate_tiled_sata(p.tiled, w.d_k, hw)
+        exposed = max(0.0, r.scheduler_cycles - r.latency_cycles)
+        hidden = r.scheduler_cycles / max(r.latency_cycles, 1)
+        rows.append((f"overhead/latency_sf{s_f}", 0.0,
+                     f"sched/compute {hidden*100:.1f}% "
+                     f"exposed {exposed:.0f} cyc"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# TPU kernel counterpart: block-skip fraction + interpret-mode check
+# ---------------------------------------------------------------------------
+
+def bench_kernel() -> List[Row]:
+    import jax.numpy as jnp
+    from repro.core.blockmap import (block_skip_fraction,
+                                     identity_block_plan, sata_block_plan)
+    from repro.kernels.ops import sata_attention, sata_attention_reference
+    import jax
+    rows: List[Row] = []
+    # object-region attention: shared per-cluster key sets, raster order
+    # uninformative — the regime SATA sorting targets
+    tr = SyntheticTrace(n_tokens=256, k=32, cluster_scale=3.0,
+                        discrete_clusters=8, noise=0.3)
+    masks = jnp.asarray(synthetic_masks(0, tr, n_heads=4))
+    (kv, qo, bm), us = timed(
+        lambda: jax.block_until_ready(sata_block_plan(masks, 32, 32)))
+    _, _, bm0 = identity_block_plan(masks, 32, 32)
+    rows.append(("kernel/block_skip_sata_cluster", us,
+                 f"{float(block_skip_fraction(bm)):.3f}"))
+    rows.append(("kernel/block_skip_unsorted_cluster", 0.0,
+                 f"{float(block_skip_fraction(bm0)):.3f}"))
+    # banded masks (already raster-local): sorting must not hurt
+    trb = SyntheticTrace(n_tokens=256, k=32, cluster_scale=0.4,
+                         band_width=20, band_scale=4.0, noise=0.15)
+    masks_b = jnp.asarray(synthetic_masks(0, trb, n_heads=4))
+    _, _, bmb = sata_block_plan(masks_b, 32, 32)
+    _, _, bmb0 = identity_block_plan(masks_b, 32, 32)
+    rows.append(("kernel/block_skip_sata_banded", 0.0,
+                 f"{float(block_skip_fraction(bmb)):.3f}"))
+    rows.append(("kernel/block_skip_unsorted_banded", 0.0,
+                 f"{float(block_skip_fraction(bmb0)):.3f}"))
+    # correctness + wall time of the interpret-mode kernel (CPU)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((4, 256, 64)), jnp.float32)
+    k_ = jnp.asarray(rng.standard_normal((4, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((4, 256, 64)), jnp.float32)
+    (out, bm2), us = timed(
+        lambda: jax.block_until_ready(
+            sata_attention(q, k_, v, masks, q_block=32, k_block=32)))
+    ref = sata_attention_reference(q, k_, v, masks)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rows.append(("kernel/sata_attention_interpret", us,
+                 f"max_err {err:.2e} skip {float(block_skip_fraction(bm2)):.3f}"))
+    return rows
+
+
+ALL = {
+    "tab1": bench_tab1,
+    "fig4a": bench_fig4a,
+    "fig4b": bench_fig4b,
+    "fig4c": bench_fig4c,
+    "scaling_sf": bench_scaling_sf,
+    "overhead": bench_overhead,
+    "kernel": bench_kernel,
+}

@@ -1,0 +1,25 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Select suites with
+``python -m benchmarks.run [suite ...]``; default runs all.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks.paper_tables import ALL
+    wanted = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for suite in wanted:
+        if suite not in ALL:
+            print(f"# unknown suite {suite}; have {sorted(ALL)}",
+                  file=sys.stderr)
+            continue
+        for name, us, derived in ALL[suite]():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

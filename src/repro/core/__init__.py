@@ -1,0 +1,22 @@
+"""SATA core — the paper's primary contribution.
+
+Sorting (Algo 1), FSM scheduling (Algo 2), tiling + zero-skip
+(Sec. III-D), the CIM estimation framework (Sec. IV), and the TPU-native
+block-sparse execution planner derived from them.
+"""
+from repro.core.blockmap import (block_occupancy, block_skip_fraction,
+                                 identity_block_plan, sata_block_plan)
+from repro.core.masks import (SyntheticTrace, apply_selective_mask,
+                              synthetic_masks, synthetic_scores, topk_mask)
+from repro.core.sata import SataPlan, SataStats, plan, stats_from_results
+from repro.core.scheduling import (Schedule, Step, build_schedule,
+                                   coverage_ok, schedule_heads)
+from repro.core.simulator import (HwConfig, SimReport, scheduler_cost,
+                                  simulate_dense, simulate_gated,
+                                  simulate_schedule, simulate_tiled_sata)
+from repro.core.sorting import (HeadType, QType, SortResult,
+                                classify_queries, classify_with_escape,
+                                locality_score, sort_and_classify,
+                                sort_keys_direct, sort_keys_jax,
+                                sort_keys_psum)
+from repro.core.tiling import TiledPlan, Tile, plan_tiled, tiled_schedule

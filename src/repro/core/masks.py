@@ -1,0 +1,103 @@
+"""Top-K selective attention masks (the SATA workload).
+
+The input to SATA is the TopK index set of Keys relevant to each Query
+(paper Sec. III-A).  This module builds those masks — both from real
+attention scores (``topk_mask``) and from synthetic, locality-structured
+score generators used to reproduce the paper's workload traces
+(``synthetic_scores``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    """Boolean selection mask of the top-``k`` keys per query row.
+
+    scores: (..., n_q, n_k) attention logits.  Returns bool (..., n_q, n_k)
+    with exactly ``k`` True entries per row (ties broken by key index,
+    matching ``jax.lax.top_k`` semantics).
+    """
+    n_k = scores.shape[-1]
+    if k >= n_k:
+        return jnp.ones(scores.shape, dtype=bool)
+    _, idx = jax.lax.top_k(scores, k)                      # (..., n_q, k)
+    mask = jnp.zeros(scores.shape, dtype=bool)
+    mask = jnp.put_along_axis(mask, idx, True, axis=-1, inplace=False)
+    return mask
+
+
+def apply_selective_mask(scores: jax.Array, mask: jax.Array,
+                         neg: float = -1e30) -> jax.Array:
+    """Mask non-selected logits to ``neg`` (pre-softmax)."""
+    return jnp.where(mask, scores, jnp.asarray(neg, scores.dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTrace:
+    """Generator spec for locality-structured selective masks.
+
+    Real selective-attention masks are not i.i.d.: queries cluster around
+    shared salient keys (CLS-like tokens, local windows).  We model scores
+    as ``low-rank cluster structure + distance band + noise`` and take
+    top-k.  ``cluster_rank``/``band_width``/``noise`` steer how sortable
+    the resulting mask is, calibrated per workload in configs/workloads.py
+    to match the paper's Tab. I post-schedule statistics.
+    """
+    n_tokens: int
+    k: int
+    cluster_rank: int = 4
+    cluster_scale: float = 1.0
+    band_width: float = 0.0          # 0 disables the locality band
+    band_scale: float = 1.0
+    block_quant: int = 0             # >0: quantize positions to blocks
+                                     # (window/group attention, DRSformer-like)
+    discrete_clusters: int = 0       # >0: queries share per-cluster key
+                                     # sets (object-region attention) —
+                                     # raster order is uninformative, the
+                                     # regime SATA sorting targets
+    noise: float = 0.35
+    causal: bool = False
+
+
+def synthetic_scores(rng: np.ndarray | jax.Array, trace: SyntheticTrace,
+                     n_heads: int) -> jax.Array:
+    """(n_heads, N, N) synthetic attention scores for ``trace``."""
+    n = trace.n_tokens
+    k_q, k_k, k_n = jax.random.split(jnp.asarray(rng, dtype=jnp.uint32)
+                                     if not isinstance(rng, jax.Array) else rng, 3)
+    if trace.discrete_clusters > 0:
+        c = trace.discrete_clusters
+        q_cl = jax.random.randint(k_q, (n_heads, n), 0, c)     # query→cluster
+        k_cl = jax.random.randint(k_k, (n_heads, n), 0, c)     # key→cluster
+        same = (q_cl[:, :, None] == k_cl[:, None, :]).astype(jnp.float32)
+        scores = trace.cluster_scale * same
+    else:
+        qf = jax.random.normal(k_q, (n_heads, n, trace.cluster_rank))
+        kf = jax.random.normal(k_k, (n_heads, n, trace.cluster_rank))
+        scores = trace.cluster_scale * jnp.einsum("hqr,hkr->hqk", qf, kf)
+        scores = scores / np.sqrt(trace.cluster_rank)
+    if trace.band_width > 0:
+        pos = jnp.arange(n)
+        if trace.block_quant > 0:
+            pos = (pos // trace.block_quant) * trace.block_quant
+        dist = jnp.abs(pos[:, None] - pos[None, :]).astype(jnp.float32)
+        scores = scores + trace.band_scale * jnp.exp(
+            -(dist / trace.band_width) ** 2)[None]
+    scores = scores + trace.noise * jax.random.normal(k_n, (n_heads, n, n))
+    if trace.causal:
+        causal = jnp.tril(jnp.ones((n, n), bool))
+        scores = jnp.where(causal[None], scores, -1e30)
+    return scores
+
+
+def synthetic_masks(seed: int, trace: SyntheticTrace, n_heads: int) -> np.ndarray:
+    """(n_heads, N, N) boolean selective masks for a synthetic workload."""
+    key = jax.random.PRNGKey(seed)
+    scores = synthetic_scores(key, trace, n_heads)
+    return np.asarray(topk_mask(scores, trace.k))

@@ -1,0 +1,156 @@
+"""Activation-sharding context: launchers install NamedShardings here;
+model code calls ``constrain(x, kind)`` which is a no-op when unset.
+
+Keeps the model definitions distribution-agnostic while pinning the
+GSPMD propagation to batch-sharded activations (without this, FSDP
+weight specs win propagation and activations shard d_model over the
+data axis → per-device score/logit tensors keep the full batch)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+_SPECS: Dict[str, Any] = {}
+_MESH = None          # (mesh, dp_axes) when a launcher installed one
+
+
+def set_activation_shardings(specs: Dict[str, Any], mesh=None) -> None:
+    global _SPECS, _MESH
+    _SPECS = dict(specs)
+    if mesh is not None:
+        dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+        _MESH = (mesh, dp)
+
+
+def clear() -> None:
+    global _SPECS, _MESH
+    _SPECS = {}
+    _MESH = None
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    s = _SPECS.get(kind)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def constrain_scores(scores: jax.Array) -> jax.Array:
+    """Attention scores (B, KV, G, Q, S): batch over data; put the model
+    axis on the first of {KV, G, S} that divides (per-arch fallback —
+    e.g. phi4's 24 heads don't split 16-way, so its keys dim shards and
+    softmax reduces with a small all-reduce)."""
+    if _MESH is None:
+        return scores
+    mesh, dp = _MESH
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m = mesh.shape["model"]
+    b, kv, g, q, s = scores.shape
+    spec = [dp, None, None, None, None]
+    if kv % m == 0:
+        spec[1] = "model"
+    elif g % m == 0:
+        spec[2] = "model"
+    elif s % m == 0:
+        spec[4] = "model"
+    return jax.lax.with_sharding_constraint(
+        scores, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """(B, Q, H, hd): batch over data, heads (or head_dim) over model."""
+    if _MESH is None:
+        return x
+    mesh, dp = _MESH
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m = mesh.shape["model"]
+    spec = [dp, None, None, None]
+    if x.shape[2] % m == 0:
+        spec[2] = "model"
+    elif x.shape[3] % m == 0:
+        spec[3] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Context-parallel attention layout (§Perf hillclimb)
+#
+# Queries stay SEQUENCE-sharded over "model" (the layout the residual
+# stream already has at block boundaries under sequence parallelism);
+# K/V replicate over "model" (cheap for GQA: kv_heads×hd ≤ 1k) and the
+# score tensor shards its query dim.  Every attention op — masking,
+# top-k sort threshold, softmax, AV — is then row-parallel: no resharding
+# of the biggest tensor and no head-divisibility constraint (phi4's 24
+# heads stop mattering).  Replaces the head-sharded layout whose q-vs-kv
+# mismatch made GSPMD insert per-layer gathers / involuntary remat.
+# ---------------------------------------------------------------------------
+
+_CP = False
+
+
+def set_context_parallel(on: bool) -> None:
+    global _CP
+    _CP = bool(on)
+
+
+def cp_enabled() -> bool:
+    return _CP and _MESH is not None
+
+
+def _ns(spec):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh, dp = _MESH
+    return NamedSharding(mesh, P(*[dp if s == "DP" else s for s in spec]))
+
+
+def constrain_cp_q(q: jax.Array) -> jax.Array:
+    if not cp_enabled() or q.shape[1] % _MESH[0].shape["model"] != 0:
+        return q
+    return jax.lax.with_sharding_constraint(
+        q, _ns(("DP", "model", None, None)))
+
+
+def constrain_cp_kv(kv: jax.Array) -> jax.Array:
+    if not cp_enabled():
+        return kv
+    return jax.lax.with_sharding_constraint(
+        kv, _ns(("DP", None, None, None)))
+
+
+def constrain_cp_scores(s: jax.Array) -> jax.Array:
+    """(B, KV, G, Q, S) — query dim over model."""
+    if not cp_enabled() or s.shape[3] % _MESH[0].shape["model"] != 0:
+        return s
+    return jax.lax.with_sharding_constraint(
+        s, _ns(("DP", None, None, "model", None)))
+
+
+def make_activation_shardings(mesh, cfg, seq_shard: bool = False
+                              ) -> Dict[str, Any]:
+    """Standard batch-sharded activation layout for a model config.
+
+    ``seq_shard`` enables Megatron-style sequence parallelism: the
+    residual stream at block boundaries shards its sequence dim over
+    "model" (norms/residuals are pointwise, so this is free; GSPMD
+    all-gathers S at the QKV/MLP input and reduce-scatters after the
+    output projection).  Divides saved remat activations by the model
+    axis — required to fit the 95-100-layer models' training shapes."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    ns = lambda *spec: NamedSharding(mesh, P(*spec))
+    specs = {
+        "act": ns(dp, "model" if seq_shard else None, None),  # (B, S, D)
+        "logits": ns(dp, None, "model"),        # (B, S, V)
+    }
+    if cfg.moe:
+        specs["moe_tokens"] = ns(dp, None, None)                   # (G,T,D)
+        specs["moe_dispatch"] = ns(dp, None, None, None)           # (G,T,E,C)
+        if cfg.expert_shard == "expert":
+            specs["moe_expert_in"] = ns(dp, "model", None, None)   # (G,E,C,D)
+            specs["moe_expert_h"] = ns(dp, "model", None, None)    # (G,E,C,F)
+        else:
+            specs["moe_expert_in"] = ns(dp, None, None, None)
+            specs["moe_expert_h"] = ns(dp, None, None, "model")
+    return specs

@@ -1,0 +1,210 @@
+"""Logical sharding rules: param/optimizer/activation PartitionSpecs.
+
+Scheme (single pod: mesh (data=16, model=16); multi-pod adds "pod"):
+  * FSDP: the d_model-sized dim of every weight shards over the data
+    axes (ZeRO-3-style; XLA all-gathers weights around their use and
+    reduce-scatters grads).
+  * TP: heads / d_ff / vocab shard over "model".
+  * MoE: experts over "model" (``expert_shard="expert"``) or d_ff over
+    "model" with experts replicated (``"tensor"``, for E < mesh model
+    size, e.g. grok-1's 8 experts).
+  * Optimizer moments shard exactly like their params.
+Specs are resolved per-leaf by parameter name; stacked layer dims
+(leading scan axes) are unsharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _base_spec(path: Tuple[str, ...], ndim_tail: int, cfg: ModelConfig,
+               dp, dp_orig=None) -> Tuple:
+    """Spec for the logical (unstacked) trailing dims of a leaf.
+    ``dp`` is None in infer_tp mode (weights not FSDP-sharded);
+    ``dp_orig`` keeps the data axes for the MoE expert exception."""
+    name = path[-1]
+    in_moe = "moe" in path
+
+    # MoE experts keep their train sharding in every mode (E or d_ff over
+    # model, d_model over data): per-device slab ~2 GB, and the expert
+    # matmuls' partial-sum all-reduces are cheaper than the alternatives
+    # (F-sharded infer experts measured WORSE — §Perf iteration 6).
+    eff_dp = dp if dp is not None else dp_orig
+    if in_moe and name in ("wi", "wg"):          # (E, D, F)
+        return ((("model",), (eff_dp,), (None,))
+                if cfg.expert_shard == "expert"
+                else ((None,), (eff_dp,), ("model",)))
+    if in_moe and name == "wo":                  # (E, F, D)
+        return ((("model",), (None,), (eff_dp,))
+                if cfg.expert_shard == "expert"
+                else ((None,), ("model",), (eff_dp,)))
+    if in_moe and name == "router":              # (D, E)
+        return ((dp,), (None,))
+
+    table = {
+        # in-projections (D, X): FSDP on D, TP on X
+        "wq": "in", "wk": "in", "wv": "in", "wi": "in", "wg": "in",
+        "wr": "in", "ck": "in", "cr": "in", "in_proj": "in",
+        "shared_in": "in", "wa": "in_rep",
+        # out-projections (X, D): TP on X, FSDP on D
+        "wo": "out", "cv": "out", "out_proj": "out", "wb": "out_rep",
+    }
+    kind = table.get(name)
+    if kind == "in":
+        return ((dp,), ("model",))
+    if kind == "out":
+        return (("model",), (dp,))
+    if kind == "in_rep":
+        return ((dp,), (None,))
+    if kind == "out_rep":
+        return ((None,), (dp,))
+    if name == "embedding":
+        return (("model",), (dp,))
+    if name == "unembed":
+        return ((dp,), ("model",))
+    if name == "conv_w":                         # (K, C)
+        return ((None,), ("model",))
+    if name == "bonus_u" and ndim_tail == 2:     # (H, hd)
+        return (("model",), (None,))
+    return tuple((None,) for _ in range(ndim_tail))
+
+
+def _flatten(spec) -> Tuple:
+    out = []
+    for s in spec:
+        if isinstance(s, tuple):
+            s = s[0]
+        out.append(s)
+    return tuple(out)
+
+
+def param_specs(param_shapes: Any, cfg: ModelConfig, mesh: Mesh,
+                mode: str = "train") -> Any:
+    """PartitionSpec tree matching an (abstract) param tree.
+
+    mode="train": FSDP(+TP) — d_model dims shard over the data axes;
+    XLA all-gathers weights around use (amortized over 4k-token steps).
+    mode="infer_tp": TP-only — weights replicated over data, sharded over
+    "model" only.  Decode steps touch every weight once per token, so
+    FSDP's per-layer weight all-gather dominates decode collectives;
+    TP-only eliminates it (used when the bf16 weights fit per device)."""
+    dp_orig = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    dp = None if mode == "infer_tp" else dp_orig
+
+    def spec_for(path, leaf):
+        names = tuple(str(getattr(p, "key", getattr(p, "name", p)))
+                      for p in path)
+        ndim = len(leaf.shape)
+        if ndim == 0:
+            return P()
+        # how many leading stack dims? infer: known 2D/3D logical shapes
+        name = names[-1]
+        moe3 = ("moe" in names and name in ("wi", "wg", "wo"))
+        tail = 3 if moe3 else (2 if ndim >= 2 else 1)
+        tail = min(tail, ndim)
+        base = _base_spec(names, tail, cfg, dp, dp_orig=dp_orig)
+        base = _flatten(base)[:tail]
+        if ndim == 1 and name not in ():
+            base = (None,)
+        lead = (None,) * (ndim - len(base))
+        spec = lead + tuple(base)
+        # drop shardings that do not divide the dim (tiny smoke shapes)
+        fixed = []
+        for size, ax in zip(leaf.shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            n_shards = int(np.prod([mesh.shape[a] for a in
+                                    (ax if isinstance(ax, tuple) else (ax,))]))
+            fixed.append(ax if size % n_shards == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(spec_for, param_shapes)
+
+
+def batch_specs(batch_shapes: Any, mesh: Mesh) -> Any:
+    """Inputs: batch dim over data axes, everything else replicated.
+    Batches smaller than the data axes (long_500k's batch=1) replicate."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    dp_size = int(np.prod([mesh.shape[a] for a in
+                           (dp if isinstance(dp, tuple) else (dp,))]))
+
+    def spec_for(path, leaf):
+        if len(leaf.shape) == 0:
+            return P()
+        lead = dp if leaf.shape[0] % dp_size == 0 else None
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shapes)
+
+
+CACHE_SEQ_SHARD = True     # shard KV caches over the sequence dim (context-
+                           # parallel decode; pairs with bisect top-k).
+                           # False = legacy kv-head/head-dim sharding.
+
+
+def cache_specs(cache_shapes: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """KV/state caches.  Default: (L, B, S, KV, hd) with batch over data
+    and the SEQUENCE dim over model (context-parallel decode: QK/AV are
+    row-parallel; softmax/top-k reduce with tiny all-reduces).  Legacy
+    mode shards kv-heads (or head_dim when kv doesn't divide)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    model_size = mesh.shape["model"]
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        if ndim == 0:
+            return P()
+        names = tuple(str(getattr(p, "key", getattr(p, "name", p)))
+                      for p in path)
+        # find the batch dim: first dim equal to a plausible batch is
+        # ambiguous; by construction caches are stacked (L..., B, ...).
+        name = names[0] if names else ""
+        spec = [None] * ndim
+        if name in ("kv", "cross_kv", "shared_kv"):
+            # (..., B, S, KV, hd)
+            spec[-4] = dp
+            if CACHE_SEQ_SHARD and shape[-3] % model_size == 0:
+                spec[-3] = "model"
+            elif shape[-2] % model_size == 0:
+                spec[-2] = "model"
+            elif shape[-1] % model_size == 0:
+                spec[-1] = "model"
+        elif name == "mamba":
+            # ssm: (L, B, H, N, P); conv: (L, B, K, C)
+            spec[1] = dp
+            if shape[2] % model_size == 0:
+                spec[2] = "model"
+            elif shape[-1] % model_size == 0:
+                spec[-1] = "model"
+        elif name == "rwkv":
+            # state (L,B,H,hd,hd); tm_x/cm_x (L,B,D)
+            spec[1] = dp
+            if ndim >= 3 and shape[2] % model_size == 0:
+                spec[2] = "model"
+        elif name == "x0":
+            spec[0] = dp
+        # sanity: drop non-dividing shardings
+        fixed = []
+        for size, ax in zip(shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            n_shards = int(np.prod([mesh.shape[a] for a in
+                                    (ax if isinstance(ax, tuple) else (ax,))]))
+            fixed.append(ax if size % n_shards == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

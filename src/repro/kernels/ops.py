@@ -1,0 +1,57 @@
+"""Jit'd public wrappers: SATA planning (sort → permute → block map) +
+the Pallas kernel, end to end."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockmap import identity_block_plan, sata_block_plan
+from repro.kernels.ref import ref_block_attention
+from repro.kernels.sata_attention import sata_block_attention
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "k_block", "k",
+                                             "use_sata", "interpret",
+                                             "exact"))
+def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
+                   scores_mask: jax.Array, *, q_block: int = 128,
+                   k_block: int = 128, k: int = 64, use_sata: bool = True,
+                   exact: bool = True, interpret: bool = True
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k selective attention through the SATA plan + Pallas kernel.
+
+    q/k_/v: (BH, S, D); scores_mask: (BH, Sq, Sk) bool top-k selection.
+    Returns (output in ORIGINAL query order, block_map) — block skip
+    fraction is ``1 - block_map.mean()``.
+    """
+    plan_fn = sata_block_plan if use_sata else identity_block_plan
+    if use_sata:
+        kv_order, q_order, block_map = plan_fn(scores_mask, q_block, k_block)
+    else:
+        kv_order, q_order, block_map = identity_block_plan(
+            scores_mask, q_block, k_block)
+    kp = jnp.take_along_axis(k_, kv_order[:, :, None], axis=1)
+    vp = jnp.take_along_axis(v, kv_order[:, :, None], axis=1)
+    qp = jnp.take_along_axis(q, q_order[:, :, None], axis=1)
+    mask_p = jnp.take_along_axis(
+        jnp.take_along_axis(scores_mask, kv_order[:, None, :], axis=2),
+        q_order[:, :, None], axis=1)
+    out_p = sata_block_attention(qp, kp, vp, block_map,
+                                 mask=mask_p if exact else None,
+                                 q_block=q_block, k_block=k_block,
+                                 interpret=interpret)
+    # scatter back to original query order
+    inv = jnp.argsort(q_order, axis=-1)
+    out = jnp.take_along_axis(out_p, inv[:, :, None], axis=1)
+    return out, block_map
+
+
+def sata_attention_reference(q, k_, v, scores_mask) -> jax.Array:
+    """Oracle: exact top-k selective attention, no planning/permutation."""
+    bh, sq, _ = q.shape
+    bm = jnp.ones((bh, 1, 1), dtype=bool)
+    return ref_block_attention(q, k_, v, bm, mask=scores_mask,
+                               q_block=sq, k_block=k_.shape[1])

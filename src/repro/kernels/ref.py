@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0 ** 30
+
+
+def ref_block_attention(q, k, v, block_map,
+                        mask: Optional[jax.Array] = None,
+                        *, q_block: int = 128, k_block: int = 128,
+                        sm_scale: Optional[float] = None) -> jax.Array:
+    """Reference for ``sata_block_attention``: masked softmax attention
+    where a (q_block × k_block) tile participates iff its block_map entry
+    is set; optional element-level mask on top (exact mode).  Rows with
+    no admissible key return zeros (matching the kernel's l==0 guard)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    sm_scale = float(sm_scale if sm_scale is not None else 1.0 / np.sqrt(d))
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    bm = jnp.repeat(jnp.repeat(block_map.astype(bool), q_block, axis=1),
+                    k_block, axis=2)
+    keep = bm if mask is None else (bm & mask.astype(bool))
+    s = jnp.where(keep, s, NEG_INF)
+    any_key = keep.any(axis=-1, keepdims=True)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(any_key, p, 0.0)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_dense_attention(q, k, v, *, sm_scale=None) -> jax.Array:
+    bh, sq, d = q.shape
+    bm = jnp.ones((bh, 1, 1), dtype=bool)
+    return ref_block_attention(q, k, v, bm, q_block=sq, k_block=k.shape[1],
+                               sm_scale=sm_scale)

@@ -1,0 +1,122 @@
+"""SATA block-sparse flash attention — Pallas TPU kernel.
+
+TPU-native embodiment of the paper's insight: SATA's key sorting
+concentrates each query's selected keys into contiguous runs, so after
+permuting K/V by ``kv_order`` and grouping queries by HEAD/GLOB/TAIL
+class, whole (q_block × k_block) tiles of the score matrix are empty.
+The kernel walks the (bh, q_block, k_block) grid with flash-style online
+softmax and **skips all compute for empty tiles** (``@pl.when`` on the
+prefetched block map) — the MXU analogue of gating whole CIM sub-array
+passes, at the granularity the MXU actually exploits (128×128 tiles).
+
+Two execution modes:
+  * block mode  (``mask=None``)   — dense math inside occupied tiles,
+    exactly the paper's energy model ("MACs are dense, albeit in a
+    subset of tiles").
+  * exact mode  (``mask`` given)  — additionally applies the element-
+    level top-k mask inside each tile; bit-exact selective attention.
+
+Grid: (B·H, n_q_blocks, n_k_blocks), k innermost so the VMEM scratch
+accumulators (acc, m, l) carry across the k sweep.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(bm_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, sm_scale: float, n_kb: int,
+            exact: bool):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    occupied = bm_ref[0, 0, 0] != 0
+
+    @pl.when(occupied)
+    def _update():
+        q = q_ref[0]                                   # (bq, d)
+        k = k_ref[0]                                   # (bk, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale   # (bq, bk)
+        if exact:
+            s = jnp.where(mask_ref[0], s, NEG_INF)
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kb - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = jnp.where(l > 0, acc_ref[...] / jnp.where(l > 0, l, 1.0), 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def sata_block_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, block_map: jax.Array,
+    mask: Optional[jax.Array] = None,
+    *, q_block: int = 128, k_block: int = 128,
+    sm_scale: Optional[float] = None, interpret: bool = False,
+) -> jax.Array:
+    """q: (BH, Sq, D); k/v: (BH, Sk, D) in SATA-sorted key order;
+    block_map: (BH, Sq/q_block, Sk/k_block) bool/int;
+    mask: optional (BH, Sq, Sk) element-level selection mask."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % q_block == 0 and sk % k_block == 0, (sq, sk)
+    nqb, nkb = sq // q_block, sk // k_block
+    sm_scale = float(sm_scale if sm_scale is not None else 1.0 / np.sqrt(d))
+    exact = mask is not None
+    if mask is None:
+        mask = jnp.ones((bh, 1, 1), dtype=jnp.int8)    # dummy, never read
+
+    grid = (bh, nqb, nkb)
+    kernel = functools.partial(_kernel, sm_scale=sm_scale, n_kb=nkb,
+                               exact=exact)
+    mask_spec = (pl.BlockSpec((1, q_block, k_block),
+                              lambda b, i, j: (b, i, j)) if exact
+                 else pl.BlockSpec((1, 1, 1), lambda b, i, j: (b, 0, 0)))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1), lambda b, i, j: (b, i, j)),      # map
+            pl.BlockSpec((1, q_block, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, k_block, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, k_block, d), lambda b, i, j: (b, j, 0)),
+            mask_spec,
+        ],
+        out_specs=pl.BlockSpec((1, q_block, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            _vmem((q_block, d), jnp.float32),       # acc
+            _vmem((q_block, 1), jnp.float32),       # running max m
+            _vmem((q_block, 1), jnp.float32),       # running sum l
+        ],
+        interpret=interpret,
+    )(block_map.astype(jnp.int32), q, k, v, mask)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

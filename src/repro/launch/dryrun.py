@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell: ``jax.jit(step, in_shardings, out_shardings).lower(...)
+.compile()`` against ShapeDtypeStruct inputs on the production mesh
+(16×16 single pod / 2×16×16 multi-pod), then record
+``memory_analysis()`` / ``cost_analysis()`` / collective bytes parsed
+from the partitioned HLO into ``results/dryrun/<cell>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.archs import ARCHS, SHAPES, all_cells, cell_enabled
+from repro.distributed import ctx as dctx
+from repro.distributed.sharding import (batch_specs, cache_specs,
+                                        param_specs, to_shardings)
+from repro.launch.inputs import (batch_specs_for, decode_specs_for,
+                                 state_specs_for)
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import OptConfig
+from repro.train.step import make_prefill_step, make_serve_step, \
+    make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(\S+?)\[([\d,]*)\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+               "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-operand sizes of every collective op in partitioned HLO.
+
+    all-gather result = bytes received per device; all-reduce/
+    reduce-scatter/all-to-all/collective-permute result ≈ bytes moved per
+    device (ring all-reduce moves 2× — applied as a factor)."""
+    per_kind = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        per_kind[kind] = per_kind.get(kind, 0.0) + nbytes * factor
+    return per_kind, float(sum(per_kind.values()))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, verbose: bool = True, cfg=None,
+             tag_suffix: str = "", cp: bool = True):
+    cfg = cfg if cfg is not None else ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = (f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+           f"{tag_suffix}")
+    t0 = time.time()
+
+    seq_shard = shape.kind in ("train", "prefill")
+    dctx.set_activation_shardings(
+        dctx.make_activation_shardings(mesh, cfg, seq_shard=seq_shard),
+        mesh=mesh)
+    dctx.set_context_parallel(cp and seq_shard)
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            state_sds = state_specs_for(cfg, OptConfig())
+            batch_sds = batch_specs_for(cfg, shape)
+            st_spec = {
+                "params": param_specs(state_sds["params"], cfg, mesh),
+                "opt": {"m": param_specs(state_sds["opt"]["m"], cfg, mesh),
+                        "v": param_specs(state_sds["opt"]["v"], cfg, mesh),
+                        "step": jax.sharding.PartitionSpec()},
+            }
+            b_spec = batch_specs(batch_sds, mesh)
+            dp_size = 32 if multi_pod else 16
+            micro = max(1, min(cfg.micro_steps,
+                               shape.global_batch // dp_size))
+            step = make_train_step(cfg, OptConfig(), micro_steps=micro)
+            jitted = jax.jit(step,
+                             in_shardings=(to_shardings(st_spec, mesh),
+                                           to_shardings(b_spec, mesh)),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            state_sds = state_specs_for(cfg, OptConfig())
+            params_sds = state_sds["params"]
+            batch_sds = batch_specs_for(cfg, shape)
+            p_spec = param_specs(params_sds, cfg, mesh)
+            b_spec = batch_specs(batch_sds, mesh)
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(
+                to_shardings(p_spec, mesh), to_shardings(b_spec, mesh)))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            state_sds = state_specs_for(cfg, OptConfig())
+            params_sds = state_sds["params"]
+            cache_sds, tok_sds, pos_sds = decode_specs_for(cfg, shape)
+            # TP-only weights for decode when weights+cache fit per
+            # device — FSDP weight all-gathers dominate decode
+            # collectives.  Budget: bf16 weights/16 + KV cache/256 +
+            # ~1 GiB transients against 16 GiB HBM (deepseek-67B: 8.4+6.4
+            # → TP; llama-90B: 11+7 → falls back to FSDP).
+            n_model = mesh.shape["model"]
+            n_dev = n_model * (mesh.shape["data"]
+                               * mesh.shape.get("pod", 1))
+            expert_params = (cfg.n_layers * cfg.n_experts * 3
+                             * cfg.d_model * cfg.d_ff if cfg.moe else 0)
+            dense_params = cfg.param_count() - expert_params
+            # infer_tp: dense weights /model; experts /(model×data)
+            tp_w = dense_params * 2 / n_model + expert_params * 2 / n_dev
+            cache_b = sum(
+                int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(cache_sds)
+            ) / n_dev
+            # infer_tp = TP dense weights + train-sharded experts
+            # (§Perf iterations 3/6/7).
+            mode = "infer_tp" if tp_w + cache_b <= 15e9 else "train"
+            p_spec = param_specs(params_sds, cfg, mesh, mode=mode)
+            c_spec = cache_specs(cache_sds, cfg, mesh)
+            step = make_serve_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(to_shardings(p_spec, mesh),
+                              to_shardings(c_spec, mesh),
+                              to_shardings(batch_specs(tok_sds, mesh), mesh),
+                              None),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, cache_sds, tok_sds,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # --- analyses ---
+    result = {"cell": tag, "arch": arch, "shape": shape_name,
+              "multi_pod": multi_pod, "ok": True,
+              "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1)}
+    try:
+        mem = compiled.memory_analysis()
+        result["memory"] = {
+            k: getattr(mem, k) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:                                    # CPU backend gaps
+        result["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        result["cost"] = {k: float(v) for k, v in ca.items()
+                          if isinstance(v, (int, float))}
+    except Exception as e:
+        result["cost"] = {"error": str(e)}
+    try:
+        hlo = compiled.as_text()
+        per_kind, total = collective_bytes(hlo)
+        result["collectives"] = {"per_kind": per_kind, "total_bytes": total}
+        result["hlo_bytes"] = len(hlo)
+    except Exception as e:
+        result["collectives"] = {"error": str(e)}
+
+    if verbose:
+        mem_gb = result.get("memory", {}).get("temp_size_in_bytes", 0) / 2**30
+        flops = result.get("cost", {}).get("flops", 0)
+        coll = result.get("collectives", {}).get("total_bytes", 0)
+        print(f"[dryrun] {tag}: OK lower={t_lower:.0f}s "
+              f"compile={t_compile:.0f}s temp={mem_gb:.2f}GiB/dev "
+              f"flops={flops:.3g} coll={coll:.3g}B", flush=True)
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        (RESULTS / f"{tag}.json").write_text(json.dumps(result, indent=1))
+    dctx.set_context_parallel(False)
+    dctx.clear()
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not cell_enabled(args.arch, args.shape):
+            print(f"[dryrun] {args.arch}×{args.shape}: skipped "
+                  f"(long_500k needs sub-quadratic attention)")
+            return
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+            if args.skip_done and (RESULTS / f"{tag}.json").exists():
+                prev = json.loads((RESULTS / f"{tag}.json").read_text())
+                if prev.get("ok"):
+                    print(f"[dryrun] {tag}: cached OK", flush=True)
+                    continue
+            try:
+                run_cell(arch, shape, mp)
+            except Exception as e:
+                failures.append(tag)
+                RESULTS.mkdir(parents=True, exist_ok=True)
+                (RESULTS / f"{tag}.json").write_text(json.dumps(
+                    {"cell": tag, "ok": False, "error": str(e),
+                     "traceback": traceback.format_exc()[-4000:]}, indent=1))
+                print(f"[dryrun] {tag}: FAIL {e}", flush=True)
+    if failures:
+        print(f"[dryrun] {len(failures)} failures: {failures}", flush=True)
+        sys.exit(1)
+    print("[dryrun] all cells OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

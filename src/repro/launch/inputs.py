@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation (dry-run deliverable)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import ShapeSpec
+from repro.models import decode as dec
+from repro.models import model as mdl
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs_for(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Training/prefill batch inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = sds((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.float32)
+    if cfg.family == "audio":
+        batch["audio_embeds"] = sds((b, cfg.encoder_len, cfg.d_model),
+                                    jnp.float32)
+    return batch
+
+
+def decode_specs_for(cfg: ModelConfig, shape: ShapeSpec
+                     ) -> Tuple[Dict, Any, Any]:
+    """(cache, tokens, pos) stand-ins for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: dec.init_cache(cfg, b, s))
+    tokens = sds((b, 1), jnp.int32)
+    pos = sds((), jnp.int32)
+    return cache, tokens, pos
+
+
+def state_specs_for(cfg: ModelConfig, opt: OptConfig) -> Dict[str, Any]:
+    """Abstract train state (params + Adam moments) — no allocation."""
+    key = jax.random.PRNGKey(0)           # never materialized under eval_shape
+    params = jax.eval_shape(lambda k: mdl.init_params(k, cfg), key)
+    state = {"params": params,
+             "opt": {"m": jax.tree.map(
+                         lambda p: sds(p.shape, jnp.float32), params),
+                     "v": jax.tree.map(
+                         lambda p: sds(p.shape, jnp.float32), params),
+                     "step": sds((), jnp.int32)}}
+    return state

@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: 16×16 (256 chips) single-pod, or 2×16×16 multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes over which the batch (and FSDP weight dims) shard."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_local_mesh():
+    """Single-device mesh for CPU tests/examples."""
+    auto = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=auto)

@@ -1,0 +1,201 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis (deliverable g): three terms per (arch × shape) on
+the single-pod mesh, with the dominant bottleneck identified.
+
+    compute     = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+    memory      = HLO_bytes / (chips × 819 GB/s HBM)
+    collective  = collective_bytes / (chips × 50 GB/s ICI link)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes and the
+partitioned-HLO text for collective operand bytes — with a critical
+correction: XLA's cost analysis counts a ``while`` body ONCE, so a
+95-layer scanned model reports ~1 layer of work.  We therefore compile
+each cell at 1-unit and 2-unit depth (unit = the scan period: 1 layer,
+or one hybrid/VLM group), take per-unit deltas, and extrapolate
+``total = fixed + n_units × per_unit``.  All counters from the SPMD
+module are per-device, so terms divide by per-chip peaks directly.
+
+MODEL_FLOPS = 6·N·tokens (train) / 2·N_active·tokens (inference); the
+ratio MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is
+"useful" (catches remat recompute + attention/selection overhead).
+
+Usage:
+  python -m repro.launch.roofline --arch olmo-1b --shape train_4k
+  python -m repro.launch.roofline --all
+  python -m repro.launch.roofline --table   # print markdown from cache
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import traceback
+
+PEAK_FLOPS = 197e12          # bf16 per chip (v5e)
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "roofline"
+
+
+def _units(cfg):
+    """(unit size in layers, n_units, cfg builder for k units).
+
+    Probe configs UNROLL all layer loops (``scan_layers=False``), run a
+    single microbatch and a single attention query chunk — XLA's cost
+    analysis counts a while body once regardless of trip count, so any
+    loop left in the probe would silently undercount."""
+    probe = dict(scan_layers=False, micro_steps=1, q_chunk=1 << 30)
+    if cfg.family == "hybrid":
+        u = cfg.hybrid_period
+        build = lambda k: dataclasses.replace(cfg, n_layers=u * k, **probe)
+    elif cfg.family == "vlm":
+        u = cfg.cross_attn_period
+        build = lambda k: dataclasses.replace(cfg, n_layers=u * k, **probe)
+    elif cfg.family == "audio":
+        u = 1
+        build = lambda k: dataclasses.replace(cfg, n_layers=k,
+                                              encoder_layers=k, **probe)
+    else:
+        u = 1
+        build = lambda k: dataclasses.replace(cfg, n_layers=k, **probe)
+    return u, cfg.n_layers // u, build
+
+
+def _measure(arch, shape_name, cfg, cp=True):
+    from repro.launch.dryrun import run_cell
+    r = run_cell(arch, shape_name, multi_pod=False, save=False,
+                 verbose=False, cfg=cfg, tag_suffix="__probe", cp=cp)
+    flops = r["cost"].get("flops", 0.0)
+    byts = r["cost"].get("bytes accessed", 0.0)
+    coll = r["collectives"].get("total_bytes", 0.0)
+    return flops, byts, coll, r
+
+
+def analyse_cell(arch: str, shape_name: str, verbose: bool = True,
+                 cp: bool = True, tag_suffix: str = ""):
+    import jax
+    from repro.configs.archs import ARCHS, SHAPES
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    unit, n_units, build = _units(cfg)
+
+    f1, b1, c1, r1 = _measure(arch, shape_name, build(1), cp=cp)
+    f2, b2, c2, r2 = _measure(arch, shape_name, build(2), cp=cp)
+    pf = max(f2 - f1, 0.0)
+    pb = max(b2 - b1, 0.0)
+    pc = max(c2 - c1, 0.0)
+    flops = max(f1 - pf, 0.0) + n_units * pf
+    byts = max(b1 - pb, 0.0) + n_units * pb
+    coll = max(c1 - pc, 0.0) + n_units * pc
+
+    if cfg.rwkv and shape.kind != "decode":
+        # the time recurrence stays a lax.scan even in probes (unrolling
+        # 4k+ steps is infeasible) — add its per-step einsum flops
+        # analytically: ~5·hd² MACs per head per step, ×3 for backward.
+        b_loc = max(shape.global_batch // 16, 1)     # per-device batch
+        h = cfg.d_model // cfg.rwkv_head_dim
+        per_step = 5 * 2 * cfg.rwkv_head_dim ** 2 * h * b_loc
+        mult = 3.0 if shape.kind == "train" else 1.0
+        flops += cfg.n_layers * shape.seq_len * per_step * mult
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    n_active = cfg.active_param_count()
+    model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+    chips = 256
+    hlo_flops_global = flops * chips
+    useful = model_flops / max(hlo_flops_global, 1.0)
+
+    bound_note = {
+        "compute_s": "scale sparsity/selective compute or raise per-chip "
+                     "utilization (bigger MXU tiles, fewer remat passes)",
+        "memory_s": "cut HBM traffic: fuse softmax/top-k, keep operands "
+                    "in VMEM longer, or quantize the bandwidth-bound side",
+        "collective_s": "reshard to shrink the gathered dim, overlap the "
+                        "collective behind per-layer compute, or move the "
+                        "axis with less traffic onto the slower links",
+    }[dominant]
+
+    out = {
+        "cell": f"{arch}__{shape_name}__pod1{tag_suffix}",
+        "arch": arch, "shape": shape_name,
+        "per_device": {"hlo_flops": flops, "hlo_bytes": byts,
+                       "collective_bytes": coll},
+        "terms_s": terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": useful,
+        "roofline_fraction": t_compute / max(max(terms.values()), 1e-30),
+        "note": bound_note,
+        "probe": {"unit_layers": unit, "n_units": n_units,
+                  "f1": f1, "f2": f2, "c1": c1, "c2": c2, "b1": b1, "b2": b2},
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{out['cell']}.json").write_text(json.dumps(out, indent=1))
+    if verbose:
+        print(f"[roofline] {out['cell']}: compute {t_compute*1e3:.2f}ms "
+              f"memory {t_memory*1e3:.2f}ms coll {t_coll*1e3:.2f}ms "
+              f"→ {out['dominant']}-bound, useful {useful:.2f}, "
+              f"roofline frac {out['roofline_fraction']:.2f}", flush=True)
+    return out
+
+
+def print_table():
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        rows.append(r)
+    print("| cell | compute (ms) | memory (ms) | collective (ms) | "
+          "bound | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        t = r["terms_s"]
+        print(f"| {r['cell']} | {t['compute_s']*1e3:.2f} | "
+              f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+              f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+              f"{r['roofline_fraction']:.2f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--table", action="store_true")
+    args = ap.parse_args()
+    if args.table:
+        print_table()
+        return
+    from repro.configs.archs import all_cells
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    fails = []
+    for arch, shape in cells:
+        tag = f"{arch}__{shape}__pod1"
+        if args.skip_done and (RESULTS / f"{tag}.json").exists():
+            print(f"[roofline] {tag}: cached", flush=True)
+            continue
+        try:
+            analyse_cell(arch, shape)
+        except Exception as e:
+            fails.append(tag)
+            print(f"[roofline] {tag}: FAIL {e}", flush=True)
+            traceback.print_exc()
+    if fails:
+        print(f"[roofline] failures: {fails}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

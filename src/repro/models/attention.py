@@ -1,0 +1,278 @@
+"""Attention — GQA with RoPE, qk-norm, and Top-K *selective token
+attention* (the SATA workload, KVT/TTST-style) as a first-class variant.
+
+Selective variant: per query, keep the top-``k`` key logits (threshold at
+the k-th value — identical softmax result as index masking), softmax in
+fp32 over the kept set.  Query-chunked so the (q, s) score tile never
+exceeds ``q_chunk × S`` — the TPU analogue of SATA's S_f tiling, and the
+granularity at which the Pallas block-sparse kernel skips empty tiles.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import ctx as dctx
+from repro.distributed.ctx import constrain_heads, constrain_scores
+from repro.models.layers import (Params, _dtype, apply_rope, dense_init,
+                                 rms_head_norm)
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_init(key, cfg, cross: bool = False) -> Params:
+    dt = _dtype(cfg)
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+         "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+         "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+         "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt)}
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((hd,), jnp.float32)
+        p["k_scale"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(params: Params, cfg, x: jax.Array,
+                 kv_src: Optional[jax.Array] = None):
+    b = x.shape[0]
+    hd = cfg.hd
+    src = x if kv_src is None else kv_src
+    q = (x @ params["wq"]).reshape(b, x.shape[1], cfg.n_heads, hd)
+    k = (src @ params["wk"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    v = (src @ params["wv"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, params["q_scale"])
+        k = rms_head_norm(k, params["k_scale"])
+    return q, k, v
+
+
+def kth_largest(scores: jax.Array, k: int) -> jax.Array:
+    """k-th largest value per row via HLO sort (NOT lax.top_k: TopK is a
+    custom call the SPMD partitioner cannot shard — it would all-gather
+    the full score tensor across the data axis)."""
+    from repro.models.layers import sort_ascending
+    srt = sort_ascending(scores)
+    return jax.lax.slice_in_dim(srt, scores.shape[-1] - k,
+                                scores.shape[-1] - k + 1, axis=-1)
+
+
+def kth_largest_bisect(scores: jax.Array, k: int, iters: int = 16
+                       ) -> jax.Array:
+    """Distributed-friendly top-k threshold: fixed-iteration bisection on
+    the score range, converging to the k-th largest value.
+
+    Every iteration is an elementwise compare + a tiny row reduction —
+    fully shardable along the key dim (a sequence-sharded KV cache needs
+    only (B,KV,G,1)-sized all-reduces per step instead of resharding the
+    whole score tensor for a sort).  Counting runs on a bf16 copy (half
+    the bandwidth of the dominant pass; selection boundaries are already
+    fuzzy at bf16 score precision) and 16 iterations resolve the
+    threshold to range/2^16.  Returns a threshold t with
+    count(scores >= t) >= k (ties may admit a few extra keys — the same
+    superset semantics as the sort threshold)."""
+    valid = scores > NEG_INF / 2
+    sc = jnp.where(valid, scores, jnp.inf)
+    lo = jnp.minimum(jnp.min(sc, axis=-1, keepdims=True), 0.0) - 1.0
+    hi = jnp.max(jnp.where(valid, scores, -jnp.inf), axis=-1, keepdims=True)
+    cnt_src = jnp.where(valid, scores, -jnp.inf).astype(jnp.bfloat16)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((cnt_src >= mid.astype(jnp.bfloat16))
+                      .astype(jnp.int32), axis=-1, keepdims=True)
+        take = cnt >= k                    # threshold lies at or above mid
+        return (jnp.where(take, mid, lo), jnp.where(take, hi, mid))
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    # Loop invariant: count(cnt_src >= bf16(lo)) >= k.  The caller must
+    # apply the mask with the SAME bf16 comparison or the invariant
+    # breaks (fp32 compare against a bf16-counted threshold undershoots).
+    return jax.lax.stop_gradient(lo)
+
+
+def topk_mask_bisect(scores: jax.Array, k: int) -> jax.Array:
+    """Boolean top-k mask via bisection, compare-consistent with the
+    bf16 counting pass (guarantees >= k selected per row)."""
+    lo = kth_largest_bisect(scores, k)
+    valid = scores > NEG_INF / 2
+    cnt_src = jnp.where(valid, scores, -jnp.inf).astype(jnp.bfloat16)
+    return cnt_src >= lo.astype(jnp.bfloat16)
+
+
+def topk_threshold_mask(scores: jax.Array, k: int,
+                        impl: str = "auto") -> jax.Array:
+    """Keep entries >= the k-th largest per row (== top-k up to ties).
+
+    The threshold is a discrete selection decision (zero tangent), so
+    gradients flow only through the kept logits — standard for trained
+    top-k attention, and it keeps sort out of the backward graph.
+
+    impl: "sort" (exact, O(S log S)), "bisect" (sharded/decode-friendly),
+    or "auto" (bisect for long rows)."""
+    n = scores.shape[-1]
+    if k >= n:
+        return jnp.ones_like(scores, dtype=bool)
+    if impl == "bisect" or (impl == "auto" and n >= 8192):
+        return topk_mask_bisect(scores, k)
+    return scores >= kth_largest(scores, k)
+
+
+def _attend(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
+            q_pos: jax.Array, k_pos: jax.Array,
+            valid_k: Optional[jax.Array] = None,
+            causal: bool = True) -> jax.Array:
+    """Grouped-query attention over one query chunk.
+
+    q: (B, Q, H, hd); k/v: (B, S, KV, hd); positions for masking.
+    Scores laid out (B, KV, G, Q, S) — no repeat-materialization of K.
+    """
+    b, nq, h, hd = q.shape
+    kv = cfg.n_kv_heads
+    g = h // kv
+    qg = q.reshape(b, nq, kv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / np.sqrt(hd))
+    scores = (dctx.constrain_cp_scores(scores) if dctx.cp_enabled()
+              else constrain_scores(scores))
+    mask = jnp.ones(scores.shape[-2:], dtype=bool)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if valid_k is not None:
+        mask = mask & valid_k[None, :]
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if cfg.attention_variant == "topk":
+        sel = topk_threshold_mask(scores, cfg.topk_k,
+                                  impl=getattr(cfg, "topk_impl", "auto"))
+        scores = jnp.where(sel, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    return out.reshape(b, nq, h, hd)
+
+
+def attention_apply(params: Params, cfg, x: jax.Array,
+                    positions: Optional[jax.Array] = None,
+                    kv_src: Optional[jax.Array] = None,
+                    causal: Optional[bool] = None,
+                    use_rope: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill), query-chunked.
+
+    ``kv_src`` switches to cross-attention (keys/values from the context
+    sequence; non-causal, no RoPE on context keys).
+    """
+    b, s, d = x.shape
+    cross = kv_src is not None
+    causal = (cfg.causal and not cross) if causal is None else causal
+    q, k, v = _project_qkv(params, cfg, x, kv_src)
+    s_kv = k.shape[1]
+    q_pos = jnp.arange(s) if positions is None else positions
+    k_pos = jnp.arange(s_kv)
+    if use_rope and not cross:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, k_pos, cfg.rope_theta)
+    if dctx.cp_enabled():
+        # context-parallel layout: q sequence-sharded, k/v replicated on
+        # "model" — scores/softmax/top-k become row-parallel.
+        k = dctx.constrain_cp_kv(k)
+        v = dctx.constrain_cp_kv(v)
+        if s <= 8192:
+            # short sequences: single chunk, q stays sequence-sharded
+            # (per-device scores are already 1/model-sized).
+            q = dctx.constrain_cp_q(q)
+            qc = s
+        else:
+            # long prefill: a single (S×S) f32 score tensor would not
+            # fit even sharded (32k: 17 GB/dev for deepseek).  Gather q
+            # batch-only, map over q chunks, and shard each chunk's
+            # score ROWS over "model" (constrain_cp_scores) — balanced
+            # across the model axis, ~1 GB/chunk transient.
+            q = dctx.constrain_cp_kv(q)
+            qc = min(cfg.q_chunk, s)
+    else:
+        q = constrain_heads(q)
+        k = constrain_heads(k)
+        v = constrain_heads(v)
+        qc = min(cfg.q_chunk, s)
+    if s % qc != 0:
+        qc = s                                       # fallback: single chunk
+    n_chunks = s // qc
+
+    if n_chunks == 1:
+        out = _attend(q, k, v, cfg, q_pos, k_pos, causal=causal)
+    else:
+        qs = q.reshape(b, n_chunks, qc, cfg.n_heads, cfg.hd)
+        ps = q_pos.reshape(n_chunks, qc)
+
+        def chunk(i):
+            return _attend(qs[:, i], k, v, cfg, ps[i], k_pos, causal=causal)
+
+        out = jax.lax.map(chunk, jnp.arange(n_chunks))   # (C, B, qc, H, hd)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, cfg.n_heads, cfg.hd)
+    return out.reshape(b, s, cfg.n_heads * cfg.hd) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+    hd = cfg.hd
+    return {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype)}
+
+
+def attention_decode(params: Params, cfg, x: jax.Array, cache: Dict,
+                     pos: jax.Array, use_rope: bool = True
+                     ) -> Tuple[jax.Array, Dict]:
+    """One-token decode: update cache at ``pos``, attend over the prefix.
+
+    x: (B, 1, D); cache k/v: (B, S_max, KV, hd); pos: scalar int32.
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, cfg, x)
+    if use_rope:
+        posv = jnp.full((1,), pos, dtype=jnp.int32)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k_new = apply_rope(k_new, posv, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                            k_new.astype(cache["k"].dtype),
+                                            pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                            v_new.astype(cache["v"].dtype),
+                                            pos, axis=1)
+    s_max = k.shape[1]
+    k_pos = jnp.arange(s_max)
+    valid = k_pos <= pos
+    out = _attend(q, k, v, cfg, jnp.full((1,), pos), k_pos,
+                  valid_k=valid, causal=False)
+    y = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ params["wo"]
+    return y, {"k": k, "v": v}
+
+
+def cross_attention_decode(params: Params, cfg, x: jax.Array,
+                           context_kv: Dict) -> jax.Array:
+    """Decode-time cross-attention over precomputed context K/V."""
+    b = x.shape[0]
+    q = (x @ params["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, params["q_scale"])
+    k, v = context_kv["k"], context_kv["v"]
+    out = _attend(q, k, v, cfg, jnp.zeros((1,), jnp.int32),
+                  jnp.arange(k.shape[1]), causal=False)
+    return out.reshape(b, 1, cfg.n_heads * cfg.hd) @ params["wo"]
+
+
+def precompute_cross_kv(params: Params, cfg, context: jax.Array) -> Dict:
+    b, s, _ = context.shape
+    k = (context @ params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = (context @ params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        k = rms_head_norm(k, params["k_scale"])
+    return {"k": k, "v": v}

@@ -1,0 +1,125 @@
+"""Model configuration — one frozen dataclass covers all assigned archs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | vlm | hybrid | audio | moe | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None            # default d_model // n_heads
+
+    # --- attention / SATA ---
+    attention_variant: str = "topk"           # "dense" | "topk" (SATA workload)
+    topk_k: int = 64                          # selected keys per query
+    topk_impl: str = "auto"                   # sort | bisect | auto
+    topk_blocks: int = 0                      # >0: block-topk granularity
+    sata_s_f: int = 128                       # SATA tile size (kernel plan)
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    q_chunk: int = 1024                       # query-chunked attention
+
+    # --- norms / mlp ---
+    norm_type: str = "rmsnorm"                # rmsnorm | layernorm | nonparam_ln
+    mlp_variant: str = "swiglu"               # swiglu | gelu
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    moe: bool = False
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_group_size: int = 128                 # GShard dispatch group
+    capacity_factor: float = 1.25
+    expert_shard: str = "expert"              # expert→model | tensor→model
+
+    # --- SSM / hybrid (zamba2) ---
+    ssm: bool = False                         # Mamba2 (SSD) backbone layers
+    ssm_state: int = 64
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    hybrid_period: int = 0                    # shared attn block every k layers
+
+    # --- RWKV6 ---
+    rwkv: bool = False
+    rwkv_head_dim: int = 64
+
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_len: int = 1500                   # precomputed frame embeddings
+
+    # --- VLM (llama-3.2-vision) ---
+    cross_attn_period: int = 0                # cross-attn every k-th layer
+    n_image_tokens: int = 0
+
+    # --- numerics / memory ---
+    dtype: str = "bfloat16"
+    remat: str = "full"                       # none | dots | full
+    scan_layers: bool = True
+    micro_steps: int = 1                      # grad-accumulation microbatches
+    rwkv_chunk: int = 256                     # time-scan remat chunk
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:                 # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Total parameters N (for MODEL_FLOPS = 6·N·D roofline term)."""
+        d, hd = self.d_model, self.hd
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.rwkv:
+            att = d * (4 * d) + d * d            # r,k,v,g (+w lora-ish) + out
+            ffn = 2 * d * self.d_ff + self.d_ff * d
+            per_layer = att + ffn
+            return emb + self.n_layers * per_layer
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d
+        if self.moe:
+            ffn = self.n_experts * (3 * d * self.d_ff) + d * self.n_experts
+        else:
+            ffn = 3 * d * self.d_ff if self.mlp_variant == "swiglu" \
+                else 2 * d * self.d_ff
+        if self.ssm:
+            # mamba2 block: in_proj (z,x,B,C,dt) + conv + out_proj
+            di, ns = self.d_inner, self.ssm_state
+            proj_in = d * (2 * di + 2 * ns * 1 + self.ssm_heads)
+            mamba = proj_in + di * self.ssm_conv + di * d
+            n_attn = (self.n_layers // self.hybrid_period
+                      if self.hybrid_period else 0)
+            return (emb + self.n_layers * (mamba + ffn // 1)
+                    + (attn + 3 * d * self.d_ff) * (1 if n_attn else 0))
+        n_cross = (self.n_layers // self.cross_attn_period
+                   if self.cross_attn_period else 0)
+        total = emb + self.n_layers * (attn + ffn) + n_cross * attn
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + ffn) \
+                + self.n_layers * attn               # decoder cross-attn
+        return total
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed experts)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        dense_ffn = self.n_experts * (3 * d * self.d_ff)
+        active_ffn = self.experts_per_token * (3 * d * self.d_ff)
+        return self.param_count() - self.n_layers * (dense_ffn - active_ffn)

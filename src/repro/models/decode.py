@@ -1,0 +1,204 @@
+"""Serving path: per-family cache init + single-token decode step.
+
+``serve_step`` consumes one new token against a KV cache of length
+``max_len`` (the decode_* / long_* dry-run shapes).  Caches are stacked
+(L, ...) and scanned alongside the layer params so the HLO stays small
+for deep models.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models import attention as attn
+from repro.models import mamba2, moe, rwkv6
+from repro.models.config import ModelConfig
+from repro.models.layers import (_dtype, apply_norm, embed_apply,
+                                 mlp_apply, unembed_apply)
+from repro.models.model import Params, _decoder_block_apply, maybe_scan
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Stacked (L, ...) caches per family."""
+    dt = _dtype(cfg)
+
+    def stack(n, make):
+        one = make()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    if cfg.family in ("dense", "moe"):
+        return {"kv": stack(cfg.n_layers,
+                            lambda: attn.init_kv_cache(cfg, batch, max_len, dt))}
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_period
+        n_self = cfg.n_layers - n_cross
+        kv = stack(n_self, lambda: attn.init_kv_cache(cfg, batch, max_len, dt))
+        kv = jax.tree.map(
+            lambda a: a.reshape((n_cross, n_self // n_cross) + a.shape[1:]), kv)
+        return {"kv": kv,
+                "cross_kv": stack(n_cross, lambda: {
+                    "k": jnp.zeros((batch, cfg.n_image_tokens,
+                                    cfg.n_kv_heads, cfg.hd), dt),
+                    "v": jnp.zeros((batch, cfg.n_image_tokens,
+                                    cfg.n_kv_heads, cfg.hd), dt)})}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.hybrid_period
+        # one KV cache PER shared-block application: the weights are
+        # shared, the attention histories are not.
+        return {"mamba": stack(cfg.n_layers,
+                               lambda: mamba2.init_mamba_cache(cfg, batch, dt)),
+                "shared_kv": stack(n_groups,
+                                   lambda: attn.init_kv_cache(
+                                       cfg, batch, max_len, dt))}
+    if cfg.family == "audio":
+        return {"kv": stack(cfg.n_layers,
+                            lambda: attn.init_kv_cache(cfg, batch, max_len, dt)),
+                "cross_kv": stack(cfg.n_layers, lambda: {
+                    "k": jnp.zeros((batch, cfg.encoder_len,
+                                    cfg.n_kv_heads, cfg.hd), dt),
+                    "v": jnp.zeros((batch, cfg.encoder_len,
+                                    cfg.n_kv_heads, cfg.hd), dt)})}
+    if cfg.family == "ssm":
+        return {"rwkv": stack(cfg.n_layers,
+                              lambda: rwkv6.init_rwkv_cache(cfg, batch, dt))}
+    raise ValueError(cfg.family)
+
+
+def prefill_context(params: Params, cfg: ModelConfig, cache: Dict,
+                    batch: Dict[str, jax.Array]) -> Dict:
+    """Populate cross-attention K/V from the modality context
+    (image embeds for vlm; encoder output for audio)."""
+    if cfg.family == "vlm":
+        ctx = batch["image_embeds"].astype(_dtype(cfg))
+        cross_kv = jax.vmap(
+            lambda p: attn.precompute_cross_kv(p["attn"], cfg, ctx))(
+            params["cross_layers"])
+        return {**cache, "cross_kv": cross_kv}
+    if cfg.family == "audio":
+        from repro.models.model import _run_encoder
+        enc = _run_encoder(params, cfg, batch["audio_embeds"].astype(_dtype(cfg)))
+        cross_kv = jax.vmap(
+            lambda p: attn.precompute_cross_kv(p["attn_cross"], cfg, enc))(
+            params["layers"])
+        return {**cache, "cross_kv": cross_kv}
+    return cache
+
+
+def _dec_mlp(p, cfg, x):
+    h = apply_norm(p["ln2"], cfg, x)
+    if cfg.moe:
+        y, _ = moe.moe_apply(p["moe"], cfg, h)
+        return x + y
+    return x + mlp_apply(p["mlp"], cfg, h)
+
+
+def serve_step(params: Params, cfg: ModelConfig, cache: Dict,
+               tokens: jax.Array, pos: jax.Array
+               ) -> Tuple[jax.Array, Dict]:
+    """tokens: (B, 1) current token ids; pos: scalar position.
+    → (logits (B, 1, V) fp32, updated cache)."""
+    x = constrain(embed_apply(params["embed"], tokens).astype(_dtype(cfg)),
+                  "act")
+
+    if cfg.family in ("dense", "moe"):
+        def body(h, inp):
+            p, kv = inp
+            hn = apply_norm(p["ln1"], cfg, h)
+            y, kv = attn.attention_decode(p["attn"], cfg, hn, kv, pos)
+            h = _dec_mlp(p, cfg, h + y)
+            return h, kv
+        x, new_kv = maybe_scan(cfg, body, x, (params["layers"], cache["kv"]))
+        cache = {**cache, "kv": new_kv}
+
+    elif cfg.family == "vlm":
+        def outer(h, inp):
+            self_group, cross_p, kv_group, cross_kv = inp
+
+            def inner(hh, inp2):
+                p, kv = inp2
+                hn = apply_norm(p["ln1"], cfg, hh)
+                y, kv = attn.attention_decode(p["attn"], cfg, hn, kv, pos)
+                hh = _dec_mlp(p, cfg, hh + y)
+                return hh, kv
+            h, kv_group = jax.lax.scan(inner, h, (self_group, kv_group))
+            hn = apply_norm(cross_p["ln1"], cfg, h)
+            y = attn.cross_attention_decode(cross_p["attn"], cfg, hn, cross_kv)
+            h = h + jnp.tanh(cross_p["gate"]).astype(h.dtype) * y
+            hn = apply_norm(cross_p["ln2"], cfg, h)
+            h = h + jnp.tanh(cross_p["gate_mlp"]).astype(h.dtype) * \
+                mlp_apply(cross_p["mlp"], cfg, hn)
+            return h, kv_group
+        x, new_kv = maybe_scan(
+            cfg, outer, x, (params["layers"], params["cross_layers"],
+                            cache["kv"], cache["cross_kv"]))
+        cache = {**cache, "kv": new_kv}
+
+    elif cfg.family == "hybrid":
+        x0 = x          # current token's embedding (matches forward's
+                        # per-position concat with the embedding stream)
+        period = cfg.hybrid_period
+        n_groups = cfg.n_layers // period
+        grouped_p = jax.tree.map(
+            lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+            params["layers"])
+        grouped_c = jax.tree.map(
+            lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+            cache["mamba"])
+
+        def outer(h, inp):
+            p_group, c_group, skv = inp
+
+            def inner(hh, inp2):
+                p, c = inp2
+                y, c = mamba2.mamba2_decode(
+                    p["mixer"], cfg, apply_norm(p["ln"], cfg, hh), c)
+                return hh + y, c
+            h, c_group = jax.lax.scan(inner, h, (p_group, c_group))
+            cat = jnp.concatenate([h, x0], axis=-1) @ params["shared_in"]
+            sp = params["shared_attn"]
+            hn = apply_norm(sp["ln1"], cfg, cat)
+            y, skv = attn.attention_decode(sp["attn"], cfg, hn, skv, pos)
+            cat2 = _dec_mlp(sp, cfg, cat + y)
+            return h + (cat2 - cat), (c_group, skv)
+
+        x, (new_mamba, shared_kv) = maybe_scan(
+            cfg, outer, x, (grouped_p, grouped_c, cache["shared_kv"]))
+        new_mamba = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_mamba)
+        cache = {**cache, "mamba": new_mamba, "shared_kv": shared_kv}
+
+    elif cfg.family == "audio":
+        def body(h, inp):
+            p, kv, ckv = inp
+            hn = apply_norm(p["ln1"], cfg, h)
+            y, kv = attn.attention_decode(p["attn"], cfg, hn, kv, pos)
+            h = h + y
+            hn = apply_norm(p["lnx"], cfg, h)
+            h = h + attn.cross_attention_decode(p["attn_cross"], cfg, hn, ckv)
+            hn = apply_norm(p["ln2"], cfg, h)
+            h = h + mlp_apply(p["mlp"], cfg, hn)
+            return h, kv
+        x, new_kv = maybe_scan(
+            cfg, body, x, (params["layers"], cache["kv"], cache["cross_kv"]))
+        cache = {**cache, "kv": new_kv}
+
+    elif cfg.family == "ssm":
+        def body(h, inp):
+            p, c = inp
+            hn = apply_norm(p["ln1"], cfg, h)
+            y, st, tm_x = rwkv6.rwkv6_time_mix(
+                p["tmix"], cfg, hn, state=c["state"], last_x=c["tm_x"])
+            h = h + y
+            hn = apply_norm(p["ln2"], cfg, h)
+            y, cm_x = rwkv6.rwkv6_channel_mix(p["tmix"], cfg, hn,
+                                              last_x=c["cm_x"])
+            return h + y, {"state": st, "tm_x": tm_x, "cm_x": cm_x}
+        x, new_c = maybe_scan(cfg, body, x, (params["layers"], cache["rwkv"]))
+        cache = {**cache, "rwkv": new_c}
+
+    x = apply_norm(params["final_ln"], cfg, x)
+    logits = constrain(unembed_apply(params["embed"], cfg, x), "logits")
+    return logits, cache

@@ -1,0 +1,172 @@
+"""Shared neural layers — pure-functional JAX (params = nested dicts)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """bf16 matmul with fp32 accumulation (MXU semantics)."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Non-differentiable sorts (top-k selection primitives).
+# lax.sort's JVP rule builds batched gathers that (a) this jax build
+# mis-handles under lax.map and (b) are pointless for discrete selection.
+# custom_jvp with zero tangents keeps sort out of the AD graph entirely;
+# lax.top_k is avoided because its TopK custom-call cannot be partitioned
+# by GSPMD (it would all-gather the operand across the mesh).
+# ---------------------------------------------------------------------------
+
+@jax.custom_jvp
+def sort_ascending(x: jax.Array) -> jax.Array:
+    return jax.lax.sort(x, dimension=-1)
+
+
+@sort_ascending.defjvp
+def _sort_ascending_jvp(primals, tangents):
+    out = sort_ascending(primals[0])
+    return out, jnp.zeros_like(out)
+
+
+@jax.custom_jvp
+def _argsort_desc_f32(x: jax.Array) -> jax.Array:
+    iota = jnp.broadcast_to(
+        jnp.arange(x.shape[-1], dtype=jnp.int32), x.shape)
+    _, si = jax.lax.sort((x, iota), dimension=-1, num_keys=1)
+    return jnp.flip(si, axis=-1).astype(jnp.float32)
+
+
+@_argsort_desc_f32.defjvp
+def _argsort_desc_jvp(primals, tangents):
+    out = _argsort_desc_f32(primals[0])
+    return out, jnp.zeros_like(out)
+
+
+def argsort_descending(x: jax.Array) -> jax.Array:
+    """Indices sorting the last dim in descending order; no gradient."""
+    return _argsort_desc_f32(x).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg, d: int) -> Params:
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "nonparam_ln":       # OLMo: no learnable params
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(params: Params, cfg, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf / rms * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if cfg.norm_type == "layernorm":
+            out = out * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS norm over head_dim (Qwen3 qk-norm)."""
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf / rms * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]                             # broadcast heads
+    cos = cos[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, d: int, d_ff: int) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_variant == "swiglu":
+        return {"wi": dense_init(ks[0], d, d_ff, dt),
+                "wg": dense_init(ks[1], d, d_ff, dt),
+                "wo": dense_init(ks[2], d_ff, d, dt)}
+    return {"wi": dense_init(ks[0], d, d_ff, dt),
+            "wo": dense_init(ks[2], d_ff, d, dt)}
+
+
+def mlp_apply(params: Params, cfg, x: jax.Array) -> jax.Array:
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(matmul(x, params["wg"])) * matmul(x, params["wi"])
+    else:
+        h = jax.nn.gelu(matmul(x, params["wi"]))
+    return matmul(h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg) -> Params:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": dense_init(k1, cfg.vocab_size, cfg.d_model, dt, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dt)
+    return p
+
+
+def embed_apply(params: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed_apply(params: Params, cfg, x: jax.Array) -> jax.Array:
+    w = params.get("unembed")
+    if w is None:
+        w = params["embedding"].T
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # logits stay fp32

@@ -1,0 +1,161 @@
+"""Mamba2 (SSD) block — chunked matmul form (MXU-friendly) + O(1) decode.
+
+Implements the state-space duality algorithm: within a chunk the output
+is a masked (decay-weighted) attention-like matmul; across chunks a
+small recurrent state (B, H, N, P) is carried by ``lax.scan``.  This is
+the standard TPU-native formulation (quadratic only within the chunk).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, _dtype, dense_init
+
+
+def mamba2_init(key, cfg) -> Params:
+    dt = _dtype(cfg)
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    conv_dim = di + 2 * n
+    return {
+        # in_proj → [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dt),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return y / rms * scale
+
+
+def mamba2_apply(params: Params, cfg, x: jax.Array) -> jax.Array:
+    """Training/prefill forward. x: (B, S, D)."""
+    b, s, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s)
+    if s % q != 0:
+        q = s
+    nc = s // q
+
+    z, xbc, dt_raw = _split_proj(cfg, x @ params["in_proj"])
+    xbc = _causal_conv(xbc, params["conv_w"])
+    xs = xbc[..., :di].reshape(b, s, h, p).astype(jnp.float32)
+    bmat = xbc[..., di:di + n].astype(jnp.float32)            # (B,S,N)
+    cmat = xbc[..., di + n:].astype(jnp.float32)              # (B,S,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                 # (B,S,H)
+    a = -jnp.exp(params["a_log"])                             # (H,) negative
+    log_decay = dt * a                                        # (B,S,H) ≤ 0
+
+    # chunk views
+    xs_c = xs.reshape(b, nc, q, h, p)
+    b_c = bmat.reshape(b, nc, q, n)
+    c_c = cmat.reshape(b, nc, q, n)
+    dt_c = dt.reshape(b, nc, q, h)
+    ld_c = log_decay.reshape(b, nc, q, h)
+    lcum = jnp.cumsum(ld_c, axis=2)                           # (B,C,Q,H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    # decay(i,j) = exp(lcum_i - lcum_j) for i >= j
+    dec = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]     # (B,C,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    dec = jnp.where(causal[None, None, :, :, None], dec, -jnp.inf)
+    gij = jnp.exp(dec)                                        # (B,C,Qi,Qj,H)
+    cb = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)              # (B,C,Qi,Qj)
+    w_ij = cb[..., None] * gij * dt_c[:, :, None, :, :]       # ×dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij, xs_c)
+
+    # ---- chunk states and inter-chunk scan ----
+    # state contribution of chunk: S_c = Σ_j exp(lQ - l_j)·dt_j·B_j ⊗ x_j
+    tail = jnp.exp(lcum[:, :, -1:, :] - lcum)                 # (B,C,Q,H)
+    sc = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                    tail * dt_c, b_c, xs_c)                   # (B,C,H,N,P)
+    chunk_decay = jnp.exp(lcum[:, :, -1, :])                  # (B,C,H)
+
+    def scan_fn(hstate, inp):
+        sc_t, cd_t = inp                                      # (B,H,N,P),(B,H)
+        out = hstate                                          # state BEFORE chunk
+        hstate = hstate * cd_t[..., None, None] + sc_t
+        return hstate, out
+
+    sc_t = jnp.moveaxis(sc, 1, 0)                             # (C,B,H,N,P)
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)                    # (C,B,H)
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, h_prev = jax.lax.scan(scan_fn, h0, (sc_t, cd_t))       # (C,B,H,N,P)
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                       # (B,C,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bchnp->bcihp",
+                         c_c, h_prev) * jnp.exp(lcum)[..., None]
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + params["d_skip"][None, None, :, None] * xs
+    y = y.reshape(b, s, di)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    return y.astype(x.dtype) @ params["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent, O(1) per token)
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv_dim = di + 2 * n
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_head_dim),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(params: Params, cfg, x: jax.Array, cache: Dict
+                  ) -> Tuple[jax.Array, Dict]:
+    """One-token recurrent step. x: (B, 1, D)."""
+    b = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(cfg, x @ params["in_proj"])
+    hist = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)],
+                           axis=1)                            # (B, K, C)
+    w = params["conv_w"]
+    conv_out = jax.nn.silu((hist * w[None]).sum(axis=1, keepdims=True))
+    new_conv = hist[:, 1:]
+    xs = conv_out[..., :di].reshape(b, h, p).astype(jnp.float32)
+    bvec = conv_out[:, 0, di:di + n].astype(jnp.float32)
+    cvec = conv_out[:, 0, di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    decay = jnp.exp(dt * (-jnp.exp(params["a_log"])))         # (B,H)
+    state = cache["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bvec, xs)
+    y = jnp.einsum("bn,bhnp->bhp", cvec, state)
+    y = y + params["d_skip"][None, :, None] * xs
+    y = _gated_rmsnorm(y.reshape(b, 1, di), z, params["norm_scale"])
+    out = y.astype(x.dtype) @ params["out_proj"]
+    return out, {"ssm": state, "conv": new_conv}

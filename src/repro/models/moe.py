@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN — GShard-style grouped dense dispatch.
+
+Token-choice top-k routing with per-group expert capacity: tokens are
+blocked into groups of ``moe_group_size``; inside a group each expert
+accepts at most ``C = ceil(group·top_k/E · capacity_factor)`` tokens
+(position-in-expert via cumulative sum; overflow drops, standard GShard).
+Dispatch/combine are one-hot einsums — fully static shapes, shardable
+with groups→data and experts→model (``expert_shard="expert"``) or
+experts replicated + d_ff→model (``expert_shard="tensor"``, for archs
+whose expert count is smaller than the model axis, e.g. grok-1's 8).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models.layers import Params, _dtype, dense_init
+
+
+def moe_init(key, cfg) -> Params:
+    dt = _dtype(cfg)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+
+    def experts(k, d_in, d_out):
+        return (jax.random.normal(k, (e, d_in, d_out), jnp.float32)
+                * (1.0 / math.sqrt(d_in))).astype(dt)
+
+    return {"router": dense_init(ks[0], d, e, jnp.float32, scale=scale),
+            "wi": experts(ks[1], d, f),
+            "wg": experts(ks[2], d, f),
+            "wo": experts(ks[3], f, d)}
+
+
+def _capacity(cfg, group: int) -> int:
+    return max(1, int(math.ceil(group * cfg.experts_per_token
+                                / cfg.n_experts * cfg.capacity_factor)))
+
+
+def moe_apply(params: Params, cfg, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    gsz = min(cfg.moe_group_size, b * s)
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    n_groups = t // gsz
+    tokens = tokens.reshape(n_groups, gsz, d)
+    # pin the group dim to the data axes: flattening (batch × seq) mixes
+    # two sharded dims and GSPMD may otherwise replicate the dispatch
+    # einsum's operands (60 GiB/dev for grok on the multi-pod mesh).
+    tokens = constrain(tokens, "moe_tokens")
+    cap = _capacity(cfg, gsz)
+
+    logits = jnp.einsum("gtd,de->gte", tokens.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, T, E)
+
+    # --- top-k token-choice routing (sort-based: lax.top_k is a custom
+    # call the SPMD partitioner replicates; variadic HLO sort shards).
+    # Indices are discrete (zero tangent); gates re-gathered from probs
+    # so the router still trains through the gate values. ---
+    from repro.models.layers import argsort_descending
+    expert_ids = argsort_descending(probs)[..., :k]          # (G, T, k)
+    gate_vals = jnp.take_along_axis(probs, expert_ids, axis=-1)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True),
+                                     1e-9)                   # renormalize
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.float32)  # (G,T,k,E)
+
+    # position-in-expert: cumsum over (token, k-slot) order
+    flat = onehot.reshape(n_groups, gsz * k, e)
+    pie = (jnp.cumsum(flat, axis=1) - flat).reshape(n_groups, gsz, k, e)
+    keep = (pie < cap) & (onehot > 0)
+    pie = jnp.where(keep, pie, 0.0)
+    slot = jax.nn.one_hot(pie.astype(jnp.int32), cap, dtype=jnp.float32)
+    slot = slot * keep[..., None].astype(jnp.float32)        # (G,T,k,E,C)
+
+    dispatch = constrain((onehot[..., None] * slot).sum(axis=2),
+                         "moe_dispatch")                     # (G,T,E,C)
+    combine = constrain((gate_vals[..., None, None] * onehot[..., None]
+                         * slot).sum(axis=2), "moe_dispatch")  # (G,T,E,C)
+
+    xin = jnp.einsum("gtd,gtec->gecd", tokens,
+                     dispatch.astype(x.dtype))               # (G,E,C,D)
+    xin = constrain(xin, "moe_expert_in")
+    h = jnp.einsum("gecd,edf->gecf", xin, params["wi"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    hg = jnp.einsum("gecd,edf->gecf", xin, params["wg"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    h = constrain(jax.nn.silu(hg) * h, "moe_expert_h")
+    out = jnp.einsum("gecf,efd->gecd", h, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    y = jnp.einsum("gecd,gtec->gtd", out, combine.astype(x.dtype))
+
+    # Switch-style load-balancing loss
+    density = onehot.sum(axis=2).mean(axis=1)                # (G, E) tokens frac
+    router_mean = probs.mean(axis=1)                         # (G, E)
+    aux = (density * router_mean).sum(axis=-1).mean() * (e ** 2) / k
+
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

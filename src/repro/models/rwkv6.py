@@ -1,0 +1,165 @@
+"""RWKV6 "Finch" block — data-dependent decay linear recurrence.
+
+Attention-free: per head a (hd × hd) state carries the kᵀv outer-product
+history with a *data-dependent* per-channel decay w_t (the Finch
+contribution).  Training/prefill runs a time scan; decode is a single
+O(1) state update.  SATA is inapplicable here (no QK selection mask) —
+see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, _dtype, dense_init
+
+
+def rwkv6_init(key, cfg) -> Params:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 10)
+    lora = max(32, d // 64)
+    return {
+        # time-mix
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "wr": dense_init(ks[0], d, d, dt),
+        "wk": dense_init(ks[1], d, d, dt),
+        "wv": dense_init(ks[2], d, d, dt),
+        "wg": dense_init(ks[3], d, d, dt),
+        "wo": dense_init(ks[4], d, d, dt),
+        # Finch data-dependent decay (LoRA form)
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wa": dense_init(ks[5], d, lora, dt),
+        "wb": dense_init(ks[6], lora, d, dt),
+        "bonus_u": jnp.zeros((h, hd), jnp.float32),
+        "ln_scale": jnp.ones((d,), jnp.float32),
+        # channel-mix
+        "cmix_k": jnp.full((d,), 0.5, jnp.float32),
+        "cmix_r": jnp.full((d,), 0.5, jnp.float32),
+        "ck": dense_init(ks[7], d, cfg.d_ff, dt),
+        "cv": dense_init(ks[8], cfg.d_ff, d, dt),
+        "cr": dense_init(ks[9], d, d, dt),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array = None) -> jax.Array:
+    """Token shift: previous token's features (zeros / cache at t=0)."""
+    if last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = last[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, ratio):
+    # keep the block in the activation dtype (f32 ratios must not
+    # promote the residual stream — scan carries are dtype-strict)
+    return (x * ratio + xs * (1.0 - ratio)).astype(x.dtype)
+
+
+def _decay(params, xw):
+    """Finch decay: w = exp(-exp(w0 + tanh(x·A)·B)) ∈ (0, 1)."""
+    lora = jnp.tanh(xw @ params["wa"]) @ params["wb"]
+    return jnp.exp(-jnp.exp(params["w0"] + lora.astype(jnp.float32)))
+
+
+def _group_norm(x, scale, hd, eps=1e-5):
+    b, s, d = x.shape
+    xg = x.reshape(b, s, d // hd, hd).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = ((xg - mu) ** 2).mean(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, s, d) * scale)
+
+
+def rwkv6_time_mix(params: Params, cfg, x: jax.Array,
+                   state: jax.Array = None, last_x: jax.Array = None
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,S,D) → (out, final_state, final_x).  state: (B,H,hd,hd)."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xs = _shift(x, last_x)
+    r = _mix(x, xs, params["mix_r"]) @ params["wr"]
+    k = _mix(x, xs, params["mix_k"]) @ params["wk"]
+    v = _mix(x, xs, params["mix_v"]) @ params["wv"]
+    g = _mix(x, xs, params["mix_g"]) @ params["wg"]
+    w = _decay(params, _mix(x, xs, params["mix_w"]))          # (B,S,D)
+
+    rh = r.reshape(b, s, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hd).astype(jnp.float32)
+    wh = w.reshape(b, s, h, hd)
+
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(st, inp):
+        r_t, k_t, v_t, w_t = inp                              # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         st + params["bonus_u"][..., None] * kv)
+        st = st * w_t[..., None] + kv
+        return st, out
+
+    seq = (jnp.moveaxis(rh, 1, 0), jnp.moveaxis(kh, 1, 0),
+           jnp.moveaxis(vh, 1, 0), jnp.moveaxis(wh, 1, 0))
+
+    # Chunked time scan: an unchunked backward would checkpoint the
+    # (B,H,hd,hd) state at *every* timestep (tens of GB at 4k+ seq).
+    # Outer scan saves the state once per chunk; the inner scan replays
+    # under jax.checkpoint.
+    chunk = getattr(cfg, "rwkv_chunk", 256)
+    if s > chunk and s % chunk == 0:
+        seq_c = jax.tree.map(
+            lambda a: a.reshape((s // chunk, chunk) + a.shape[1:]), seq)
+
+        @jax.checkpoint
+        def chunk_step(st, inp_chunk):
+            return jax.lax.scan(step, st, inp_chunk)
+
+        state, outs = jax.lax.scan(chunk_step, state, seq_c)
+        outs = outs.reshape((s,) + outs.shape[2:])
+    else:
+        state, outs = jax.lax.scan(step, state, seq)          # (S,B,H,hd)
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)
+    y = _group_norm(y, params["ln_scale"], hd)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["wo"], state, x[:, -1, :]
+
+
+def rwkv6_channel_mix(params: Params, cfg, x: jax.Array,
+                      last_x: jax.Array = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    xs = _shift(x, last_x)
+    k = _mix(x, xs, params["cmix_k"]) @ params["ck"]
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid((_mix(x, xs, params["cmix_r"]) @ params["cr"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    return r * (k @ params["cv"]), x[:, -1, :]
+
+
+def init_rwkv_cache(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    return {"state": jnp.zeros((batch, d // hd, hd, hd), jnp.float32),
+            "tm_x": jnp.zeros((batch, d), dtype),
+            "cm_x": jnp.zeros((batch, d), dtype)}
+
+
+def rwkv6_decode(params: Params, cfg, x: jax.Array, cache: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    """One-token step (B,1,D) reusing the scan path with S=1."""
+    y, state, tm_x = rwkv6_time_mix(params, cfg, x,
+                                    state=cache["state"],
+                                    last_x=cache["tm_x"])
+    return y, {"state": state, "tm_x": tm_x, "cm_x": cache["cm_x"]}

@@ -1,0 +1,83 @@
+"""Training/serving step builders (pjit-ready pure functions)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as dec
+from repro.models import model as mdl
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig,
+                    micro_steps: int = 1):
+    """→ train_step(state, batch) -> (state, metrics).
+
+    ``micro_steps > 1`` scans gradient-accumulation microbatches; XLA
+    overlaps each microbatch's gradient reduce-scatter with the next
+    microbatch's compute (the standard comm/compute-overlap trick).
+    """
+    grad_fn = jax.value_and_grad(
+        lambda p, b: mdl.loss_fn(p, cfg, b), has_aux=True)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        params = state["params"]
+        if micro_steps == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((micro_steps, x.shape[0] // micro_steps)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                (loss_a, grads_a) = carry
+                (l, _), g = grad_fn(params, mb)
+                return (loss_a + l, jax.tree.map(jnp.add, grads_a, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), zeros), micro)
+            loss = loss / micro_steps
+            grads = jax.tree.map(lambda g: g / micro_steps, grads)
+            parts = {"nll": loss, "aux": jnp.zeros(())}
+
+        err = state.get("err")
+        new_params, opt_state, err, om = adamw_update(
+            opt, params, grads, state["opt"], err)
+        new_state = {"params": new_params, "opt": opt_state}
+        if err is not None:
+            new_state["err"] = err
+        metrics = {"loss": loss, **parts, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Forward-only (inference-prefill shapes): logits for a full batch."""
+    def prefill_step(params, batch):
+        logits, _ = mdl.forward(params, cfg, batch)
+        # return last-position logits only (what serving samples from)
+        return logits[:, -1, :]
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One-token decode against a KV cache (decode_*/long_* shapes)."""
+    def serve_step(params, cache, tokens, pos):
+        return dec.serve_step(params, cfg, cache, tokens, pos)
+    return serve_step
+
+
+def init_train_state(key, cfg: ModelConfig, opt: OptConfig) -> Dict[str, Any]:
+    from repro.optim.adamw import init_opt_state
+    params = mdl.init_params(key, cfg)
+    state = {"params": params, "opt": init_opt_state(params)}
+    if opt.compress_grads:
+        state["err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state

@@ -1,0 +1,113 @@
+"""Algo-1 unit + property tests: sorting equivalence, classification
+invariants, GLOB-escape loop."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sorting import (HeadType, QType, classify_queries,
+                                classify_with_escape, locality_score,
+                                sort_and_classify, sort_keys_direct,
+                                sort_keys_jax, sort_keys_psum)
+
+
+def random_mask(rng, n_q, n_k, k):
+    m = np.zeros((n_q, n_k), dtype=bool)
+    for i in range(n_q):
+        m[i, rng.choice(n_k, size=k, replace=False)] = True
+    return m
+
+
+@pytest.mark.parametrize("n,k,seed", [(8, 3, 0), (24, 8, 1), (48, 12, 2),
+                                      (30, 15, 3), (17, 5, 4)])
+def test_psum_equals_direct(n, k, seed):
+    """Eq. 2 telescopes to Eq. 1: the hardware Psum sorter and the
+    textbook dummy-vector sorter produce the identical key order."""
+    rng = np.random.default_rng(seed)
+    m = random_mask(rng, n, n, k)
+    assert np.array_equal(sort_keys_direct(m, seed), sort_keys_psum(m, seed))
+
+
+@pytest.mark.parametrize("n,k", [(16, 5), (24, 8)])
+def test_jax_sorter_matches_host(n, k):
+    rng = np.random.default_rng(0)
+    m = random_mask(rng, n, n, k)
+    got = np.asarray(sort_keys_jax(m[None]))[0]
+    assert np.array_equal(got, sort_keys_psum(m, 0))
+
+
+def test_sorter_output_is_permutation():
+    rng = np.random.default_rng(7)
+    m = random_mask(rng, 32, 32, 9)
+    order = sort_keys_psum(m, 5)
+    assert sorted(order.tolist()) == list(range(32))
+
+
+def test_sorting_improves_locality():
+    rng = np.random.default_rng(3)
+    # clustered mask: two query groups sharing key sets, shuffled columns
+    m = np.zeros((32, 32), dtype=bool)
+    m[:16, :12] = True
+    m[16:, 20:] = True
+    perm = rng.permutation(32)
+    m = m[:, perm]
+    order = sort_keys_psum(m, 0)
+    assert locality_score(m[:, order]) >= locality_score(m)
+
+
+def test_classify_semantics():
+    # sorted mask with obvious HEAD/TAIL/GLOB structure, N=8, s_h=4
+    sm = np.zeros((3, 8), dtype=bool)
+    sm[0, :3] = True          # HEAD: only first keys
+    sm[1, 5:] = True          # TAIL: only last keys
+    sm[2, [0, 7]] = True      # GLOB: both ends
+    qt = classify_queries(sm, 4)
+    assert qt[0] == QType.HEAD
+    assert qt[1] == QType.TAIL
+    assert qt[2] == QType.GLOB
+
+
+def test_classify_both_ends_free_goes_head():
+    sm = np.zeros((1, 8), dtype=bool)
+    sm[0, 3:5] = True          # touches neither first-2 nor last-2
+    assert classify_queries(sm, 2)[0] == QType.HEAD
+
+
+def test_escape_loop_decrements_until_theta():
+    rng = np.random.default_rng(11)
+    m = random_mask(rng, 16, 16, 8)      # dense-ish → many GLOB at s_h=8
+    qt, ht, s_h, n_dec = classify_with_escape(m)
+    n_glob = int((qt == QType.GLOB).sum())
+    assert n_glob <= 8 or s_h == 0       # escaped, or degenerate GLOB head
+    assert s_h + n_dec == 8              # started at N/2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(6, 40), st.integers(1, 5), st.integers(0, 10_000))
+def test_property_sort_permutation_and_equivalence(n, k_small, seed):
+    rng = np.random.default_rng(seed)
+    k = min(k_small + 1, n)
+    m = random_mask(rng, n, n, k)
+    o1 = sort_keys_direct(m, seed % n)
+    o2 = sort_keys_psum(m, seed % n)
+    assert np.array_equal(o1, o2)
+    assert sorted(o1.tolist()) == list(range(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(6, 32), st.integers(0, 10_000))
+def test_property_classification_invariant(n, seed):
+    """HEAD queries never touch the last s_h sorted keys; TAIL never the
+    first s_h — the invariant the FSM's overlap correctness rests on."""
+    rng = np.random.default_rng(seed)
+    k = max(1, n // 4)
+    m = random_mask(rng, n, n, k)
+    res = sort_and_classify(m, seed=seed % n)
+    if res.head_type == HeadType.GLOB:
+        return
+    sm = m[:, res.kid]
+    s_h = res.s_h
+    for q, t in enumerate(res.qtypes):
+        if t == QType.HEAD:
+            assert not sm[q, n - s_h:].any()
+        elif t == QType.TAIL:
+            assert not sm[q, :s_h].any()

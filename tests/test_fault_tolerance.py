@@ -1,0 +1,89 @@
+"""Fault-tolerance integration tests: checkpoint/restart determinism,
+failure injection + resume, elastic restore, async save atomicity."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.launch.train import train
+
+
+def _final_loss_curve(**kw):
+    out = train("olmo-1b", smoke=True, steps=10, batch=4, seq=16,
+                log_every=100, **kw)
+    return out["losses"]
+
+
+def test_restart_resumes_identically(tmp_path):
+    """uninterrupted run == (run to failure → restart) bit-for-bit on the
+    loss curve — checkpoint state + pipeline state both round-trip."""
+    ref = _final_loss_curve(ckpt_dir=str(tmp_path / "ref"), ckpt_every=5)
+
+    with pytest.raises(RuntimeError, match="injected failure"):
+        _final_loss_curve(ckpt_dir=str(tmp_path / "ft"), ckpt_every=5,
+                          fail_at=7)
+    resumed = _final_loss_curve(ckpt_dir=str(tmp_path / "ft"), ckpt_every=5)
+    # resumed run covers steps 5..9; compare the overlap
+    np.testing.assert_allclose(ref[5:], resumed, rtol=1e-5)
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"a": jnp.arange(8.0), "b": {"c": jnp.ones((3, 3))}}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.all_steps() == [3, 4]           # keep-k GC
+    # a stale tmp dir never shadows a finished checkpoint
+    (tmp_path / "step_9.tmp").mkdir()
+    assert mgr.latest_step() == 4
+
+
+def test_async_save_round_trip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    mgr.save(1, state, blocking=False)
+    mgr.wait()
+    got = mgr.restore(jax.tree.map(jnp.zeros_like, state))
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_elastic_restore_onto_different_mesh(tmp_path):
+    """Save on a 1×1 mesh, restore with explicit shardings onto a 2-dev
+    forced-host mesh (subprocess) — here we emulate by restoring with
+    fresh NamedShardings on the same device set; leaf values must
+    round-trip and shardings must apply."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.arange(64.0).reshape(8, 8)}
+    mgr.save(3, state)
+    mesh = make_local_mesh()
+    sh = {"w": NamedSharding(mesh, P("data", "model"))}
+    got = mgr.restore(jax.tree.map(jnp.zeros_like, state), shardings=sh)
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(state["w"]))
+    assert got["w"].sharding == sh["w"]
+
+
+def test_grad_compression_error_feedback():
+    """int8 error-feedback compression: quantization error is carried,
+    so the *sum* of dequantized grads over steps tracks the true sum."""
+    from repro.optim.adamw import compress_int8
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal((128,)), jnp.float32) * 1e-3
+    err = jnp.zeros_like(g_true)
+    total = jnp.zeros_like(g_true)
+    for _ in range(50):
+        deq, err = compress_int8(g_true, err)
+        total = total + deq
+    np.testing.assert_allclose(np.asarray(total), np.asarray(g_true) * 50,
+                               rtol=0.05, atol=1e-4)
+
+
+def test_training_reduces_loss():
+    losses = _final_loss_curve()
+    assert losses[-1] < losses[0]

@@ -1,0 +1,158 @@
+"""Pallas kernel validation (interpret=True on CPU): shape/dtype sweep
+against the pure-jnp oracle, block-skip semantics, SATA plan round-trip."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blockmap import block_skip_fraction, sata_block_plan
+from repro.core.masks import SyntheticTrace, synthetic_masks, topk_mask
+from repro.kernels.ops import sata_attention, sata_attention_reference
+from repro.kernels.ref import ref_block_attention, ref_dense_attention
+from repro.kernels.sata_attention import sata_block_attention
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def rand_qkv(key, bh, sq, sk, d, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (bh, sq, d), jnp.float32).astype(dtype)
+    k_ = jax.random.normal(k2, (bh, sk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (bh, sk, d), jnp.float32).astype(dtype)
+    return q, k_, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,sk,d,bq,bk", [
+    (128, 128, 64, 32, 32),
+    (256, 256, 64, 64, 64),
+    (128, 256, 128, 32, 64),
+    (256, 128, 64, 128, 32),
+])
+def test_kernel_matches_ref_dense_map(sq, sk, d, bq, bk, dtype):
+    """All-ones block map == dense flash attention."""
+    q, k_, v = rand_qkv(jax.random.PRNGKey(0), 3, sq, sk, d, dtype)
+    bm = jnp.ones((3, sq // bq, sk // bk), dtype=bool)
+    out = sata_block_attention(q, k_, v, bm, q_block=bq, k_block=bk,
+                               interpret=True)
+    ref = ref_dense_attention(q, k_, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_kernel_matches_ref_sparse_map(dtype, seed):
+    """Random block maps (incl. fully-empty query rows → zero output)."""
+    bq = bk = 32
+    sq = sk = 128
+    q, k_, v = rand_qkv(jax.random.PRNGKey(seed), 2, sq, sk, 64, dtype)
+    bm = jax.random.bernoulli(jax.random.PRNGKey(seed + 7),
+                              0.5, (2, sq // bq, sk // bk))
+    out = sata_block_attention(q, k_, v, bm, q_block=bq, k_block=bk,
+                               interpret=True)
+    ref = ref_block_attention(q, k_, v, bm, q_block=bq, k_block=bk)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_exact_mode_elementwise_mask(dtype):
+    bq = bk = 32
+    sq = sk = 128
+    q, k_, v = rand_qkv(jax.random.PRNGKey(3), 2, sq, sk, 64, dtype)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(11), 0.3, (2, sq, sk))
+    bm = mask.reshape(2, sq // bq, bq, sk // bk, bk).any(axis=(2, 4))
+    out = sata_block_attention(q, k_, v, bm, mask=mask,
+                               q_block=bq, k_block=bk, interpret=True)
+    ref = ref_block_attention(q, k_, v, bm, mask=mask,
+                              q_block=bq, k_block=bk)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_end_to_end_sata_equals_unsorted_topk():
+    """The full pipeline (sort → permute → block-skip kernel → unpermute,
+    exact mode) must be bit-comparable to plain top-k attention — SATA
+    reorders execution, never the math (paper: 'without sacrificing
+    model accuracy')."""
+    bh, s, d = 3, 128, 64
+    q, k_, v = rand_qkv(jax.random.PRNGKey(5), bh, s, s, jnp.float32, d) \
+        if False else rand_qkv(jax.random.PRNGKey(5), bh, s, s, d, jnp.float32)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k_)
+    mask = topk_mask(scores, 24)
+    out, bm = sata_attention(q, k_, v, mask, q_block=16, k_block=16,
+                             exact=True, interpret=True)
+    ref = sata_attention_reference(q, k_, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sata_sorting_increases_block_skip():
+    """On locality-structured masks the SATA plan must skip strictly more
+    blocks than the unsorted baseline (the paper's core claim, in MXU
+    tile units)."""
+    tr = SyntheticTrace(n_tokens=128, k=16, cluster_rank=2,
+                        cluster_scale=2.5, noise=0.3)
+    masks = jnp.asarray(synthetic_masks(0, tr, n_heads=4))
+    _, _, bm_sata = sata_block_plan(masks, 16, 16)
+    from repro.core.blockmap import identity_block_plan
+    _, _, bm_id = identity_block_plan(masks, 16, 16)
+    skip_sata = float(block_skip_fraction(bm_sata))
+    skip_id = float(block_skip_fraction(bm_id))
+    assert skip_sata > skip_id + 0.1, (skip_sata, skip_id)
+
+
+def test_block_mode_covers_all_selected_pairs():
+    """Block mode computes a superset of the selected pairs (never drops
+    a selected (q, k) MAC)."""
+    tr = SyntheticTrace(n_tokens=64, k=8, cluster_rank=2, cluster_scale=2.0,
+                        noise=0.3)
+    masks = jnp.asarray(synthetic_masks(1, tr, n_heads=2))
+    kv_order, q_order, bm = sata_block_plan(masks, 8, 8)
+    permuted = jnp.take_along_axis(masks, kv_order[:, None, :], axis=2)
+    permuted = jnp.take_along_axis(permuted, q_order[:, :, None], axis=1)
+    covered = jnp.repeat(jnp.repeat(bm, 8, axis=1), 8, axis=2)
+    assert bool(jnp.all(~permuted | covered))
+
+
+# ---------------------------------------------------------------------------
+# Bisection top-k threshold (distributed-friendly decode path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,n", [(8, 1000), (64, 10000), (1, 128)])
+def test_bisect_mask_selects_at_least_k(k, n):
+    from repro.models.attention import topk_mask_bisect
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((3, 2, n)),
+                    jnp.float32)
+    m = topk_mask_bisect(x, k)
+    counts = np.asarray(m.sum(-1))
+    assert counts.min() >= k
+    # fuzziness bounded: never more than ~1% + bf16-tie slack extra
+    assert counts.max() <= k + max(8, n // 64)
+
+
+def test_bisect_agrees_with_sort_on_clear_margins():
+    """Where the k-th/k+1-th gap is large (> bf16 resolution), bisect and
+    sort select identical sets."""
+    from repro.models.attention import (kth_largest, topk_mask_bisect)
+    rng = np.random.default_rng(1)
+    x = np.sort(rng.standard_normal((2, 1, 512)).astype(np.float32))[..., ::-1]
+    x[..., :16] += 10.0                    # clear top-16 margin
+    x = jnp.asarray(np.ascontiguousarray(x))
+    m = topk_mask_bisect(x, 16)
+    ref = x >= kth_largest(x, 16)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(ref))
+
+
+def test_bisect_respects_neg_inf_padding():
+    from repro.models.attention import NEG_INF, topk_mask_bisect
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((1, 1, 256)),
+                    jnp.float32)
+    x = x.at[..., 200:].set(NEG_INF)       # masked tail (causal/invalid)
+    m = topk_mask_bisect(x, 32)
+    assert not bool(m[..., 200:].any())    # never selects masked keys
+    assert int(m.sum()) >= 32
