@@ -1,0 +1,20 @@
+# Tier-1 verify + perf-trajectory artifacts.  `make test` is what CI runs.
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test dev-deps bench roofline-kernel
+
+dev-deps:
+	-pip install -r requirements-dev.txt
+
+test:
+	python -m pytest -x -q
+
+# BENCH_kernel.json: dense-grid vs compacted-grid kernel timings +
+# tile-visit / fetch-byte counts — the perf trajectory across PRs.
+bench:
+	python -m benchmarks.run kernel --json-dir results/bench
+
+roofline-kernel:
+	python -m repro.launch.roofline --kernel

@@ -183,14 +183,19 @@ def bench_overhead() -> List[Row]:
 
 
 # ---------------------------------------------------------------------------
-# TPU kernel counterpart: block-skip fraction + interpret-mode check
+# TPU kernel counterpart: block-skip fraction, dense-grid vs compacted-grid
+# scheduling (time + tile visits + fetch bytes), interpret-mode parity
 # ---------------------------------------------------------------------------
 
 def bench_kernel() -> List[Row]:
     import jax.numpy as jnp
-    from repro.core.blockmap import (block_skip_fraction,
+    from repro.core.blockmap import (block_skip_fraction, compact_kv_plan,
+                                     fixed_occupancy_map,
                                      identity_block_plan, sata_block_plan)
-    from repro.kernels.ops import sata_attention, sata_attention_reference
+    from repro.kernels.ops import (default_interpret, kernel_fetch_stats,
+                                   sata_attention, sata_attention_reference)
+    from repro.kernels.sata_attention import (sata_block_attention,
+                                              sata_block_attention_compact)
     import jax
     rows: List[Row] = []
     # object-region attention: shared per-cluster key sets, raster order
@@ -227,6 +232,45 @@ def bench_kernel() -> List[Row]:
     err = float(jnp.max(jnp.abs(out - ref)))
     rows.append(("kernel/sata_attention_interpret", us,
                  f"max_err {err:.2e} skip {float(block_skip_fraction(bm2)):.3f}"))
+
+    # --- dense grid vs compacted grid: same inputs, same math, only the
+    # schedule differs.  50% block sparsity, per-row occupancy exactly
+    # nkb/2 (see fixed_occupancy_map on why not Bernoulli).
+    interp = default_interpret()
+    bq = bk = 32
+    sq2 = 512
+    nb = sq2 // bk
+    rng2 = np.random.default_rng(3)
+    bm50 = jnp.asarray(
+        fixed_occupancy_map(rng2, 4, nb, nb, nb // 2))
+    q2 = jnp.asarray(rng2.standard_normal((4, sq2, 64)), jnp.float32)
+    k2 = jnp.asarray(rng2.standard_normal((4, sq2, 64)), jnp.float32)
+    v2 = jnp.asarray(rng2.standard_normal((4, sq2, 64)), jnp.float32)
+    idx, cnt = compact_kv_plan(bm50, pad_to=nb // 2)
+    dense_fn = jax.jit(lambda: sata_block_attention(
+        q2, k2, v2, bm50, q_block=bq, k_block=bk, interpret=interp))
+    compact_fn = jax.jit(lambda: sata_block_attention_compact(
+        q2, k2, v2, idx, cnt, q_block=bq, k_block=bk, interpret=interp))
+    jax.block_until_ready(dense_fn())           # warm both traces
+    jax.block_until_ready(compact_fn())
+    out_d, us_d = timed(lambda: jax.block_until_ready(dense_fn()), repeat=3)
+    out_c, us_c = timed(lambda: jax.block_until_ready(compact_fn()), repeat=3)
+    err_dc = float(jnp.max(jnp.abs(out_d - out_c)))
+    stats = kernel_fetch_stats(bm50, q_block=bq, k_block=bk, d=64,
+                               dtype_bytes=4, max_kv_blocks=nb // 2)
+    mode = "interpret" if interp else "compiled"
+    rows.append((f"kernel/dense_grid_{mode}", us_d,
+                 f"visits {stats['tile_visits_dense']} "
+                 f"fetchB {stats['kv_fetch_bytes_dense']}"))
+    rows.append((f"kernel/compact_grid_{mode}", us_c,
+                 f"visits {stats['tile_visits_compact']} "
+                 f"fetchB {stats['kv_fetch_bytes_compact']} "
+                 f"max_err_vs_dense {err_dc:.2e}"))
+    rows.append(("kernel/compact_speedup", 0.0,
+                 f"{us_d / max(us_c, 1e-9):.2f}x wall ({mode}), "
+                 f"{stats['visit_reduction']:.2f}x visits, "
+                 f"{stats['fetch_reduction']:.2f}x fetch-bytes at "
+                 f"{stats['block_skip_fraction']:.2f} block sparsity"))
     return rows
 
 

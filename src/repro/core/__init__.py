@@ -5,7 +5,8 @@ Sorting (Algo 1), FSM scheduling (Algo 2), tiling + zero-skip
 block-sparse execution planner derived from them.
 """
 from repro.core.blockmap import (block_occupancy, block_skip_fraction,
-                                 identity_block_plan, sata_block_plan)
+                                 compact_kv_plan, identity_block_plan,
+                                 sata_block_plan)
 from repro.core.masks import (SyntheticTrace, apply_selective_mask,
                               synthetic_masks, synthetic_scores, topk_mask)
 from repro.core.sata import SataPlan, SataStats, plan, stats_from_results

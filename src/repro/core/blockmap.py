@@ -12,6 +12,12 @@ Outputs per head:
   kv_order  (N,)  int32   — SATA sorted key permutation (Gram-greedy)
   q_order   (N,)  int32   — queries grouped HEAD | GLOB | TAIL
   block_map (nqb, nkb) bool — tile occupancy after both permutations
+
+``compact_kv_plan`` turns the boolean map into the *scheduled* form the
+compacted-grid kernel consumes: per (bh, q_block) a padded ascending
+list of occupied k-block indices plus a count, so the Pallas grid walks
+only occupied slots and the BlockSpec index maps never point the DMA
+engine at an empty tile.
 """
 from __future__ import annotations
 
@@ -71,9 +77,90 @@ def sata_block_plan(mask: jax.Array, q_block: int, k_block: int,
     return kv_order, q_order, block_map
 
 
+def compact_kv_plan(block_map: jax.Array, pad_to: int | None = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Compact each (…, q_block) row of ``block_map`` to the list of
+    occupied k-block indices — the scalar-prefetch schedule for the
+    compacted-grid kernel.
+
+    block_map: (..., nqb, nkb) bool/int tile occupancy.
+    Returns ``(kv_indices (..., nqb, P) int32, kv_counts (..., nqb) int32)``
+    with ``P = pad_to or nkb``.
+
+    Slot ``j < count`` holds the j-th occupied k-block index (ascending).
+    Padding slots are chosen so the kernel's K/V index map never points
+    the DMA at a tile that is not already part of the fetched set:
+
+      * rows with ≥1 occupied tile repeat their *last* occupied index —
+        consecutive grid steps then map to the block already resident in
+        VMEM and the Pallas pipeline issues no new fetch;
+      * fully-empty rows inherit the last occupied index of the nearest
+        preceding non-empty row, so the row-boundary transition is a
+        no-op re-reference rather than a fetch of an unoccupied tile;
+      * *leading* empty rows (no preceding non-empty row) take the
+        **first** occupied index of the first non-empty row — the grid's
+        unavoidable first-step fetch then lands exactly on the tile that
+        row will need, so it costs nothing extra.
+
+    A batch entry whose map is entirely empty (no occupied tile at all)
+    falls back to index 0 — some tile must back the very first grid step.
+
+    ``pad_to`` statically narrows the slot dimension (and hence the
+    kernel grid): callers that know ``counts.max()`` concretely (eager
+    benchmarks, a host-side planner) pass it so grid size scales with the
+    occupied-tile count instead of ``nkb``.  It must be ≥ the true max
+    count or occupied tiles would be dropped — validated here whenever
+    the map is concrete; under jit the caller must pass a static
+    over-estimate (the safe default ``None`` keeps the full ``nkb``).
+    """
+    bm = block_map.astype(bool)
+    *_, nqb, nkb = bm.shape
+    counts = bm.sum(-1).astype(jnp.int32)                       # (..., nqb)
+    # stable sort of (not occupied) → occupied indices first, ascending
+    order = jnp.argsort(~bm, axis=-1, stable=True).astype(jnp.int32)
+    last = jnp.take_along_axis(
+        order, jnp.maximum(counts - 1, 0)[..., None], axis=-1)[..., 0]
+    # forward-fill `last` across q rows for empty rows; leading empties
+    # borrow from the first non-empty row.
+    valid = counts > 0
+    rowid = jnp.where(valid, jnp.arange(nqb, dtype=jnp.int32), -1)
+    prev_valid = jax.lax.cummax(rowid, axis=rowid.ndim - 1)     # (..., nqb)
+    first_valid = jnp.argmax(valid, axis=-1)[..., None]
+    fill_fwd = jnp.take_along_axis(last, jnp.maximum(prev_valid, 0), axis=-1)
+    first_occ = order[..., 0]                   # first occupied per row
+    fill_bwd = jnp.take_along_axis(first_occ, first_valid, axis=-1)
+    fill = jnp.where(prev_valid >= 0, fill_fwd, fill_bwd)       # (..., nqb)
+    fill = jnp.where(valid.any(-1, keepdims=True), fill, 0)
+    slot = jnp.arange(nkb, dtype=jnp.int32)
+    kv_indices = jnp.where(slot < counts[..., None], order, fill[..., None])
+    if pad_to is not None:
+        if not isinstance(counts, jax.core.Tracer) \
+                and pad_to < int(counts.max(initial=0)):
+            raise ValueError(
+                f"pad_to={pad_to} < max occupancy "
+                f"{int(counts.max(initial=0))}: occupied tiles would be "
+                f"silently dropped")
+        kv_indices = kv_indices[..., :pad_to]
+    return kv_indices, counts
+
+
 def block_skip_fraction(block_map: jax.Array) -> jax.Array:
     """Fraction of (q_block × k_block) tiles with zero work."""
     return 1.0 - block_map.mean()
+
+
+def fixed_occupancy_map(rng, bh: int, nqb: int, nkb: int, occ: int):
+    """Host-side (numpy) random block map with exactly ``occ`` occupied
+    k-blocks per (bh, q_row) — the concentrated regime SATA's key sort
+    produces, and the shape benchmarks/roofline use so the padded compact
+    grid (`P = occ`) actually shrinks (a Bernoulli map almost surely has
+    one fully-occupied row pinning P at ``nkb``)."""
+    import numpy as np
+    bm = np.zeros((bh, nqb, nkb), dtype=bool)
+    for b in range(bh):
+        for i in range(nqb):
+            bm[b, i, rng.choice(nkb, size=occ, replace=False)] = True
+    return bm
 
 
 def identity_block_plan(mask: jax.Array, q_block: int, k_block: int

@@ -29,6 +29,12 @@ def clear() -> None:
     _MESH = None
 
 
+def mesh_installed() -> bool:
+    """True when a launcher has installed a multi-axis mesh — paths
+    without an SPMD partitioning rule (e.g. pallas_call) must bail."""
+    return _MESH is not None
+
+
 def constrain(x: jax.Array, kind: str) -> jax.Array:
     s = _SPECS.get(kind)
     if s is None:

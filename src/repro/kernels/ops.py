@@ -1,32 +1,67 @@
 """Jit'd public wrappers: SATA planning (sort → permute → block map) +
-the Pallas kernel, end to end."""
+the Pallas kernel, end to end.
+
+``schedule`` selects the kernel's execution plan:
+  * ``"compact"`` (default) — scalar-prefetch compacted grid: the K/V
+    BlockSpec index maps walk ``compact_kv_plan``'s occupied-tile lists,
+    so empty tiles are never fetched *or* visited.
+  * ``"dense"``  — full ``(BH, nqb, nkb)`` grid with compute-only
+    skipping (``@pl.when`` on the block map); kept as the measured
+    baseline.
+
+``interpret=None`` auto-detects the backend: compiled Mosaic on TPU,
+interpret mode elsewhere (CPU CI).  Pass an explicit bool to override.
+"""
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.blockmap import identity_block_plan, sata_block_plan
+from repro.core.blockmap import (compact_kv_plan, identity_block_plan,
+                                 sata_block_plan)
 from repro.kernels.ref import ref_block_attention
-from repro.kernels.sata_attention import sata_block_attention
+from repro.kernels.sata_attention import (sata_block_attention,
+                                          sata_block_attention_compact)
 
 
-@functools.partial(jax.jit, static_argnames=("q_block", "k_block", "k",
+def default_interpret() -> bool:
+    """Interpret Pallas kernels only when no TPU backend is present."""
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "k_block",
                                              "use_sata", "interpret",
-                                             "exact"))
+                                             "exact", "schedule",
+                                             "max_kv_blocks"))
 def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
                    scores_mask: jax.Array, *, q_block: int = 128,
-                   k_block: int = 128, k: int = 64, use_sata: bool = True,
-                   exact: bool = True, interpret: bool = True
+                   k_block: int = 128, use_sata: bool = True,
+                   exact: bool = True, interpret: Optional[bool] = None,
+                   schedule: str = "compact",
+                   max_kv_blocks: Optional[int] = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Top-k selective attention through the SATA plan + Pallas kernel.
 
     q/k_/v: (BH, S, D); scores_mask: (BH, Sq, Sk) bool top-k selection.
     Returns (output in ORIGINAL query order, block_map) — block skip
     fraction is ``1 - block_map.mean()``.
+
+    ``max_kv_blocks`` (compact schedule only) statically bounds the
+    occupied k-blocks per q-row, shrinking the kernel grid's innermost
+    dimension from ``nkb`` to that bound.  Callers with a concrete block
+    map get it from ``int(kv_counts.max())`` (``compact_kv_plan`` raises
+    on a concrete under-estimate); inside jit it must be a static
+    over-estimate — an under-estimate cannot be detected there and drops
+    occupied tiles (the default ``None`` keeps the safe full ``nkb``).
     """
+    if schedule not in ("compact", "dense"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if interpret is None:
+        interpret = default_interpret()
     plan_fn = sata_block_plan if use_sata else identity_block_plan
     if use_sata:
         kv_order, q_order, block_map = plan_fn(scores_mask, q_block, k_block)
@@ -36,13 +71,23 @@ def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
     kp = jnp.take_along_axis(k_, kv_order[:, :, None], axis=1)
     vp = jnp.take_along_axis(v, kv_order[:, :, None], axis=1)
     qp = jnp.take_along_axis(q, q_order[:, :, None], axis=1)
-    mask_p = jnp.take_along_axis(
-        jnp.take_along_axis(scores_mask, kv_order[:, None, :], axis=2),
-        q_order[:, :, None], axis=1)
-    out_p = sata_block_attention(qp, kp, vp, block_map,
-                                 mask=mask_p if exact else None,
-                                 q_block=q_block, k_block=k_block,
-                                 interpret=interpret)
+    # block mode needs no dense (BH, Sq, Sk) mask — only exact mode
+    # permutes and ships it.
+    mask_p = None
+    if exact:
+        mask_p = jnp.take_along_axis(
+            jnp.take_along_axis(scores_mask, kv_order[:, None, :], axis=2),
+            q_order[:, :, None], axis=1)
+    if schedule == "compact":
+        kv_indices, kv_counts = compact_kv_plan(block_map,
+                                                pad_to=max_kv_blocks)
+        out_p = sata_block_attention_compact(
+            qp, kp, vp, kv_indices, kv_counts, mask=mask_p,
+            q_block=q_block, k_block=k_block, interpret=interpret)
+    else:
+        out_p = sata_block_attention(qp, kp, vp, block_map, mask=mask_p,
+                                     q_block=q_block, k_block=k_block,
+                                     interpret=interpret)
     # scatter back to original query order
     inv = jnp.argsort(q_order, axis=-1)
     out = jnp.take_along_axis(out_p, inv[:, :, None], axis=1)
@@ -55,3 +100,45 @@ def sata_attention_reference(q, k_, v, scores_mask) -> jax.Array:
     bm = jnp.ones((bh, 1, 1), dtype=bool)
     return ref_block_attention(q, k_, v, bm, mask=scores_mask,
                                q_block=sq, k_block=k_.shape[1])
+
+
+def kernel_fetch_stats(block_map, *, q_block: int, k_block: int, d: int,
+                       dtype_bytes: int = 4,
+                       max_kv_blocks: Optional[int] = None) -> Dict:
+    """Tile-visit and K/V fetch-byte accounting, dense vs compacted grid.
+
+    The dense grid visits — and its BlockSpec pipeline *fetches* — every
+    ``(bh, q_row, k_block)`` tile regardless of occupancy.  The compacted
+    grid visits ``nqb × P`` slots (P = the padded slot count) and fetches
+    at most one K+V tile per *occupied* slot: padding slots re-reference
+    the resident block, which the Pallas pipeline does not re-fetch.
+    Counts are exact for the scheduled index sequence (boundary reuse
+    between consecutive rows can only lower the compact fetch count).
+
+    ``max_kv_blocks`` defaults to the same value as ``sata_attention``'s
+    (the full ``nkb``), so default-args accounting describes the grid the
+    default kernel call actually runs; pass the concrete occupancy bound
+    to model a ``max_kv_blocks``-narrowed launch.
+    """
+    bm = np.asarray(block_map).astype(bool)
+    bh, nqb, nkb = bm.shape
+    counts = bm.sum(-1)                                   # (bh, nqb)
+    p = int(max_kv_blocks) if max_kv_blocks is not None else nkb
+    tile_bytes = 2 * k_block * d * dtype_bytes            # one K + one V tile
+    dense_visits = bh * nqb * nkb
+    compact_visits = bh * nqb * p
+    dense_fetch_tiles = bh * nqb * nkb
+    compact_fetch_tiles = int(counts.sum())
+    return {
+        "grid_dense": [bh, nqb, nkb],
+        "grid_compact": [bh, nqb, p],
+        "tile_visits_dense": dense_visits,
+        "tile_visits_compact": compact_visits,
+        "kv_fetch_tiles_dense": dense_fetch_tiles,
+        "kv_fetch_tiles_compact": compact_fetch_tiles,
+        "kv_fetch_bytes_dense": dense_fetch_tiles * tile_bytes,
+        "kv_fetch_bytes_compact": compact_fetch_tiles * tile_bytes,
+        "visit_reduction": dense_visits / max(compact_visits, 1),
+        "fetch_reduction": dense_fetch_tiles / max(compact_fetch_tiles, 1),
+        "block_skip_fraction": float(1.0 - bm.mean()),
+    }

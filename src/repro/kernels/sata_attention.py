@@ -16,8 +16,33 @@ Two execution modes:
   * exact mode  (``mask`` given)  — additionally applies the element-
     level top-k mask inside each tile; bit-exact selective attention.
 
-Grid: (B·H, n_q_blocks, n_k_blocks), k innermost so the VMEM scratch
-accumulators (acc, m, l) carry across the k sweep.
+Scheduling: dense grid vs compacted grid
+----------------------------------------
+``sata_block_attention`` (dense grid) walks the full
+``(BH, n_q_blocks, n_k_blocks)`` grid and gates *compute* on the
+prefetched block map — but the BlockSpec pipeline still streams every
+K/V tile through VMEM, so HBM traffic stays quadratic and wall-clock
+barely tracks the block-skip fraction.  It is kept as the baseline the
+benchmarks measure against.
+
+``sata_block_attention_compact`` is the SATA scheduler proper: the
+planner (``core.blockmap.compact_kv_plan``) compresses each
+``(bh, q_block)`` row of the occupancy map into an ascending list of
+occupied k-block indices (``kv_indices (BH, nqb, P)``) plus a count
+(``kv_counts (BH, nqb)``).  Both ride in as *scalar prefetch* operands
+(``pltpu.PrefetchScalarGridSpec``), available to the BlockSpec index
+maps **before** the kernel body runs, so the K/V (and exact-mode mask)
+index maps dereference ``kv_indices[b, i, j]`` and the DMA engine only
+ever fetches occupied tiles.  The grid shrinks to ``(BH, nqb, P)`` where
+``P`` is the padded max occupancy — work scheduled, fetched, and
+computed all scale with the occupied-tile count, not ``nqb·nkb``.
+Padding slots repeat an already-resident index (see ``compact_kv_plan``)
+— the Pallas pipeline skips the DMA when consecutive grid steps map to
+the same block, so padding costs neither fetch nor compute (the body is
+``pl.when``-gated on ``j < kv_counts[b, i]``).
+
+Grid: k-slot innermost so the VMEM scratch accumulators (acc, m, l)
+carry across the k sweep of one query block.
 """
 from __future__ import annotations
 
@@ -32,6 +57,19 @@ from jax.experimental import pallas as pl
 NEG_INF = -2.0 ** 30
 
 
+def _acc_init(acc_ref, m_ref, l_ref):
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+
+def _acc_finalize(o_ref, acc_ref, l_ref):
+    """Rows with no admissible key (l == 0) emit zeros."""
+    l = l_ref[...]
+    out = jnp.where(l > 0, acc_ref[...] / jnp.where(l > 0, l, 1.0), 0.0)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
 def _kernel(bm_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
             acc_ref, m_ref, l_ref, *, sm_scale: float, n_kb: int,
             exact: bool):
@@ -39,37 +77,19 @@ def _kernel(bm_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
 
     @pl.when(kj == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        _acc_init(acc_ref, m_ref, l_ref)
 
     occupied = bm_ref[0, 0, 0] != 0
 
     @pl.when(occupied)
     def _update():
-        q = q_ref[0]                                   # (bq, d)
-        k = k_ref[0]                                   # (bk, d)
-        v = v_ref[0]
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * sm_scale   # (bq, bk)
-        if exact:
-            s = jnp.where(mask_ref[0], s, NEG_INF)
-        m_prev = m_ref[...]                            # (bq, 1)
-        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)                         # (bq, bk)
-        alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
-        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        _flash_update(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                      sm_scale=sm_scale,
+                      tile_mask=mask_ref[0] if exact else None)
 
     @pl.when(kj == n_kb - 1)
     def _finalize():
-        l = l_ref[...]
-        out = jnp.where(l > 0, acc_ref[...] / jnp.where(l > 0, l, 1.0), 0.0)
-        o_ref[0] = out.astype(o_ref.dtype)
+        _acc_finalize(o_ref, acc_ref, l_ref)
 
 
 def sata_block_attention(
@@ -120,3 +140,131 @@ def sata_block_attention(
 def _vmem(shape, dtype):
     from jax.experimental.pallas import tpu as pltpu
     return pltpu.VMEM(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Compacted grid: scalar-prefetch scheduling (skips fetch, not just compute)
+# ---------------------------------------------------------------------------
+
+def _flash_update(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, tile_mask=None):
+    """One online-softmax accumulation step over the resident K/V tile."""
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bk, d)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * sm_scale       # (bq, bk)
+    if tile_mask is not None:
+        s = jnp.where(tile_mask, s, NEG_INF)
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    if tile_mask is not None:
+        # a row fully masked so far has s == m_new == NEG_INF, where the
+        # finite sentinel gives exp(0) = 1, not 0 — zero masked entries
+        # explicitly so such rows keep l == 0 and finalize to zeros.
+        p = jnp.where(tile_mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _compact_kernel(idx_ref, cnt_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
+                    acc_ref, m_ref, l_ref, *, sm_scale: float, n_slots: int,
+                    exact: bool):
+    b, qi, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _acc_init(acc_ref, m_ref, l_ref)
+
+    # Slots past the row's occupancy count are padding: their index maps
+    # re-reference an already-resident tile (no fetch) and the body is
+    # skipped entirely (no compute).
+    @pl.when(j < cnt_ref[b, qi])
+    def _update():
+        _flash_update(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                      sm_scale=sm_scale,
+                      tile_mask=mask_ref[0] if exact else None)
+
+    @pl.when(j == n_slots - 1)
+    def _finalize():
+        _acc_finalize(o_ref, acc_ref, l_ref)
+
+
+def sata_block_attention_compact(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    kv_indices: jax.Array, kv_counts: jax.Array,
+    mask: Optional[jax.Array] = None,
+    *, q_block: int = 128, k_block: int = 128,
+    sm_scale: Optional[float] = None, interpret: bool = False,
+) -> jax.Array:
+    """Compacted-grid SATA attention (see module docstring).
+
+    q: (BH, Sq, D); k/v: (BH, Sk, D) in SATA-sorted key order;
+    kv_indices: (BH, Sq/q_block, P) int32 occupied k-block indices,
+    padded per ``core.blockmap.compact_kv_plan``;
+    kv_counts:  (BH, Sq/q_block) int32 occupancy per q-block row;
+    mask: optional (BH, Sq, Sk) element-level selection mask (exact mode).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % q_block == 0 and sk % k_block == 0, (sq, sk)
+    nqb = sq // q_block
+    n_slots = kv_indices.shape[-1]
+    assert kv_indices.shape[:2] == (bh, nqb), (kv_indices.shape, bh, nqb)
+    assert kv_counts.shape == (bh, nqb), (kv_counts.shape, bh, nqb)
+    if n_slots == 0:
+        # entirely-empty plan (pad_to=0): a zero-extent grid dim would
+        # never run the kernel, leaving o_ref unwritten — the attention
+        # of a row with no admissible key is zeros by definition.
+        return jnp.zeros((bh, sq, d), q.dtype)
+    sm_scale = float(sm_scale if sm_scale is not None else 1.0 / np.sqrt(d))
+    exact = mask is not None
+    if mask is None:
+        mask = jnp.ones((bh, 1, 1), dtype=jnp.int8)    # dummy, never read
+
+    # index maps receive (grid ids..., *scalar-prefetch refs)
+    def kv_map(b, i, j, idx_ref, cnt_ref):
+        return (b, idx_ref[b, i, j], 0)
+
+    mask_spec = (
+        pl.BlockSpec((1, q_block, k_block),
+                     lambda b, i, j, idx_ref, cnt_ref:
+                     (b, i, idx_ref[b, i, j])) if exact
+        else pl.BlockSpec((1, 1, 1),
+                          lambda b, i, j, idx_ref, cnt_ref: (b, 0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bh, nqb, n_slots),
+        in_specs=[
+            pl.BlockSpec((1, q_block, d),
+                         lambda b, i, j, idx_ref, cnt_ref: (b, i, 0)),
+            pl.BlockSpec((1, k_block, d), kv_map),
+            pl.BlockSpec((1, k_block, d), kv_map),
+            mask_spec,
+        ],
+        out_specs=pl.BlockSpec((1, q_block, d),
+                               lambda b, i, j, idx_ref, cnt_ref: (b, i, 0)),
+        scratch_shapes=[
+            _vmem((q_block, d), jnp.float32),       # acc
+            _vmem((q_block, 1), jnp.float32),       # running max m
+            _vmem((q_block, 1), jnp.float32),       # running sum l
+        ],
+    )
+    kernel = functools.partial(_compact_kernel, sm_scale=sm_scale,
+                               n_slots=n_slots, exact=exact)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(kv_indices.astype(jnp.int32), kv_counts.astype(jnp.int32),
+      q, k, v, mask)

@@ -31,7 +31,7 @@ from repro.distributed.sharding import (batch_specs, cache_specs,
                                         param_specs, to_shardings)
 from repro.launch.inputs import (batch_specs_for, decode_specs_for,
                                  state_specs_for)
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import activate_mesh, make_production_mesh
 from repro.optim.adamw import OptConfig
 from repro.train.step import make_prefill_step, make_serve_step, \
     make_train_step
@@ -81,7 +81,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         dctx.make_activation_shardings(mesh, cfg, seq_shard=seq_shard),
         mesh=mesh)
     dctx.set_context_parallel(cp and seq_shard)
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         if shape.kind == "train":
             state_sds = state_specs_for(cfg, OptConfig())
             batch_sds = batch_specs_for(cfg, shape)

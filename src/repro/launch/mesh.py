@@ -10,12 +10,18 @@ from typing import Tuple
 import jax
 
 
+def _mesh_kwargs(n_axes: int) -> dict:
+    """``axis_types`` only where the explicit-axes API exists (jax>=0.5);
+    older jax (0.4.x) meshes are implicitly Auto."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n_axes} if at is not None else {}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod mesh: 16×16 (256 chips) single-pod, or 2×16×16 multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def data_axes(mesh) -> Tuple[str, ...]:
@@ -25,5 +31,12 @@ def data_axes(mesh) -> Tuple[str, ...]:
 
 def make_local_mesh():
     """Single-device mesh for CPU tests/examples."""
-    auto = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=auto)
+    return jax.make_mesh((1, 1), ("data", "model"), **_mesh_kwargs(2))
+
+
+def activate_mesh(mesh):
+    """Context manager installing ``mesh`` for jit/sharding-constraint
+    resolution: ``jax.set_mesh`` where it exists (jax>=0.6), else the
+    classic ``Mesh.__enter__`` global-mesh context (jax 0.4.x)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh

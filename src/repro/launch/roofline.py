@@ -151,10 +151,72 @@ def analyse_cell(arch: str, shape_name: str, verbose: bool = True,
     return out
 
 
+def analyse_kernel(seq: int = 2048, d: int = 64, bh: int = 8,
+                   block: int = 128, occ_frac: float = 0.5,
+                   verbose: bool = True):
+    """Roofline the SATA kernel's two schedules against each other.
+
+    The dense grid's HBM term streams every K/V tile; the compacted grid
+    streams only occupied tiles (``kernel_fetch_stats`` counts both).
+    Compute is identical across schedules *per visited tile* — the dense
+    grid visits empty tiles but ``@pl.when`` gates their math, so its
+    compute term only pays the occupied MACs too; the gap is pure
+    memory/scheduling.  Writes one
+    ``results/roofline/sata_kernel__s{seq}_b{block}_occ{frac}.json``
+    per call.
+    """
+    import numpy as np
+    from repro.core.blockmap import fixed_occupancy_map
+    from repro.kernels.ops import kernel_fetch_stats
+
+    nqb = nkb = seq // block
+    occ = max(1, int(occ_frac * nkb))
+    bm = fixed_occupancy_map(np.random.default_rng(0), bh, nqb, nkb, occ)
+    stats = kernel_fetch_stats(bm, q_block=block, k_block=block, d=d,
+                               dtype_bytes=2, max_kv_blocks=occ)
+    # per occupied tile: QK^T + PV → 2 · (block·block·d) MACs → 4·b²·d flops
+    flops_per_tile = 4 * block * block * d
+    occupied = int(bm.sum())
+    t_compute = occupied * flops_per_tile / PEAK_FLOPS
+    q_bytes = bh * nqb * block * d * 2            # one Q tile per row
+    t_mem_dense = (stats["kv_fetch_bytes_dense"] + q_bytes) / HBM_BW
+    t_mem_compact = (stats["kv_fetch_bytes_compact"] + q_bytes) / HBM_BW
+    out = {
+        "cell": f"sata_kernel__s{seq}_b{block}_occ{occ_frac}",
+        "shape": {"bh": bh, "seq": seq, "d": d, "block": block,
+                  "occ_frac": occ_frac},
+        "fetch": stats,
+        "terms_s": {
+            "compute_s": t_compute,
+            "memory_dense_s": t_mem_dense,
+            "memory_compact_s": t_mem_compact,
+        },
+        "bound_dense": ("memory" if t_mem_dense > t_compute else "compute"),
+        "bound_compact": ("memory" if t_mem_compact > t_compute
+                          else "compute"),
+        "modeled_speedup": (max(t_mem_dense, t_compute)
+                            / max(t_mem_compact, t_compute)),
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{out['cell']}.json").write_text(json.dumps(out, indent=1))
+    if verbose:
+        print(f"[roofline] {out['cell']}: compute {t_compute*1e6:.1f}us, "
+              f"mem dense {t_mem_dense*1e6:.1f}us → compact "
+              f"{t_mem_compact*1e6:.1f}us "
+              f"(fetch {stats['fetch_reduction']:.2f}x down, modeled "
+              f"speedup {out['modeled_speedup']:.2f}x, "
+              f"{out['bound_dense']}→{out['bound_compact']}-bound)",
+              flush=True)
+    return out
+
+
 def print_table():
     rows = []
     for p in sorted(RESULTS.glob("*.json")):
         r = json.loads(p.read_text())
+        if "dominant" not in r:
+            continue        # kernel-schedule cells (--kernel) have their
+            # own shape; they print at generation time, not in this table
         rows.append(r)
     print("| cell | compute (ms) | memory (ms) | collective (ms) | "
           "bound | MODEL/HLO flops | roofline frac |")
@@ -174,9 +236,16 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-done", action="store_true")
     ap.add_argument("--table", action="store_true")
+    ap.add_argument("--kernel", action="store_true",
+                    help="roofline the SATA kernel schedules (dense vs "
+                         "compacted grid: time terms + fetch bytes)")
     args = ap.parse_args()
     if args.table:
         print_table()
+        return
+    if args.kernel:
+        for occ in (0.25, 0.5, 0.75):
+            analyse_kernel(occ_frac=occ)
         return
     from repro.configs.archs import all_cells
     cells = all_cells() if args.all else [(args.arch, args.shape)]

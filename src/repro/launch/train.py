@@ -28,7 +28,8 @@ from repro.data.pipeline import SyntheticLM
 from repro.distributed import ctx as dctx
 from repro.distributed.sharding import (batch_specs, param_specs,
                                         to_shardings)
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import (activate_mesh, make_local_mesh,
+                               make_production_mesh)
 from repro.optim.adamw import OptConfig
 from repro.train.step import init_train_state, make_train_step
 
@@ -97,7 +98,7 @@ def train(arch: str, smoke: bool = True, steps: int = 20,
 
     wd = Watchdog()
     losses = []
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         for step in range(start_step, steps):
             if fail_at is not None and step == fail_at:
                 raise RuntimeError(f"injected failure at step {step}")

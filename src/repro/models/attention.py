@@ -9,6 +9,7 @@ granularity at which the Pallas block-sparse kernel skips empty tiles.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -157,6 +158,108 @@ def _attend(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
     return out.reshape(b, nq, h, hd)
 
 
+def _selective_ref(qf: jax.Array, kf: jax.Array, vf: jax.Array,
+                   sel: jax.Array) -> jax.Array:
+    """Pure-jnp exact selective attention over flattened heads — the
+    math the Pallas kernel computes, used as its differentiation rule."""
+    d = qf.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", qf.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * (1.0 / np.sqrt(d))
+    s = jnp.where(sel, s, NEG_INF)
+    any_key = sel.any(axis=-1, keepdims=True)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(any_key, p, 0.0)
+    out = jnp.einsum("bqk,bkd->bqd", p, vf.astype(jnp.float32))
+    return out.astype(qf.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _sata_kernel_call(qf, kf, vf, sel, blk: int, schedule: str):
+    """Pallas forward + reference-recompute backward: ``pl.pallas_call``
+    defines no VJP, so training paths differentiate through
+    ``_selective_ref`` (identical math; dense recompute — see ROADMAP
+    open item on fusing selection into the kernel)."""
+    from repro.kernels.ops import sata_attention as sata_kernel_attention
+    out, _ = sata_kernel_attention(qf, kf, vf, sel, q_block=blk,
+                                   k_block=blk, exact=True,
+                                   schedule=schedule)
+    return out
+
+
+def _sata_kernel_fwd(qf, kf, vf, sel, blk, schedule):
+    return _sata_kernel_call(qf, kf, vf, sel, blk, schedule), \
+        (qf, kf, vf, sel)
+
+
+def _sata_kernel_bwd(blk, schedule, res, g):
+    qf, kf, vf, sel = res
+    _, vjp = jax.vjp(lambda q, k, v: _selective_ref(q, k, v, sel),
+                     qf, kf, vf)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, np.zeros(sel.shape, jax.dtypes.float0)
+
+
+_sata_kernel_call.defvjp(_sata_kernel_fwd, _sata_kernel_bwd)
+
+
+def _attend_sata_kernel(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
+                        q_pos: jax.Array, k_pos: jax.Array,
+                        causal: bool) -> jax.Array:
+    """Top-k attention through the compacted-grid SATA Pallas kernel.
+
+    q: (B, S, H, hd); k/v: (B, S, KV, hd).  Scores are computed once for
+    top-k selection (as in ``_attend``); the attention itself then runs
+    through plan → permute → kernel (``kernels.ops.sata_attention``,
+    exact mode), so K/V tiles emptied by the SATA sort are neither
+    fetched nor visited.  Differentiable: the kernel call carries a
+    custom VJP that recomputes through ``_selective_ref``.  Only valid
+    when S divides ``cfg.sata_block`` — ``attention_apply`` falls back
+    to ``_attend`` otherwise.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    # expand KV heads to per-query heads and flatten to (B·H, S, hd)
+    kq = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vq = jnp.repeat(v, g, axis=2) if g > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = kq.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vf = vq.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    scores = jnp.einsum("bqd,bkd->bqk", qf, kf,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / np.sqrt(hd))
+    admissible = jnp.ones((s, s), dtype=bool)
+    if causal:
+        admissible = admissible & (k_pos[None, :] <= q_pos[:, None])
+    scores = jnp.where(admissible[None], scores, NEG_INF)
+    sel = topk_threshold_mask(scores, cfg.topk_k,
+                              impl=getattr(cfg, "topk_impl", "auto"))
+    sel = sel & admissible[None]
+    out = _sata_kernel_call(qf, kf, vf, sel, cfg.sata_block,
+                            getattr(cfg, "sata_schedule", "compact"))
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def _sata_kernel_ok(cfg, s: int, cross: bool) -> bool:
+    """Static routing decision for the Pallas path: the sequence must
+    tile exactly by ``cfg.sata_block``, and on a real TPU the block edge
+    must be MXU-tileable (multiple of 128) or Mosaic fails to lower —
+    anything else takes the ``_attend`` fallback.  Sharded runs (cp or
+    a launcher-installed mesh) also fall back: ``pallas_call`` has no
+    SPMD partitioning rule, so routing it would force-replicate the
+    (B·H, S, S) score tensor onto every device."""
+    if not getattr(cfg, "use_sata_kernel", False) or cross:
+        return False
+    if cfg.attention_variant != "topk" or dctx.cp_enabled() \
+            or dctx.mesh_installed():
+        return False
+    blk = getattr(cfg, "sata_block", 128)
+    if s % blk != 0:
+        return False
+    from repro.kernels.ops import default_interpret
+    return default_interpret() or blk % 128 == 0
+
+
 def attention_apply(params: Params, cfg, x: jax.Array,
                     positions: Optional[jax.Array] = None,
                     kv_src: Optional[jax.Array] = None,
@@ -204,7 +307,9 @@ def attention_apply(params: Params, cfg, x: jax.Array,
         qc = s                                       # fallback: single chunk
     n_chunks = s // qc
 
-    if n_chunks == 1:
+    if _sata_kernel_ok(cfg, s, cross):
+        out = _attend_sata_kernel(q, k, v, cfg, q_pos, k_pos, causal)
+    elif n_chunks == 1:
         out = _attend(q, k, v, cfg, q_pos, k_pos, causal=causal)
     else:
         qs = q.reshape(b, n_chunks, qc, cfg.n_heads, cfg.hd)

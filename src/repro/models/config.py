@@ -23,6 +23,10 @@ class ModelConfig:
     topk_impl: str = "auto"                   # sort | bisect | auto
     topk_blocks: int = 0                      # >0: block-topk granularity
     sata_s_f: int = 128                       # SATA tile size (kernel plan)
+    use_sata_kernel: bool = False             # route topk attn through the
+                                              # compacted-grid Pallas kernel
+    sata_block: int = 128                     # kernel q/k tile edge
+    sata_schedule: str = "compact"            # compact | dense kernel grid
     qk_norm: bool = False
     rope_theta: float = 10000.0
     causal: bool = True

@@ -1,0 +1,36 @@
+"""Import guard for the optional ``hypothesis`` dev dependency.
+
+Test modules do ``from hypothesis_compat import given, settings, st``:
+with hypothesis installed (``requirements-dev.txt`` / ``pip install
+-e .[dev]``) the real decorators pass straight through; without it the
+property-based tests are collected but *skipped* — the plain pytest
+tests in the same files still run, and collection never errors.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Stub: strategy constructors become inert placeholders."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        def deco(fn):
+            def stub():
+                pass
+            stub.__name__ = getattr(fn, "__name__", "property_test")
+            return pytest.mark.skip(
+                reason="hypothesis not installed (see requirements-dev.txt)"
+            )(stub)
+        return deco

@@ -1,7 +1,7 @@
 """Algo-2 FSM schedule + tiling + simulator invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (HwConfig, SataPlan, coverage_ok, plan, plan_tiled,
                         schedule_heads, simulate_dense, simulate_gated,

@@ -2,7 +2,7 @@
 invariants, GLOB-escape loop."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.sorting import (HeadType, QType, classify_queries,
                                 classify_with_escape, locality_score,
