@@ -3,7 +3,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test dev-deps bench roofline-kernel
+.PHONY: test dev-deps bench bench-select roofline-kernel
 
 dev-deps:
 	-pip install -r requirements-dev.txt
@@ -15,6 +15,12 @@ test:
 # tile-visit / fetch-byte counts — the perf trajectory across PRs.
 bench:
 	python -m benchmarks.run kernel --json-dir results/bench
+
+# BENCH_select.json: dense-selection vs chunked-selection pipeline
+# (interpret mode) — wall time, traced-HLO quadratic-buffer scan, and
+# occupancy-bound stats; CI uploads it so the trajectory accumulates.
+bench-select:
+	python -m benchmarks.run select --json-dir results/bench
 
 roofline-kernel:
 	python -m repro.launch.roofline --kernel

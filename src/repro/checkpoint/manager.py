@@ -40,7 +40,12 @@ class CheckpointManager:
              blocking: bool = True) -> None:
         self.wait()                                   # one in flight max
         leaves, treedef = _flatten(state)
-        host_leaves = [np.asarray(l) for l in leaves]  # device → host now
+        # device → host snapshot NOW, as an owning copy: np.asarray of a
+        # CPU-backend jax array is a zero-copy view of the device buffer,
+        # and the training loop donates those buffers to the next jitted
+        # step — an async _write still holding views would serialize
+        # whatever XLA reused them for (nondeterministic resume).
+        host_leaves = [np.array(l) for l in leaves]
         tdef_repr = jax.tree_util.tree_structure(state)
 
         def _write():

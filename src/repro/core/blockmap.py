@@ -18,13 +18,23 @@ compacted-grid kernel consumes: per (bh, q_block) a padded ascending
 list of occupied k-block indices plus a count, so the Pallas grid walks
 only occupied slots and the BlockSpec index maps never point the DMA
 engine at an empty tile.
+
+The plan-from-chunks constructors (``occupancy_from_score_chunk``,
+``occupancy_from_scores_chunked``, ``compact_plan_from_chunks``) build
+the same schedule from *streamed* ``q_chunk × Sk`` score tiles and a
+per-row top-k threshold, so neither the (BH, Sq, Sk) score tensor nor
+the boolean mask is ever materialized — the selection state that
+persists is O(Sq) thresholds plus the block-granular plan.
+``occupancy_bound`` turns concrete plan statistics into the static
+``max_kv_blocks`` bound jitted serving paths need for a compact grid.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.sorting import sort_keys_jax
 
@@ -77,8 +87,8 @@ def sata_block_plan(mask: jax.Array, q_block: int, k_block: int,
     return kv_order, q_order, block_map
 
 
-def compact_kv_plan(block_map: jax.Array, pad_to: int | None = None
-                    ) -> Tuple[jax.Array, jax.Array]:
+def compact_kv_plan(block_map: jax.Array, pad_to: int | None = None,
+                    truncate: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Compact each (…, q_block) row of ``block_map`` to the list of
     occupied k-block indices — the scalar-prefetch schedule for the
     compacted-grid kernel.
@@ -112,10 +122,25 @@ def compact_kv_plan(block_map: jax.Array, pad_to: int | None = None
     count or occupied tiles would be dropped — validated here whenever
     the map is concrete; under jit the caller must pass a static
     over-estimate (the safe default ``None`` keeps the full ``nkb``).
+    ``truncate=True`` opts into dropping instead: each row keeps its
+    first ``pad_to`` occupied k-blocks (ascending) and counts are
+    clamped — the explicit approximation a sub-100-percentile
+    ``occupancy_bound`` implies.
     """
     bm = block_map.astype(bool)
     *_, nqb, nkb = bm.shape
     counts = bm.sum(-1).astype(jnp.int32)                       # (..., nqb)
+    if pad_to is not None:
+        if not truncate and not isinstance(counts, jax.core.Tracer) \
+                and pad_to < int(counts.max(initial=0)):
+            raise ValueError(
+                f"pad_to={pad_to} < max occupancy "
+                f"{int(counts.max(initial=0))}: occupied tiles would be "
+                f"silently dropped (pass truncate=True to opt in)")
+        # clamp BEFORE deriving the padding fill: `last`/`fill` must
+        # reference a tile the truncated schedule actually fetches, or
+        # empty-row padding would DMA a tile no slot computes on.
+        counts = jnp.minimum(counts, pad_to)
     # stable sort of (not occupied) → occupied indices first, ascending
     order = jnp.argsort(~bm, axis=-1, stable=True).astype(jnp.int32)
     last = jnp.take_along_axis(
@@ -134,14 +159,186 @@ def compact_kv_plan(block_map: jax.Array, pad_to: int | None = None
     slot = jnp.arange(nkb, dtype=jnp.int32)
     kv_indices = jnp.where(slot < counts[..., None], order, fill[..., None])
     if pad_to is not None:
-        if not isinstance(counts, jax.core.Tracer) \
-                and pad_to < int(counts.max(initial=0)):
-            raise ValueError(
-                f"pad_to={pad_to} < max occupancy "
-                f"{int(counts.max(initial=0))}: occupied tiles would be "
-                f"silently dropped")
         kv_indices = kv_indices[..., :pad_to]
     return kv_indices, counts
+
+
+# ---------------------------------------------------------------------------
+# Plan-from-chunks: selection → occupancy → compact plan without ever
+# materializing the (BH, Sq, Sk) score tensor or boolean mask
+# ---------------------------------------------------------------------------
+
+def bisect_select(scores: jax.Array, threshold: jax.Array) -> jax.Array:
+    """THE selection predicate: ``bf16(score) >= bf16(threshold)`` — the
+    exact compare ``kth_largest_bisect``'s counting pass runs, so its
+    ``count >= k`` loop invariant transfers to whoever applies it.
+    Every consumer (the bisect itself, mask construction, occupancy
+    reduction, the threshold-mode kernel, the chunked differentiation
+    rule) MUST call this one helper: a drifted reimplementation would
+    let the occupancy map and the kernel disagree about which tiles
+    hold work, silently dropping selected keys."""
+    return scores.astype(jnp.bfloat16) >= threshold.astype(jnp.bfloat16)
+
+
+def occupancy_from_score_chunk(scores_chunk: jax.Array, thr_chunk: jax.Array,
+                               admissible: jax.Array, q_block: int,
+                               k_block: int) -> jax.Array:
+    """Tile-level occupancy reduction for one streamed score chunk.
+
+    scores_chunk: (BH, C, Sk) fp32 *raw* (unmasked) scaled scores;
+    thr_chunk:    (BH, C, 1) fp32 per-row top-k threshold
+                  (``kth_largest_bisect`` output);
+    admissible:   (BH|1, C, Sk) bool causal/validity mask.
+    Returns (BH, C/q_block, Sk/k_block) bool tile occupancy.
+
+    The compare is the bisect-consistent bf16 one (see
+    ``kth_largest_bisect``): an admissible entry is selected iff
+    ``bf16(score) >= bf16(thr)`` — the exact predicate the threshold-mode
+    kernel re-evaluates per tile, so the occupancy map and the kernel
+    agree on which tiles hold work.
+    """
+    bh, c, sk = scores_chunk.shape
+    sel = bisect_select(scores_chunk, thr_chunk) & admissible
+    return sel.reshape(bh, c // q_block, q_block,
+                       sk // k_block, k_block).any(axis=(2, 4))
+
+
+def resolve_sel_chunk(chunk: Optional[int], s: int, q_block: int) -> int:
+    """Largest multiple of ``q_block`` that is <= ``chunk`` (default
+    ``q_block``) and divides ``s`` — the streaming granularity of the
+    chunked selection passes.  Requires ``s % q_block == 0``."""
+    assert s % q_block == 0, (s, q_block)
+    c = min(chunk or q_block, s)
+    c = max(q_block, (c // q_block) * q_block)
+    while s % c:
+        c -= q_block
+    return c
+
+
+def stream_score_chunks(q: jax.Array, k: jax.Array, fn, *, chunk: int,
+                        sm_scale: Optional[float] = None,
+                        causal: bool = True,
+                        q_pos: Optional[jax.Array] = None,
+                        k_pos: Optional[jax.Array] = None,
+                        extras: Tuple[jax.Array, ...] = (),
+                        remat: bool = False):
+    """The one streaming loop every chunked-selection consumer shares:
+    materialize one (BH, chunk, Sk) scaled score tile + its causal
+    admissibility mask at a time and apply
+    ``fn(scores_chunk, admissible, *extra_chunks)``.
+
+    ``extras`` are (BH, Sq, …) arrays chunked alongside ``q`` (e.g. the
+    per-row thresholds on a re-stream).  ``remat=True`` wraps each chunk
+    in ``jax.checkpoint`` so a differentiated caller recomputes the tile
+    in backward instead of saving it.  Returns ``fn``'s outputs stacked
+    on a leading (Sq/chunk) axis.
+
+    Centralized on purpose: the bisect-consistency contract (score
+    scaling, NEG_INF admissibility, one tile live at a time) must stay
+    identical between threshold pass, occupancy re-stream, and the
+    chunked differentiation rule — one loop means they cannot drift.
+    """
+    bh, s, d = q.shape
+    sk = k.shape[1]
+    assert s % chunk == 0, (s, chunk)
+    scale = float(sm_scale if sm_scale is not None else 1.0 / np.sqrt(d))
+    n = s // chunk
+    q_pos = (jnp.arange(s, dtype=jnp.int32) if q_pos is None
+             else q_pos.astype(jnp.int32))
+    kp = (jnp.arange(sk, dtype=jnp.int32) if k_pos is None
+          else k_pos.astype(jnp.int32))
+    qs = jnp.moveaxis(q.reshape(bh, n, chunk, d), 1, 0)
+    ps = q_pos.reshape(n, chunk)
+    exs = tuple(jnp.moveaxis(e.reshape(bh, n, chunk, *e.shape[2:]), 1, 0)
+                for e in extras)
+
+    def one(args):
+        q_c, p_c, *e_c = args
+        sc = jnp.einsum("bqd,bkd->bqk", q_c, k,
+                        preferred_element_type=jnp.float32) * scale
+        if causal:
+            adm = (kp[None, :] <= p_c[:, None])[None]
+        else:
+            adm = jnp.ones((1, chunk, sk), dtype=bool)
+        return fn(sc, adm, *e_c)
+
+    if remat:
+        one = jax.checkpoint(one)
+    return jax.lax.map(one, (qs, ps) + exs)
+
+
+def occupancy_from_scores_chunked(
+    q: jax.Array, k: jax.Array, thresholds: jax.Array, *,
+    q_block: int, k_block: int, sm_scale: Optional[float] = None,
+    causal: bool = True, q_pos: Optional[jax.Array] = None,
+    k_pos: Optional[jax.Array] = None, chunk: Optional[int] = None,
+) -> jax.Array:
+    """Re-stream ``q_chunk × Sk`` score tiles against precomputed per-row
+    thresholds and emit the (BH, nqb, nkb) tile occupancy map directly
+    from tile-level reductions — the boolean (BH, Sq, Sk) mask is never
+    built.  Peak live selection state is one (BH, chunk, Sk) tile.
+
+    q: (BH, Sq, D); k: (BH, Sk, D); thresholds: (BH, Sq, 1) fp32.
+    """
+    bh, sq, _ = q.shape
+    sk = k.shape[1]
+    assert sk % k_block == 0, (sk, k_block)
+    chunk = resolve_sel_chunk(chunk, sq, q_block)
+    occ = stream_score_chunks(
+        q, k,
+        lambda sc, adm, t_c: occupancy_from_score_chunk(sc, t_c, adm,
+                                                        q_block, k_block),
+        chunk=chunk, sm_scale=sm_scale, causal=causal, q_pos=q_pos,
+        k_pos=k_pos, extras=(thresholds,))          # (n, BH, chunk/qb, nkb)
+    return jnp.moveaxis(occ, 0, 1).reshape(bh, sq // q_block, sk // k_block)
+
+
+def compact_plan_from_chunks(
+    q: jax.Array, k: jax.Array, thresholds: jax.Array, *,
+    q_block: int, k_block: int, sm_scale: Optional[float] = None,
+    causal: bool = True, q_pos: Optional[jax.Array] = None,
+    k_pos: Optional[jax.Array] = None, chunk: Optional[int] = None,
+    pad_to: Optional[int] = None, truncate: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Selection → compact schedule in one call, mask-free: streamed
+    occupancy (``occupancy_from_scores_chunked``) followed by
+    ``compact_kv_plan``.  Returns (block_map, kv_indices, kv_counts)."""
+    bm = occupancy_from_scores_chunked(
+        q, k, thresholds, q_block=q_block, k_block=k_block,
+        sm_scale=sm_scale, causal=causal, q_pos=q_pos, k_pos=k_pos,
+        chunk=chunk)
+    kv_indices, kv_counts = compact_kv_plan(bm, pad_to=pad_to,
+                                            truncate=truncate)
+    return bm, kv_indices, kv_counts
+
+
+def occupancy_bound(kv_counts, pct: float = 100.0) -> int:
+    """Static per-row occupancy bound from concrete plan statistics.
+
+    ``kv_counts``: (…, nqb) int occupied-k-block counts from a
+    calibration run (``compact_kv_plan`` / ``compact_plan_from_chunks``).
+    Returns ``ceil(pct-th percentile)`` as a plain int, floored at 1 —
+    the value to pass as ``max_kv_blocks`` so *jitted* serving paths get
+    a compact grid without a concrete mask in hand.
+
+    ``pct=100`` is exact (no tile ever dropped).  Lower percentiles
+    trade tail rows for a smaller grid: a row whose occupancy exceeds
+    the bound keeps its first ``bound`` occupied k-blocks (ascending)
+    and drops the rest — pass ``truncate=True`` to ``compact_kv_plan``
+    to opt into that approximation on concrete maps (under jit the
+    validation cannot run and truncation is implicit).
+    Host-side by design: raises on tracers (derive the bound offline,
+    then bake it in as a static argument).
+    """
+    if isinstance(kv_counts, jax.core.Tracer):
+        raise TypeError(
+            "occupancy_bound needs concrete counts — run the planner on "
+            "calibration data outside jit, then pass the result as the "
+            "static max_kv_blocks")
+    counts = np.asarray(kv_counts).reshape(-1)
+    if counts.size == 0:
+        return 1
+    return max(1, int(np.ceil(np.percentile(counts, pct))))
 
 
 def block_skip_fraction(block_map: jax.Array) -> jax.Array:
@@ -155,7 +352,6 @@ def fixed_occupancy_map(rng, bh: int, nqb: int, nkb: int, occ: int):
     produces, and the shape benchmarks/roofline use so the padded compact
     grid (`P = occ`) actually shrinks (a Bernoulli map almost surely has
     one fully-occupied row pinning P at ``nkb``)."""
-    import numpy as np
     bm = np.zeros((bh, nqb, nkb), dtype=bool)
     for b in range(bh):
         for i in range(nqb):

@@ -1,0 +1,103 @@
+"""Top-k selection primitives — shared by the model layer and the
+kernel planner (keeping ``kernels/`` free of ``models/`` imports).
+
+``kth_largest_bisect`` is the distributed/streaming-friendly top-k
+threshold; ``select_thresholds_chunked`` is pass 1 of the chunked
+selection pipeline (fused with the tile-occupancy reduction of pass 2):
+it streams ``chunk × Sk`` score tiles through
+``core.blockmap.stream_score_chunks`` so the dense (BH, Sq, Sk) score
+tensor is never materialized — only (BH, Sq, 1) thresholds and the
+block-granular occupancy map persist.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockmap import (bisect_select,  # noqa: F401  (re-export)
+                                 occupancy_from_score_chunk,
+                                 resolve_sel_chunk, stream_score_chunks)
+
+NEG_INF = -2.0 ** 30
+
+
+def kth_largest_bisect(scores: jax.Array, k: int, iters: int = 16
+                       ) -> jax.Array:
+    """Distributed-friendly top-k threshold: fixed-iteration bisection on
+    the score range, converging to the k-th largest value.
+
+    Every iteration is an elementwise compare + a tiny row reduction —
+    fully shardable along the key dim (a sequence-sharded KV cache needs
+    only (B,KV,G,1)-sized all-reduces per step instead of resharding the
+    whole score tensor for a sort), and fully *chunkable* along the query
+    dim (every reduction is row-local, so the chunked selection pass
+    gets bit-identical thresholds).  Counting runs on a bf16 copy (half
+    the bandwidth of the dominant pass; selection boundaries are already
+    fuzzy at bf16 score precision) and 16 iterations resolve the
+    threshold to range/2^16.  Returns a threshold t with
+    count(scores >= t) >= k (ties may admit a few extra keys — the same
+    superset semantics as the sort threshold)."""
+    valid = scores > NEG_INF / 2
+    sc = jnp.where(valid, scores, jnp.inf)
+    lo = jnp.minimum(jnp.min(sc, axis=-1, keepdims=True), 0.0) - 1.0
+    hi = jnp.max(jnp.where(valid, scores, -jnp.inf), axis=-1, keepdims=True)
+    cnt_src = jnp.where(valid, scores, -jnp.inf).astype(jnp.bfloat16)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum(bisect_select(cnt_src, mid).astype(jnp.int32),
+                      axis=-1, keepdims=True)
+        take = cnt >= k                    # threshold lies at or above mid
+        return (jnp.where(take, mid, lo), jnp.where(take, hi, mid))
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    # Loop invariant: count(cnt_src >= bf16(lo)) >= k.  The caller must
+    # apply the mask with the SAME bf16 comparison or the invariant
+    # breaks (fp32 compare against a bf16-counted threshold undershoots).
+    return jax.lax.stop_gradient(lo)
+
+
+def topk_mask_bisect(scores: jax.Array, k: int) -> jax.Array:
+    """Boolean top-k mask via bisection, compare-consistent with the
+    bf16 counting pass (guarantees >= k selected per row)."""
+    lo = kth_largest_bisect(scores, k)
+    valid = scores > NEG_INF / 2
+    return bisect_select(jnp.where(valid, scores, -jnp.inf), lo)
+
+
+def select_thresholds_chunked(q: jax.Array, k: jax.Array, k_sel: int, *,
+                              q_pos: Optional[jax.Array] = None,
+                              k_pos: Optional[jax.Array] = None,
+                              causal: bool = True,
+                              sm_scale: Optional[float] = None,
+                              chunk: Optional[int] = None,
+                              q_block: int = 128, k_block: int = 128
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selection, passes 1+2 fused in one stream: per resident
+    ``chunk × Sk`` score tile, bisect each row's top-k threshold
+    (row-local ⇒ bit-identical to the full-matrix bisect) and reduce
+    the same tile to block occupancy — the compare the occupancy uses
+    is the exact bf16 predicate the threshold-mode kernel re-evaluates.
+
+    q: (BH, Sq, D); k: (BH, Sk, D).
+    Returns ``(thresholds (BH, Sq, 1) fp32, block_map (BH, nqb, nkb))``.
+    """
+    bh, s, d = q.shape
+    sk = k.shape[1]
+    assert sk % k_block == 0, (sk, k_block)
+    chunk = resolve_sel_chunk(chunk, s, q_block)
+
+    def _fn(sc, adm):
+        thr_c = kth_largest_bisect(jnp.where(adm, sc, NEG_INF), k_sel)
+        occ_c = occupancy_from_score_chunk(sc, thr_c, adm, q_block, k_block)
+        return thr_c, occ_c
+
+    thr, occ = stream_score_chunks(q, k, _fn, chunk=chunk,
+                                   sm_scale=sm_scale, causal=causal,
+                                   q_pos=q_pos, k_pos=k_pos)
+    thr = jnp.moveaxis(thr, 0, 1).reshape(bh, s, 1)
+    bm = jnp.moveaxis(occ, 0, 1).reshape(bh, s // q_block, sk // k_block)
+    return thr, bm

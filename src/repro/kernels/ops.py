@@ -9,6 +9,12 @@ the Pallas kernel, end to end.
     skipping (``@pl.when`` on the block map); kept as the measured
     baseline.
 
+``selection`` picks how the top-k set is produced and shipped:
+``"dense"`` takes a caller-materialized (BH, Sq, Sk) mask through the
+full SATA plan; ``"chunked"`` streams score tiles to a per-row bisect
+threshold and block-level plan (``core.blockmap``) and lets the kernel
+re-derive the mask per tile — nothing quadratic is ever live.
+
 ``interpret=None`` auto-detects the backend: compiled Mosaic on TPU,
 interpret mode elsewhere (CPU CI).  Pass an explicit bool to override.
 """
@@ -21,8 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blockmap import (compact_kv_plan, identity_block_plan,
-                                 sata_block_plan)
+from repro.core.blockmap import (compact_kv_plan, compact_plan_from_chunks,  # noqa: F401  (re-export)
+                                 identity_block_plan, occupancy_bound,  # noqa: F401  (re-export)
+                                 occupancy_from_scores_chunked,
+                                 resolve_sel_chunk, sata_block_plan)
+from repro.core.selection import select_thresholds_chunked
 from repro.kernels.ref import ref_block_attention
 from repro.kernels.sata_attention import (sata_block_attention,
                                           sata_block_attention_compact)
@@ -36,32 +45,91 @@ def default_interpret() -> bool:
 @functools.partial(jax.jit, static_argnames=("q_block", "k_block",
                                              "use_sata", "interpret",
                                              "exact", "schedule",
-                                             "max_kv_blocks"))
+                                             "max_kv_blocks", "selection",
+                                             "topk_k", "causal",
+                                             "sel_chunk"))
 def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
-                   scores_mask: jax.Array, *, q_block: int = 128,
+                   scores_mask: Optional[jax.Array] = None, *,
+                   q_block: int = 128,
                    k_block: int = 128, use_sata: bool = True,
                    exact: bool = True, interpret: Optional[bool] = None,
                    schedule: str = "compact",
-                   max_kv_blocks: Optional[int] = None
+                   max_kv_blocks: Optional[int] = None,
+                   selection: str = "dense",
+                   topk_k: Optional[int] = None,
+                   causal: bool = False,
+                   sel_chunk: Optional[int] = None,
+                   thresholds: Optional[jax.Array] = None,
+                   block_map: Optional[jax.Array] = None,
+                   q_pos: Optional[jax.Array] = None,
+                   k_pos: Optional[jax.Array] = None,
                    ) -> Tuple[jax.Array, jax.Array]:
     """Top-k selective attention through the SATA plan + Pallas kernel.
 
-    q/k_/v: (BH, S, D); scores_mask: (BH, Sq, Sk) bool top-k selection.
-    Returns (output in ORIGINAL query order, block_map) — block skip
-    fraction is ``1 - block_map.mean()``.
+    q/k_/v: (BH, S, D).  Returns (output in ORIGINAL query order,
+    block_map) — block skip fraction is ``1 - block_map.mean()``.
+
+    ``selection`` picks how the top-k set reaches the kernel:
+      * ``"dense"``   — the caller hands in ``scores_mask``
+        (BH, Sq, Sk) bool; the full SATA plan (sort → permute → block
+        map) runs on it.  Simple, but the mask (and whatever score
+        tensor produced it) is a quadratic HBM resident.
+      * ``"chunked"`` — mask-free: pass 1 streams ``sel_chunk × Sk``
+        score tiles to bisect the per-row top-k threshold
+        (``topk_k`` keys per query, O(Sq) thresholds persist), pass 2
+        re-streams tiles to emit the block occupancy map and compact
+        plan (``core.blockmap.compact_plan_from_chunks``), and the
+        kernel re-derives the element mask per tile from the threshold.
+        Nothing quadratic is ever materialized.  Keys stay in their
+        original order regardless of ``use_sata`` (the token-level SATA
+        sort needs the dense mask — its Gram matrix is itself (Sk, Sk)
+        — so the chunked route trades sort concentration for O(S)
+        selection memory and ``use_sata`` has no effect here).  Compact
+        schedule only; ``causal`` gates admissibility; precomputed
+        ``thresholds`` (BH, Sq, 1) and/or ``block_map`` skip the
+        corresponding pass (the model layer's VJP reuses pass-1/2
+        outputs this way).
 
     ``max_kv_blocks`` (compact schedule only) statically bounds the
     occupied k-blocks per q-row, shrinking the kernel grid's innermost
     dimension from ``nkb`` to that bound.  Callers with a concrete block
     map get it from ``int(kv_counts.max())`` (``compact_kv_plan`` raises
     on a concrete under-estimate); inside jit it must be a static
-    over-estimate — an under-estimate cannot be detected there and drops
-    occupied tiles (the default ``None`` keeps the safe full ``nkb``).
+    over-estimate — derive it from calibration traffic with
+    ``core.blockmap.occupancy_bound`` (an under-estimate cannot be
+    detected in-graph and drops occupied tiles; the default ``None``
+    keeps the safe full ``nkb``).
     """
     if schedule not in ("compact", "dense"):
         raise ValueError(f"unknown schedule {schedule!r}")
+    if selection not in ("dense", "chunked"):
+        raise ValueError(f"unknown selection {selection!r}")
     if interpret is None:
         interpret = default_interpret()
+    if selection == "chunked":
+        if schedule != "compact":
+            raise ValueError("chunked selection requires the compact "
+                             "schedule (the dense grid has no threshold "
+                             "mode)")
+        return _sata_attention_chunked(
+            q, k_, v, topk_k=topk_k, q_block=q_block, k_block=k_block,
+            exact=exact, causal=causal, interpret=interpret,
+            max_kv_blocks=max_kv_blocks, sel_chunk=sel_chunk,
+            thresholds=thresholds, block_map=block_map,
+            q_pos=q_pos, k_pos=k_pos)
+    if scores_mask is None:
+        raise ValueError("selection='dense' needs scores_mask")
+    if causal or any(a is not None for a in
+                     (topk_k, thresholds, block_map, q_pos, k_pos,
+                      sel_chunk)):
+        # reject rather than silently ignore: on this path the mask IS
+        # the selection — causality included — so a caller passing
+        # causal=True (or any chunked-only operand) is holding the API
+        # wrong and would otherwise get a quiet causality leak.
+        raise ValueError(
+            "selection='dense' takes its selection (causality included) "
+            "entirely from scores_mask; causal/topk_k/thresholds/"
+            "block_map/q_pos/k_pos/sel_chunk are chunked-only arguments")
     plan_fn = sata_block_plan if use_sata else identity_block_plan
     if use_sata:
         kv_order, q_order, block_map = plan_fn(scores_mask, q_block, k_block)
@@ -91,6 +159,49 @@ def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
     # scatter back to original query order
     inv = jnp.argsort(q_order, axis=-1)
     out = jnp.take_along_axis(out_p, inv[:, :, None], axis=1)
+    return out, block_map
+
+
+def _sata_attention_chunked(q, k_, v, *, topk_k, q_block, k_block, exact,
+                            causal, interpret, max_kv_blocks, sel_chunk,
+                            thresholds, block_map, q_pos, k_pos):
+    """Mask-free selection → plan → threshold-mode kernel (see
+    ``sata_attention``).  Keys keep their original order, so no
+    permutation or scatter-back is needed."""
+    bh, sq, d = q.shape
+    sk = k_.shape[1]
+    if sq % q_block or sk % k_block:
+        raise ValueError(f"S must tile by the block edge: {(sq, sk)} "
+                         f"vs {(q_block, k_block)}")
+    sm_scale = 1.0 / np.sqrt(d)
+    chunk = resolve_sel_chunk(sel_chunk, sq, q_block)
+    q_pos = (jnp.arange(sq, dtype=jnp.int32) if q_pos is None
+             else q_pos.astype(jnp.int32))
+    k_pos = (jnp.arange(sk, dtype=jnp.int32) if k_pos is None
+             else k_pos.astype(jnp.int32))
+    if thresholds is None:
+        if topk_k is None:
+            raise ValueError("selection='chunked' needs topk_k (or "
+                             "precomputed thresholds)")
+        thresholds, bm = select_thresholds_chunked(
+            q, k_, topk_k, q_pos=q_pos, k_pos=k_pos, causal=causal,
+            sm_scale=sm_scale, chunk=chunk, q_block=q_block,
+            k_block=k_block)
+        if block_map is None:
+            block_map = bm
+    if block_map is None:
+        block_map = occupancy_from_scores_chunked(
+            q, k_, thresholds, q_block=q_block, k_block=k_block,
+            sm_scale=sm_scale, causal=causal, q_pos=q_pos, k_pos=k_pos,
+            chunk=chunk)
+    kv_indices, kv_counts = compact_kv_plan(block_map, pad_to=max_kv_blocks)
+    pos_q = jnp.broadcast_to(q_pos[None, :, None], (bh, sq, 1))
+    pos_k = jnp.broadcast_to(k_pos[None, :, None], (bh, sk, 1))
+    out = sata_block_attention_compact(
+        q, k_, v, kv_indices, kv_counts,
+        thresholds=thresholds if exact else None,
+        q_pos=pos_q, k_pos=pos_k, causal=causal,
+        q_block=q_block, k_block=k_block, interpret=interpret)
     return out, block_map
 
 

@@ -98,9 +98,17 @@ def train(arch: str, smoke: bool = True, steps: int = 20,
 
     wd = Watchdog()
     losses = []
+    gnorms = []
     with activate_mesh(mesh):
         for step in range(start_step, steps):
             if fail_at is not None and step == fail_at:
+                if mgr is not None:
+                    # the simulated crash kills the *compute* process;
+                    # an async save already in flight still lands (the
+                    # writer is logically a separate service).  Without
+                    # this join, a restart could race the write and
+                    # silently resume from scratch.
+                    mgr.wait()
                 raise RuntimeError(f"injected failure at step {step}")
             t0 = time.time()
             hb = pipe.next_batch()
@@ -108,6 +116,7 @@ def train(arch: str, smoke: bool = True, steps: int = 20,
             state, metrics = jitted(state, db)
             loss = float(metrics["loss"])
             losses.append(loss)
+            gnorms.append(float(metrics["grad_norm"]))
             wd.observe(time.time() - t0)
             if step % log_every == 0:
                 print(f"[train] step {step} loss {loss:.4f} "
@@ -120,7 +129,7 @@ def train(arch: str, smoke: bool = True, steps: int = 20,
         mgr.save(steps, state, extra={"pipeline": pipe.save_state()})
         mgr.wait()
     dctx.clear()
-    return {"losses": losses, "final_state": state,
+    return {"losses": losses, "gnorms": gnorms, "final_state": state,
             "stragglers": wd.flagged}
 
 

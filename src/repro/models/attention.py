@@ -6,6 +6,22 @@ the k-th value — identical softmax result as index masking), softmax in
 fp32 over the kept set.  Query-chunked so the (q, s) score tile never
 exceeds ``q_chunk × S`` — the TPU analogue of SATA's S_f tiling, and the
 granularity at which the Pallas block-sparse kernel skips empty tiles.
+
+Kernel-route selection is two-pass and chunked by default wherever the
+bisect threshold applies (``_chunked_selection_on``): pass 1
+(``_select_chunked``) streams ``q_chunk × S`` score tiles and bisects
+each row's top-k threshold with ``kth_largest_bisect`` — its
+compare+count reduction is row-local, so only (B·H, S, 1) thresholds
+persist — and, fused in the same stream, reduces each resident tile to
+the kernel's block occupancy map.  The Pallas kernel then re-derives the
+element mask per tile from the threshold (threshold mode), so the dense
+(B·H, S, S) fp32 score tensor and boolean mask are never materialized.
+Training follows suit: the chunked route's custom VJP
+(``_sata_kernel_chunked_call``) saves (q, k, v, thresholds) — O(S)
+selection state instead of the dense route's (B·H, S, S) ``sel``
+residual — and its backward recomputes attention per q-chunk through
+``_selective_ref_chunked`` (``jax.checkpoint`` per chunk), keeping the
+backward's peak at one score tile as well.
 """
 from __future__ import annotations
 
@@ -16,12 +32,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.selection import (NEG_INF, kth_largest_bisect,  # noqa: F401
+                                  select_thresholds_chunked,
+                                  topk_mask_bisect)
 from repro.distributed import ctx as dctx
 from repro.distributed.ctx import constrain_heads, constrain_scores
 from repro.models.layers import (Params, _dtype, apply_rope, dense_init,
                                  rms_head_norm)
-
-NEG_INF = -2.0 ** 30
 
 
 def attention_init(key, cfg, cross: bool = False) -> Params:
@@ -62,48 +79,15 @@ def kth_largest(scores: jax.Array, k: int) -> jax.Array:
                                 scores.shape[-1] - k + 1, axis=-1)
 
 
-def kth_largest_bisect(scores: jax.Array, k: int, iters: int = 16
-                       ) -> jax.Array:
-    """Distributed-friendly top-k threshold: fixed-iteration bisection on
-    the score range, converging to the k-th largest value.
-
-    Every iteration is an elementwise compare + a tiny row reduction —
-    fully shardable along the key dim (a sequence-sharded KV cache needs
-    only (B,KV,G,1)-sized all-reduces per step instead of resharding the
-    whole score tensor for a sort).  Counting runs on a bf16 copy (half
-    the bandwidth of the dominant pass; selection boundaries are already
-    fuzzy at bf16 score precision) and 16 iterations resolve the
-    threshold to range/2^16.  Returns a threshold t with
-    count(scores >= t) >= k (ties may admit a few extra keys — the same
-    superset semantics as the sort threshold)."""
-    valid = scores > NEG_INF / 2
-    sc = jnp.where(valid, scores, jnp.inf)
-    lo = jnp.minimum(jnp.min(sc, axis=-1, keepdims=True), 0.0) - 1.0
-    hi = jnp.max(jnp.where(valid, scores, -jnp.inf), axis=-1, keepdims=True)
-    cnt_src = jnp.where(valid, scores, -jnp.inf).astype(jnp.bfloat16)
-
-    def body(_, lohi):
-        lo, hi = lohi
-        mid = 0.5 * (lo + hi)
-        cnt = jnp.sum((cnt_src >= mid.astype(jnp.bfloat16))
-                      .astype(jnp.int32), axis=-1, keepdims=True)
-        take = cnt >= k                    # threshold lies at or above mid
-        return (jnp.where(take, mid, lo), jnp.where(take, hi, mid))
-
-    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    # Loop invariant: count(cnt_src >= bf16(lo)) >= k.  The caller must
-    # apply the mask with the SAME bf16 comparison or the invariant
-    # breaks (fp32 compare against a bf16-counted threshold undershoots).
-    return jax.lax.stop_gradient(lo)
+BISECT_AUTO_MIN_S = 8192     # "auto" switches sort → bisect at this row len
 
 
-def topk_mask_bisect(scores: jax.Array, k: int) -> jax.Array:
-    """Boolean top-k mask via bisection, compare-consistent with the
-    bf16 counting pass (guarantees >= k selected per row)."""
-    lo = kth_largest_bisect(scores, k)
-    valid = scores > NEG_INF / 2
-    cnt_src = jnp.where(valid, scores, -jnp.inf).astype(jnp.bfloat16)
-    return cnt_src >= lo.astype(jnp.bfloat16)
+def _use_bisect_impl(impl: str, n: int) -> bool:
+    """Single source of truth for the sort-vs-bisect threshold decision:
+    ``topk_threshold_mask`` and the chunked-selection routing
+    (``_chunked_selection_on``) must agree, or "auto" routing would
+    silently change the selected superset."""
+    return impl == "bisect" or (impl == "auto" and n >= BISECT_AUTO_MIN_S)
 
 
 def topk_threshold_mask(scores: jax.Array, k: int,
@@ -119,7 +103,7 @@ def topk_threshold_mask(scores: jax.Array, k: int,
     n = scores.shape[-1]
     if k >= n:
         return jnp.ones_like(scores, dtype=bool)
-    if impl == "bisect" or (impl == "auto" and n >= 8192):
+    if _use_bisect_impl(impl, n):
         return topk_mask_bisect(scores, k)
     return scores >= kth_largest(scores, k)
 
@@ -158,6 +142,33 @@ def _attend(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
     return out.reshape(b, nq, h, hd)
 
 
+def _select_chunked(qf: jax.Array, kf: jax.Array, k_sel: int, *,
+                    q_pos: jax.Array, k_pos: jax.Array,
+                    causal: bool = True,
+                    sm_scale: Optional[float] = None,
+                    chunk: Optional[int] = None,
+                    q_block: int = 128, k_block: int = 128
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selection pipeline, pass 1 (+ fused pass 2): stream
+    ``chunk × Sk`` score tiles, bisect each row's top-k threshold
+    (``kth_largest_bisect`` — its compare+count reduction is row-local,
+    so chunking over queries is exact), and reduce the same resident
+    tile to block occupancy.  The model-layer entry point; the
+    implementation is ``core.selection.select_thresholds_chunked`` (the
+    kernel planner calls it there without importing the model layer).
+
+    qf: (BH, Sq, D); kf: (BH, Sk, D); q_pos (Sq,) / k_pos (Sk,).
+    Returns ``(thresholds (BH, Sq, 1) fp32, block_map (BH, nqb, nkb))``.
+    Nothing quadratic is ever live: peak selection state is one
+    (BH, chunk, Sk) score tile, and only O(Sq) thresholds plus the
+    block-granular occupancy map persist.
+    """
+    return select_thresholds_chunked(qf, kf, k_sel, q_pos=q_pos,
+                                     k_pos=k_pos, causal=causal,
+                                     sm_scale=sm_scale, chunk=chunk,
+                                     q_block=q_block, k_block=k_block)
+
+
 def _selective_ref(qf: jax.Array, kf: jax.Array, vf: jax.Array,
                    sel: jax.Array) -> jax.Array:
     """Pure-jnp exact selective attention over flattened heads — the
@@ -173,26 +184,68 @@ def _selective_ref(qf: jax.Array, kf: jax.Array, vf: jax.Array,
     return out.astype(qf.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
-def _sata_kernel_call(qf, kf, vf, sel, blk: int, schedule: str):
+def _selective_ref_chunked(qf, kf, vf, thr, q_pos, k_pos, *,
+                           causal: bool, chunk: int) -> jax.Array:
+    """Chunked exact selective attention re-derived from the per-row
+    top-k *threshold* — the differentiation rule for the chunked kernel
+    route.  Rides ``core.blockmap.stream_score_chunks`` with
+    ``remat=True``, so the backward recomputes one (BH, chunk, Sk)
+    score tile at a time instead of saving (BH, Sq, Sk)."""
+    from repro.core.blockmap import bisect_select, stream_score_chunks
+    bh, s, d = qf.shape
+
+    def _fn(sc, adm, t_c):
+        sel = bisect_select(sc, t_c) & adm
+        sc = jnp.where(sel, sc, NEG_INF)
+        any_key = sel.any(axis=-1, keepdims=True)
+        p = jax.nn.softmax(sc, axis=-1)
+        p = jnp.where(any_key, p, 0.0)
+        return jnp.einsum("bqk,bkd->bqd", p, vf.astype(jnp.float32))
+
+    out = stream_score_chunks(qf, kf, _fn, chunk=chunk, causal=causal,
+                              q_pos=q_pos, k_pos=k_pos, extras=(thr,),
+                              remat=True)
+    return jnp.moveaxis(out, 0, 1).reshape(bh, s, d).astype(qf.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _sata_kernel_call(qf, kf, vf, sel, blk: int, schedule: str,
+                      max_kv_blocks: Optional[int]):
     """Pallas forward + reference-recompute backward: ``pl.pallas_call``
     defines no VJP, so training paths differentiate through
-    ``_selective_ref`` (identical math; dense recompute — see ROADMAP
-    open item on fusing selection into the kernel)."""
+    ``_selective_ref`` (identical math; dense recompute).  The residual
+    carries the full (BH, Sq, Sk) ``sel`` mask — the chunked route
+    (``_sata_kernel_chunked_call``) replaces it with O(Sq) thresholds."""
     from repro.kernels.ops import sata_attention as sata_kernel_attention
     out, _ = sata_kernel_attention(qf, kf, vf, sel, q_block=blk,
                                    k_block=blk, exact=True,
-                                   schedule=schedule)
+                                   schedule=schedule,
+                                   max_kv_blocks=max_kv_blocks)
     return out
 
 
-def _sata_kernel_fwd(qf, kf, vf, sel, blk, schedule):
-    return _sata_kernel_call(qf, kf, vf, sel, blk, schedule), \
-        (qf, kf, vf, sel)
+def _sata_kernel_fwd(qf, kf, vf, sel, blk, schedule, max_kv_blocks):
+    return _sata_kernel_call(qf, kf, vf, sel, blk, schedule,
+                             max_kv_blocks), (qf, kf, vf, sel)
 
 
-def _sata_kernel_bwd(blk, schedule, res, g):
+def _check_bwd_untruncated(max_kv_blocks, nkb: int) -> None:
+    """A truncating ``max_kv_blocks`` drops occupied tiles in the
+    *forward* kernel, but the reference recompute differentiates the
+    full selected set — the gradients would belong to a different
+    function than the value.  The bound is a serving-path feature;
+    refuse to train through it rather than bias gradients silently."""
+    if max_kv_blocks is not None and max_kv_blocks < nkb:
+        raise NotImplementedError(
+            f"backward through a truncating max_kv_blocks "
+            f"({max_kv_blocks} < nkb={nkb}) would differentiate a "
+            f"different function than the forward computes — unset "
+            f"sata_max_kv_blocks (or use the full nkb) for training")
+
+
+def _sata_kernel_bwd(blk, schedule, max_kv_blocks, res, g):
     qf, kf, vf, sel = res
+    _check_bwd_untruncated(max_kv_blocks, sel.shape[-1] // blk)
     _, vjp = jax.vjp(lambda q, k, v: _selective_ref(q, k, v, sel),
                      qf, kf, vf)
     dq, dk, dv = vjp(g)
@@ -202,19 +255,99 @@ def _sata_kernel_bwd(blk, schedule, res, g):
 _sata_kernel_call.defvjp(_sata_kernel_fwd, _sata_kernel_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _sata_kernel_chunked_call(qf, kf, vf, thr, bm, q_pos, k_pos,
+                              blk: int, causal: bool, chunk: int,
+                              max_kv_blocks: Optional[int]):
+    """Chunked-selection kernel route: the Pallas kernel re-derives the
+    element mask per tile from ``thr`` (threshold mode), and the custom
+    VJP recomputes through ``_selective_ref_chunked`` from the same
+    threshold — the residual is (q, k, v, thr): O(Sq) selection state
+    instead of the dense route's (BH, Sq, Sk) ``sel`` mask."""
+    from repro.kernels.ops import sata_attention as sata_kernel_attention
+    out, _ = sata_kernel_attention(
+        qf, kf, vf, None, q_block=blk, k_block=blk, exact=True,
+        schedule="compact", selection="chunked", causal=causal,
+        sel_chunk=chunk, max_kv_blocks=max_kv_blocks,
+        thresholds=thr, block_map=bm, q_pos=q_pos, k_pos=k_pos)
+    return out
+
+
+def _sata_kernel_chunked_fwd(qf, kf, vf, thr, bm, q_pos, k_pos,
+                             blk, causal, chunk, max_kv_blocks):
+    out = _sata_kernel_chunked_call(qf, kf, vf, thr, bm, q_pos, k_pos,
+                                    blk, causal, chunk, max_kv_blocks)
+    return out, (qf, kf, vf, thr, bm, q_pos, k_pos)
+
+
+def _sata_kernel_chunked_bwd(blk, causal, chunk, max_kv_blocks, res, g):
+    qf, kf, vf, thr, bm, q_pos, k_pos = res
+    _check_bwd_untruncated(max_kv_blocks, bm.shape[-1])
+    _, vjp = jax.vjp(
+        lambda q, k, v: _selective_ref_chunked(q, k, v, thr, q_pos, k_pos,
+                                               causal=causal, chunk=chunk),
+        qf, kf, vf)
+    dq, dk, dv = vjp(g)
+    f0 = lambda a: np.zeros(a.shape, jax.dtypes.float0)   # int/bool inputs
+    # the threshold is a discrete selection decision — zero tangent,
+    # matching the dense route's float0 on `sel`
+    return dq, dk, dv, jnp.zeros_like(thr), f0(bm), f0(q_pos), f0(k_pos)
+
+
+_sata_kernel_chunked_call.defvjp(_sata_kernel_chunked_fwd,
+                                 _sata_kernel_chunked_bwd)
+
+
+def _chunked_selection_on(cfg, s: int) -> bool:
+    """Route top-k selection through the chunked (mask-free) pipeline?
+
+    ``cfg.sata_selection``: "chunked" / "dense" force a route; "auto"
+    goes chunked exactly when ``topk_threshold_mask`` would pick the
+    bisect threshold anyway (``topk_impl`` "bisect", or "auto" at long
+    S) — the chunked pass-1 threshold is bit-identical to the dense
+    bisect one, so "auto" never changes the selected superset.  The
+    chunked route only exists on the compact grid, so a
+    ``sata_schedule="dense"`` baseline keeps dense selection under
+    "auto" and is rejected under a forced "chunked"."""
+    mode = getattr(cfg, "sata_selection", "auto")
+    schedule = getattr(cfg, "sata_schedule", "compact")
+    if mode == "chunked":
+        if schedule != "compact":
+            raise ValueError(
+                "sata_selection='chunked' requires sata_schedule="
+                "'compact' (the dense grid has no threshold mode)")
+        return True
+    if mode == "dense" or schedule != "compact":
+        return False
+    return _use_bisect_impl(getattr(cfg, "topk_impl", "auto"), s)
+
+
 def _attend_sata_kernel(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
                         q_pos: jax.Array, k_pos: jax.Array,
                         causal: bool) -> jax.Array:
     """Top-k attention through the compacted-grid SATA Pallas kernel.
 
-    q: (B, S, H, hd); k/v: (B, S, KV, hd).  Scores are computed once for
-    top-k selection (as in ``_attend``); the attention itself then runs
-    through plan → permute → kernel (``kernels.ops.sata_attention``,
-    exact mode), so K/V tiles emptied by the SATA sort are neither
-    fetched nor visited.  Differentiable: the kernel call carries a
-    custom VJP that recomputes through ``_selective_ref``.  Only valid
-    when S divides ``cfg.sata_block`` — ``attention_apply`` falls back
-    to ``_attend`` otherwise.
+    q: (B, S, H, hd); k/v: (B, S, KV, hd).  Two selection routes feed
+    the kernel (``_chunked_selection_on`` picks one):
+
+    * dense — scores are computed once as a full (B·H, S, S) fp32
+      tensor, top-k masked, and the attention runs through
+      plan → permute → kernel (``kernels.ops.sata_attention``, exact
+      mode), so K/V tiles emptied by the SATA sort are neither fetched
+      nor visited.  The custom VJP recomputes through
+      ``_selective_ref`` from the stored ``sel`` mask.
+    * chunked — ``_select_chunked`` streams ``q_chunk × S`` score tiles
+      to bisect each row's top-k threshold and reduce tile occupancy in
+      the same pass; the kernel then re-derives the element mask per
+      tile from the (B·H, S, 1) thresholds (threshold mode), so neither
+      the score tensor nor the boolean mask is ever materialized.  The
+      custom VJP recomputes through ``_selective_ref_chunked`` from the
+      threshold — the residual shrinks from O(S²) to O(S).  Keys stay
+      unsorted (the token-level SATA sort would itself need a quadratic
+      Gram matrix) and the schedule is always the compact grid.
+
+    Only valid when S divides ``cfg.sata_block`` — ``attention_apply``
+    falls back to ``_attend`` otherwise.
     """
     b, s, h, hd = q.shape
     kv = k.shape[2]
@@ -225,18 +358,32 @@ def _attend_sata_kernel(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
     kf = kq.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
     vf = vq.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
-    scores = jnp.einsum("bqd,bkd->bqk", qf, kf,
-                        preferred_element_type=jnp.float32)
-    scores = scores * (1.0 / np.sqrt(hd))
-    admissible = jnp.ones((s, s), dtype=bool)
-    if causal:
-        admissible = admissible & (k_pos[None, :] <= q_pos[:, None])
-    scores = jnp.where(admissible[None], scores, NEG_INF)
-    sel = topk_threshold_mask(scores, cfg.topk_k,
-                              impl=getattr(cfg, "topk_impl", "auto"))
-    sel = sel & admissible[None]
-    out = _sata_kernel_call(qf, kf, vf, sel, cfg.sata_block,
-                            getattr(cfg, "sata_schedule", "compact"))
+    blk = cfg.sata_block
+    mkb = getattr(cfg, "sata_max_kv_blocks", None)
+    if _chunked_selection_on(cfg, s):
+        from repro.core.blockmap import resolve_sel_chunk
+        chunk = resolve_sel_chunk(min(cfg.q_chunk, s), s, blk)
+        qp = q_pos.astype(jnp.int32)
+        kp = k_pos.astype(jnp.int32)
+        thr, bm = _select_chunked(qf, kf, cfg.topk_k, q_pos=qp, k_pos=kp,
+                                  causal=causal, chunk=chunk,
+                                  q_block=blk, k_block=blk)
+        out = _sata_kernel_chunked_call(qf, kf, vf, thr, bm, qp, kp,
+                                        blk, causal, chunk, mkb)
+    else:
+        scores = jnp.einsum("bqd,bkd->bqk", qf, kf,
+                            preferred_element_type=jnp.float32)
+        scores = scores * (1.0 / np.sqrt(hd))
+        admissible = jnp.ones((s, s), dtype=bool)
+        if causal:
+            admissible = admissible & (k_pos[None, :] <= q_pos[:, None])
+        scores = jnp.where(admissible[None], scores, NEG_INF)
+        sel = topk_threshold_mask(scores, cfg.topk_k,
+                                  impl=getattr(cfg, "topk_impl", "auto"))
+        sel = sel & admissible[None]
+        out = _sata_kernel_call(qf, kf, vf, sel, blk,
+                                getattr(cfg, "sata_schedule", "compact"),
+                                mkb)
     return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
 
 

@@ -27,6 +27,16 @@ class ModelConfig:
                                               # compacted-grid Pallas kernel
     sata_block: int = 128                     # kernel q/k tile edge
     sata_schedule: str = "compact"            # compact | dense kernel grid
+    sata_selection: str = "auto"              # auto | chunked | dense —
+                                              # chunked streams q_chunk×S
+                                              # score tiles (no (BH,S,S)
+                                              # buffer); auto follows the
+                                              # topk_impl bisect decision
+    sata_max_kv_blocks: Optional[int] = None  # static per-row occupancy
+                                              # bound (occupancy_bound on
+                                              # calibration plans) — jitted
+                                              # serving gets a compact grid
+                                              # without a concrete mask
     qk_norm: bool = False
     rope_theta: float = 10000.0
     causal: bool = True

@@ -41,6 +41,24 @@ def test_checkpoint_atomicity_and_gc(tmp_path):
     assert mgr.latest_step() == 4
 
 
+def test_async_save_immune_to_buffer_donation(tmp_path):
+    """np.asarray of a CPU-backend jax array is a zero-copy view of the
+    device buffer; the async save must snapshot an *owning* host copy
+    before returning, or the train loop's next donated step overwrites
+    the data mid-write (the timing-dependent restart-determinism flake:
+    resumed runs read a corrupted checkpoint)."""
+    mgr = CheckpointManager(str(tmp_path))
+    x = jnp.arange(64.0)
+    mgr.save(1, {"w": x}, blocking=False)
+    # donate + overwrite the just-saved buffer while the write is in
+    # flight — exactly what the train loop does on the next step
+    jax.block_until_ready(
+        jax.jit(lambda a: a * 0.0 - 1.0, donate_argnums=0)(x))
+    mgr.wait()
+    got = mgr.restore({"w": jnp.zeros((64,))})
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(64.0))
+
+
 def test_async_save_round_trip(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     state = {"w": jnp.arange(16.0).reshape(4, 4)}
@@ -84,10 +102,17 @@ def test_grad_compression_error_feedback():
                                rtol=0.05, atol=1e-4)
 
 
-@pytest.mark.xfail(strict=False,
-                   reason="10-step smoke run at batch 4 / seq 16 is noise-"
-                          "dominated; loss does not reliably decrease "
-                          "(pre-existing — see ROADMAP open items)")
 def test_training_reduces_loss():
-    losses = _final_loss_curve()
-    assert losses[-1] < losses[0]
+    """A 10-step curve's endpoint delta is noise-dominated (the old
+    xfail); a 40-step run with 10-step head/tail averaging drops by
+    ~0.1 nats on every seed tried — assert on the smoothed curve, and
+    sanity-check the gradient signal the loop now reports is finite."""
+    out = train("olmo-1b", smoke=True, steps=40, batch=4, seq=16,
+                log_every=100)
+    losses = np.asarray(out["losses"])
+    gnorms = np.asarray(out["gnorms"])
+    assert losses.shape == gnorms.shape == (40,)
+    assert np.isfinite(gnorms).all() and (gnorms > 0).all()
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), (
+        f"smoothed loss did not decrease: first10={np.mean(losses[:10]):.4f} "
+        f"last10={np.mean(losses[-10:]):.4f}")
