@@ -3,7 +3,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test dev-deps bench bench-select roofline-kernel
+.PHONY: test dev-deps bench bench-select bench-decode roofline-kernel
 
 dev-deps:
 	-pip install -r requirements-dev.txt
@@ -21,6 +21,12 @@ bench:
 # occupancy-bound stats; CI uploads it so the trajectory accumulates.
 bench-select:
 	python -m benchmarks.run select --json-dir results/bench
+
+# BENCH_decode.json: dense decode vs the SATA decode plan + gather
+# kernel (tok/s, fetch bytes, replan-interval exactness) — the serving
+# row of the perf trajectory.
+bench-decode:
+	python -m benchmarks.run decode --json-dir results/bench
 
 roofline-kernel:
 	python -m repro.launch.roofline --kernel

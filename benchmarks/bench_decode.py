@@ -1,0 +1,169 @@
+"""Decode-path SATA benchmark → BENCH_decode.json.
+
+The serving question: per generated token, does attention cost scale
+with the *prefix* (dense decode streams every cached block) or with the
+*selected* blocks (the SATA decode plan + gather kernel)?  Rows:
+
+  * prefix sweep at a fixed selected-block budget — plan fetch-bytes
+    stay flat while dense fetch grows with the prefix;
+  * occupancy sweep at a long prefix — wall-clock (tok/s) vs the
+    dense-schedule decode kernel (same math, all valid blocks planned),
+    the decode analogue of bench_kernel's dense-vs-compacted grid;
+  * exactness — with a full re-plan every step (``replan_interval=1``)
+    the planned kernel is bitwise equal to the dense-schedule kernel
+    (a tile whose entries are all threshold-masked is an exact no-op
+    in the online softmax), and matches the pure-jnp top-k decode
+    reference to fp32 accumulation tolerance;
+  * plan-update cost — incremental (summary-ranked) vs full re-plan.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+
+
+def _rand_plan(rng, b, kv, nkb_valid, sel, pad):
+    """Per (slot, kv head): exactly ``sel`` selected blocks among the
+    ``nkb_valid`` valid ones, ascending, in compact_kv_plan's padded
+    layout with width ``pad``."""
+    import jax.numpy as jnp
+    idx = np.zeros((b, kv, pad), np.int32)
+    cnt = np.full((b, kv), sel, np.int32)
+    for i in range(b):
+        for j in range(kv):
+            pick = np.sort(rng.choice(nkb_valid, size=sel, replace=False))
+            idx[i, j, :sel] = pick
+            idx[i, j, sel:] = pick[-1]              # resident re-reference
+    return jnp.asarray(idx), jnp.asarray(cnt)
+
+
+def _jnp_topk_decode(qg, k, v, pos, topk_k):
+    """Pure-jnp dense top-k (bisect) decode — the oracle the kernel's
+    full-re-plan route must reproduce."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.blockmap import bisect_select
+    from repro.core.selection import NEG_INF, kth_largest_bisect
+    d = qg.shape[-1]
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) / np.sqrt(d)
+    valid = (jnp.arange(k.shape[1]) <= pos[:, None])[:, None, None, :]
+    sc = jnp.where(valid, sc, NEG_INF)
+    thr = kth_largest_bisect(sc, topk_k)
+    sel = bisect_select(jnp.where(valid, sc, -jnp.inf), thr) & valid
+    sc = jnp.where(sel, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    p = jnp.where(sel.any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+
+
+def bench_decode() -> List[Row]:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.decode_plan import full_replan
+    from repro.kernels.ops import (decode_fetch_stats, default_interpret,
+                                   sata_decode_attention)
+
+    rows: List[Row] = []
+    interp = default_interpret()
+    mode = "interpret" if interp else "compiled"
+    b, kv, g, d, blk = 2, 2, 4, 64, 128
+    rng = np.random.default_rng(11)
+    thr0 = jnp.zeros((b, kv, g, 1), jnp.float32)   # ~half the tile passes
+
+    def run(s, idx, cnt, thr, pos):
+        fn = jax.jit(lambda q, k_, v: sata_decode_attention(
+            q, k_, v, idx, cnt, thr, pos, k_block=blk, interpret=interp))
+        q = jnp.asarray(rng.standard_normal((b, kv, g, d)), jnp.float32)
+        k_ = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+        jax.block_until_ready(fn(q, k_, v))                  # warm
+        out, us = timed(lambda: jax.block_until_ready(fn(q, k_, v)),
+                        repeat=3)
+        return out, us
+
+    # --- prefix sweep, fixed selected-block budget: plan fetch is flat
+    sel_fixed = 4
+    for s in (1024, 2048, 4096):
+        nkb = s // blk
+        pos = jnp.full((b,), s - 1, jnp.int32)
+        idx, cnt = _rand_plan(rng, b, kv, nkb, sel_fixed, sel_fixed)
+        _, us = run(s, idx, cnt, thr0, pos)
+        st = decode_fetch_stats(cnt, pos, k_block=blk, d=d)
+        rows.append((f"decode/prefix_sweep/S{s}_sel{sel_fixed}", us,
+                     f"planB {st['kv_fetch_bytes_plan']} "
+                     f"denseB {st['kv_fetch_bytes_dense']} "
+                     f"({st['fetch_reduction']:.1f}x)"))
+
+    # --- occupancy sweep at long prefix: tok/s vs dense-schedule kernel
+    s = 4096
+    nkb = s // blk
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    idx_d = jnp.broadcast_to(jnp.arange(nkb, dtype=jnp.int32),
+                             (b, kv, nkb))
+    cnt_d = jnp.full((b, kv), nkb, jnp.int32)
+    _, us_dense = run(s, idx_d, cnt_d, thr0, pos)
+    tok_dense = b * 1e6 / us_dense
+    rows.append((f"decode/dense_{mode}/S{s}", us_dense,
+                 f"{tok_dense:.1f} tok/s, fetch tiles {b * kv * nkb}"))
+    for occ in (0.25, 0.5):
+        sel = max(1, int(occ * nkb))
+        idx, cnt = _rand_plan(rng, b, kv, nkb, sel, sel)
+        _, us_sata = run(s, idx, cnt, thr0, pos)
+        st = decode_fetch_stats(cnt, pos, k_block=blk, d=d)
+        tok = b * 1e6 / us_sata
+        rows.append((f"decode/sata_{mode}/S{s}_occ{occ:.2f}", us_sata,
+                     f"{tok:.1f} tok/s, fetch tiles "
+                     f"{st['kv_fetch_tiles_plan']}"))
+        rows.append((f"decode/speedup/S{s}_occ{occ:.2f}", 0.0,
+                     f"{us_dense / max(us_sata, 1e-9):.2f}x tok/s "
+                     f"({mode}), {st['fetch_reduction']:.2f}x fetch-bytes"))
+
+    # --- exactness at replan_interval=1: planner plan vs dense schedule
+    s = 1024
+    nkb = s // blk
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, kv, g, d)), jnp.float32)
+    k_ = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    topk_k = 64
+    idx_p, cnt_p, thr = jax.jit(
+        lambda q, k__: full_replan(q, k__, pos, topk_k=topk_k, k_block=blk,
+                                   plan_blocks=nkb))(q, k_)
+    out_plan = sata_decode_attention(q, k_, v, idx_p, cnt_p, thr, pos,
+                                     k_block=blk, interpret=interp)
+    idx_d = jnp.broadcast_to(jnp.arange(nkb, dtype=jnp.int32), (b, kv, nkb))
+    cnt_d = jnp.full((b, kv), nkb, jnp.int32)
+    out_dense = sata_decode_attention(q, k_, v, idx_d, cnt_d, thr, pos,
+                                      k_block=blk, interpret=interp)
+    err = float(jnp.max(jnp.abs(out_plan - out_dense)))
+    occ_plan = float(cnt_p.sum()) / (b * kv * nkb)
+    rows.append((f"decode/parity_replan1/S{s}", 0.0,
+                 f"max_err {err:.2e} vs dense schedule at "
+                 f"{occ_plan:.2f} occupancy"))
+    ref = _jnp_topk_decode(q, k_, v, pos, topk_k)
+    err_ref = float(jnp.max(jnp.abs(out_plan.astype(jnp.float32) - ref)))
+    rows.append((f"decode/parity_vs_jnp/S{s}", 0.0,
+                 f"max_err {err_ref:.2e} (fp32 accumulation-order tol)"))
+
+    # --- plan maintenance cost: full re-plan vs incremental update
+    from repro.core.decode_plan import (decode_plan_update,
+                                        init_decode_plan,
+                                        summaries_from_cache)
+    plan = init_decode_plan(b, kv, s, d, blk, plan_blocks=nkb // 4)
+    k_min, k_max = summaries_from_cache(k_, pos, k_block=blk)
+    plan = {**plan, "k_min": k_min, "k_max": k_max,
+            "step": jnp.ones((), jnp.int32)}        # off the replan beat
+    for name, interval in (("full", 1), ("incremental", 1 << 30)):
+        fn = jax.jit(lambda p, q_, k__, iv=interval: decode_plan_update(
+            p, q_, k__, pos, topk_k=topk_k, k_block=blk,
+            replan_interval=iv))
+        jax.block_until_ready(fn(plan, q, k_))
+        _, us = timed(lambda: jax.block_until_ready(fn(plan, q, k_)),
+                      repeat=3)
+        rows.append((f"decode/plan_update_{name}/S{s}", us,
+                     f"P {nkb // 4} of nkb {nkb}"))
+    return rows

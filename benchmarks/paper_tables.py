@@ -355,6 +355,13 @@ def bench_select() -> List[Row]:
     return rows
 
 
+def bench_decode() -> List[Row]:
+    """Decode-path SATA: plan + gather kernel vs dense decode (see
+    ``benchmarks.bench_decode`` — the serving row of the trajectory)."""
+    from benchmarks.bench_decode import bench_decode as _bench_decode
+    return _bench_decode()
+
+
 ALL = {
     "tab1": bench_tab1,
     "fig4a": bench_fig4a,
@@ -364,4 +371,5 @@ ALL = {
     "overhead": bench_overhead,
     "kernel": bench_kernel,
     "select": bench_select,
+    "decode": bench_decode,
 }

@@ -1,0 +1,264 @@
+"""Decode-path SATA: incremental per-slot KV-block plan.
+
+Prefill's chunked pipeline (``core/selection.py``) streams the full
+``(Sq, Sk)`` score surface once; decode cannot afford even one row of it
+per generated token — serving cost must scale with the *selected*
+blocks, not the prefix.  This module maintains, per batch slot and KV
+head, a persistent plan over the KV cache:
+
+  k_min / k_max  (B, KV, nkb, D) fp32 — elementwise key bounds per
+                 k-block, updated **incrementally** as the cache grows
+                 (a block's bounds only ever absorb the tokens appended
+                 to it, and completed blocks never change).  min/max is
+                 associative, so the incrementally-maintained summaries
+                 are *bit-identical* to recomputing them from the cache
+                 — the property ``summaries_from_cache`` pins.
+  kv_indices     (B, KV, P) int32 — ascending selected k-block indices
+                 (``compact_kv_plan`` layout: the decode kernel's
+                 scalar-prefetch schedule).
+  kv_counts      (B, KV) int32   — live entries per row.
+  step           ()  int32       — decode steps since init (drives the
+                 periodic full re-plan).
+
+Two plan refresh modes, blended by ``replan_interval``:
+
+* **full re-plan** (every ``replan_interval``-th step): score the slot's
+  query rows against *all* cached keys, bisect the per-row top-k
+  threshold with the SAME predicate the prefill path counts with
+  (``core.blockmap.bisect_select``), and keep every block holding a
+  selected token.  ``replan_interval=1`` makes every step exact: the
+  kernel output equals dense top-k (bisect) decode bitwise.
+* **incremental** (in between): rank blocks by the Quest-style upper
+  bound ``sum_d max(q_d·k_min_d, q_d·k_max_d)`` from the summaries —
+  O(nkb·D) instead of O(S·D) — keep the top ``P`` (new blocks *enter*,
+  cold blocks *retire* as their bound falls out of the top set), then
+  gather only the planned blocks' keys to bisect the exact token
+  threshold *within* the plan.  Selection work and K fetch both scale
+  with ``P·k_block``, not the prefix.
+
+All functions are jittable; the state is a plain dict pytree so it
+stacks across layers and rides the serving scan next to the KV cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blockmap import bisect_select, compact_kv_plan
+from repro.core.selection import NEG_INF, kth_largest_bisect
+
+PlanState = Dict[str, jax.Array]
+
+
+def init_decode_plan(batch: int, n_kv_heads: int, max_len: int, d: int,
+                     k_block: int, plan_blocks: Optional[int] = None
+                     ) -> PlanState:
+    """Empty plan over a ``max_len`` cache.  ``plan_blocks`` (P) is the
+    static plan width; ``None`` keeps the full ``nkb`` (exact — no block
+    a re-plan selects is ever dropped)."""
+    assert max_len % k_block == 0, (max_len, k_block)
+    nkb = max_len // k_block
+    p = nkb if plan_blocks is None else min(int(plan_blocks), nkb)
+    assert p >= 1, p
+    return {
+        "k_min": jnp.full((batch, n_kv_heads, nkb, d), jnp.inf, jnp.float32),
+        "k_max": jnp.full((batch, n_kv_heads, nkb, d), -jnp.inf, jnp.float32),
+        "kv_indices": jnp.zeros((batch, n_kv_heads, p), jnp.int32),
+        "kv_counts": jnp.zeros((batch, n_kv_heads), jnp.int32),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def reset_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
+                    ) -> PlanState:
+    """Reset one batch slot's plan to the init state (claimed serving
+    slots must not inherit the previous request's summaries).  Works on
+    layer-stacked states: ``batch_axis`` names the batch dimension
+    (``step`` is global and has no batch axis)."""
+    ix = (slice(None),) * batch_axis + (slot,)
+    return {
+        "k_min": plan["k_min"].at[ix].set(jnp.inf),
+        "k_max": plan["k_max"].at[ix].set(-jnp.inf),
+        "kv_indices": plan["kv_indices"].at[ix].set(0),
+        "kv_counts": plan["kv_counts"].at[ix].set(0),
+        "step": plan["step"],
+    }
+
+
+def update_block_summaries(plan: PlanState, k_new: jax.Array,
+                           pos: jax.Array, *, k_block: int) -> PlanState:
+    """Absorb one appended key per slot into its block's min/max bounds.
+
+    k_new: (B, 1, KV, D) — the value actually written to the cache (same
+    dtype cast), so the incremental summaries match a from-scratch
+    recompute over cache contents exactly; pos: (B,) int32 write
+    positions.
+    """
+    kn = k_new[:, 0].astype(jnp.float32)                     # (B, KV, D)
+    b = kn.shape[0]
+    blk = (pos // k_block).astype(jnp.int32)                 # (B,)
+    bi = jnp.arange(b)[:, None]
+    ki = jnp.arange(kn.shape[1])[None, :]
+    return {
+        **plan,
+        "k_min": plan["k_min"].at[bi, ki, blk[:, None]].min(kn),
+        "k_max": plan["k_max"].at[bi, ki, blk[:, None]].max(kn),
+    }
+
+
+def summaries_from_cache(k_cache: jax.Array, pos: jax.Array, *,
+                         k_block: int) -> Tuple[jax.Array, jax.Array]:
+    """From-scratch reference for the incremental summaries: per-block
+    elementwise min/max over the cached keys at positions ``<= pos``
+    (empty blocks keep the ±inf init).  k_cache: (B, S, KV, D);
+    pos: (B,).  Returns (k_min, k_max) shaped (B, KV, nkb, D)."""
+    b, s, kv, d = k_cache.shape
+    nkb = s // k_block
+    kf = k_cache.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B, KV, S, D)
+    valid = (jnp.arange(s) <= pos[:, None])[:, None, :, None]
+    lo = jnp.where(valid, kf, jnp.inf).reshape(b, kv, nkb, k_block, d)
+    hi = jnp.where(valid, kf, -jnp.inf).reshape(b, kv, nkb, k_block, d)
+    return lo.min(axis=3), hi.max(axis=3)
+
+
+def _compact_rows(occ: jax.Array, pad_to: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """(B, KV, nkb) bool occupancy → ascending selected-block lists in
+    ``compact_kv_plan``'s padded layout, clamped to ``pad_to`` slots."""
+    b, kv, nkb = occ.shape
+    idx, cnt = compact_kv_plan(occ.reshape(b * kv, 1, nkb),
+                               pad_to=min(pad_to, nkb), truncate=True)
+    return (idx.reshape(b, kv, -1).astype(jnp.int32),
+            cnt.reshape(b, kv).astype(jnp.int32))
+
+
+def block_upper_bounds(q: jax.Array, k_min: jax.Array, k_max: jax.Array,
+                       *, sm_scale: float) -> jax.Array:
+    """Quest-style score upper bound per (slot, kv head, q row, block):
+    ``sum_d max(q_d·k_min_d, q_d·k_max_d)`` — an upper bound on any
+    token score inside the block, so ranking blocks by it never
+    underestimates a block holding a high-scoring key.
+    q: (B, KV, G, D); k_min/k_max: (B, KV, nkb, D) (±inf entries must be
+    pre-masked by the caller).  Returns (B, KV, G, nkb) fp32.
+
+    The elementwise max must happen per dimension BEFORE summing —
+    ``max(q·k_min, q·k_max)`` of the two full dot products is NOT a
+    bound for mixed-sign q — which distributes to one dot against each
+    bound: positive q components can at most hit ``k_max``, negative
+    ones ``k_min``."""
+    lo = jnp.einsum("bkgd,bknd->bkgn", jnp.minimum(q, 0.0), k_min)
+    hi = jnp.einsum("bkgd,bknd->bkgn", jnp.maximum(q, 0.0), k_max)
+    return (lo + hi) * sm_scale
+
+
+def full_replan(q: jax.Array, k_cache: jax.Array, pos: jax.Array, *,
+                topk_k: int, k_block: int, plan_blocks: int
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Exact per-step plan: score all cached keys, bisect each query
+    row's top-k threshold, keep every block with a selected token.
+
+    q: (B, KV, G, D); k_cache: (B, S, KV, D); pos: (B,).
+    Returns (kv_indices (B, KV, P), kv_counts (B, KV),
+    thresholds (B, KV, G, 1) fp32).
+    """
+    b, s, kv, d = k_cache.shape
+    nkb = s // k_block
+    sm_scale = 1.0 / np.sqrt(d)
+    sc = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                    k_cache.astype(jnp.float32),
+                    preferred_element_type=jnp.float32) * sm_scale
+    valid = (jnp.arange(s) <= pos[:, None])[:, None, None, :]  # (B,1,1,S)
+    sc = jnp.where(valid, sc, NEG_INF)
+    thr = kth_largest_bisect(sc, topk_k)                     # (B, KV, G, 1)
+    sel = bisect_select(jnp.where(valid, sc, -jnp.inf), thr) & valid
+    occ = sel.reshape(b, kv, -1, nkb, k_block).any(axis=(2, 4))
+    kv_indices, kv_counts = _compact_rows(occ, plan_blocks)
+    return kv_indices, kv_counts, thr
+
+
+def gather_planned_keys(k_cache: jax.Array, kv_indices: jax.Array, *,
+                        k_block: int) -> Tuple[jax.Array, jax.Array]:
+    """Fetch only the planned blocks' keys: (B, KV, P·k_block, D) plus
+    the gathered token positions (B, KV, P·k_block).  This is the
+    O(P·k_block) selection-side fetch the incremental path banks on."""
+    b, s, kv, d = k_cache.shape
+    tok = (kv_indices[..., None] * k_block +
+           jnp.arange(k_block)[None, None, None, :])          # (B,KV,P,kb)
+    tok = tok.reshape(b, kv, -1)                              # (B,KV,P·kb)
+    kg = jnp.take_along_axis(
+        k_cache, tok.transpose(0, 2, 1)[..., None], axis=1)   # (B,P·kb,KV,D)
+    return kg.transpose(0, 2, 1, 3), tok
+
+
+def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
+                     pos: jax.Array, *, topk_k: int, k_block: int
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Approximate per-step plan from the incrementally-maintained block
+    summaries: rank all valid blocks by their upper-bound score (new
+    blocks enter here the step their first token lands; a planned block
+    retires when its bound drops out of the top-P), then bisect the
+    exact token threshold over the planned blocks only.
+
+    Shapes as ``full_replan``.  Cost: O(nkb·D) ranking + O(P·k_block·D)
+    threshold — independent of the prefix length.
+    """
+    b, s, kv, d = k_cache.shape
+    nkb = s // k_block
+    p = plan["kv_indices"].shape[-1]
+    sm_scale = 1.0 / np.sqrt(d)
+    valid_blk = (jnp.arange(nkb) * k_block <= pos[:, None])   # (B, nkb)
+    vb = valid_blk[:, None, :, None]
+    ub = block_upper_bounds(q.astype(jnp.float32),
+                            jnp.where(vb, plan["k_min"], 0.0),
+                            jnp.where(vb, plan["k_max"], 0.0),
+                            sm_scale=sm_scale)                # (B,KV,G,nkb)
+    ub_row = jnp.where(valid_blk[:, None, :], ub.max(axis=2), NEG_INF)
+    # top-P blocks per (slot, kv head) — the same bisect predicate as the
+    # token-level threshold, applied at block granularity
+    thr_b = kth_largest_bisect(ub_row, p)                     # (B, KV, 1)
+    occ = bisect_select(ub_row, thr_b) & valid_blk[:, None, :]
+    kv_indices, kv_counts = _compact_rows(occ, p)
+    # exact token threshold, restricted to the planned blocks
+    kg, tok = gather_planned_keys(k_cache, kv_indices, k_block=k_block)
+    sc = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32),
+                    kg.astype(jnp.float32),
+                    preferred_element_type=jnp.float32) * sm_scale
+    slot = jnp.arange(p * k_block) // k_block                 # (P·kb,)
+    live = slot[None, None, :] < kv_counts[..., None]         # no dup pads
+    live = live & (tok <= pos[:, None, None])
+    sc = jnp.where(live[:, :, None, :], sc, NEG_INF)
+    thr = kth_largest_bisect(sc, topk_k)                      # (B, KV, G, 1)
+    return kv_indices, kv_counts, thr
+
+
+def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
+                       pos: jax.Array, *, topk_k: int, k_block: int,
+                       replan_interval: int = 1
+                       ) -> Tuple[PlanState, jax.Array]:
+    """One decode step of plan maintenance (summaries must already hold
+    the step's appended key — call ``update_block_summaries`` first).
+    Every ``replan_interval``-th step runs the exact full re-plan;
+    other steps use the incremental summary-ranked plan.  Returns the
+    updated state and the per-row thresholds for the decode kernel.
+    ``replan_interval=1`` re-plans every step (exact top-k)."""
+    p = plan["kv_indices"].shape[-1]
+
+    def _full(_):
+        return full_replan(q, k_cache, pos, topk_k=topk_k,
+                           k_block=k_block, plan_blocks=p)
+
+    def _incr(_):
+        return incremental_plan(q, k_cache, plan, pos, topk_k=topk_k,
+                                k_block=k_block)
+
+    if replan_interval <= 1:
+        kv_indices, kv_counts, thr = _full(None)
+    else:
+        kv_indices, kv_counts, thr = jax.lax.cond(
+            plan["step"] % replan_interval == 0, _full, _incr, None)
+    new_plan = {**plan, "kv_indices": kv_indices, "kv_counts": kv_counts,
+                "step": plan["step"] + 1}
+    return new_plan, thr

@@ -205,6 +205,66 @@ def _sata_attention_chunked(q, k_, v, *, topk_k, q_block, k_block, exact,
     return out, block_map
 
 
+@functools.partial(jax.jit, static_argnames=("k_block", "interpret"))
+def sata_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                          kv_indices: jax.Array, kv_counts: jax.Array,
+                          thresholds: jax.Array, pos: jax.Array, *,
+                          k_block: int = 128,
+                          interpret: Optional[bool] = None) -> jax.Array:
+    """Decode-path selective attention: fetch only the planned k-blocks
+    of the KV cache for one generated token per slot.
+
+    q: (B, KV, G, D) — the G = H//KV query heads grouped per KV head
+    (they share fetched K/V tiles); k/v: (B, S, KV, D) serving cache
+    (original layout — no head-expanded copy); kv_indices/kv_counts:
+    the per-slot plan from ``core.decode_plan``; thresholds:
+    (B, KV, G, 1) fp32 per-row top-k thresholds (bisect predicate);
+    pos: (B,) int32 per-slot positions.  Returns (B, KV, G, D).
+
+    Grid is ``(B·KV, P)`` — scheduled work and K/V fetch both scale
+    with the *selected* block count, not the prefix length
+    (``decode_fetch_stats`` accounts for it).
+    """
+    from repro.kernels.sata_decode import sata_decode_attention_kernel
+    if interpret is None:
+        interpret = default_interpret()
+    return sata_decode_attention_kernel(
+        q, k, v, kv_indices, kv_counts, thresholds, pos,
+        k_block=k_block, interpret=interpret)
+
+
+def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
+                       n_kv_heads: Optional[int] = None,
+                       dtype_bytes: int = 4) -> Dict:
+    """Per-step K/V fetch accounting for the *attention kernel*: dense
+    decode streams every valid block of the prefix per (slot, kv head);
+    the planned kernel fetches ``kv_counts`` tiles.  kv_counts: (B, KV)
+    [or any (..., KV)] int; pos: (B,) int per-slot positions.
+
+    Scope: kernel-side fetches only.  The plan *maintenance* reads keys
+    too — a full re-plan streams all valid K (so at
+    ``sata_decode_replan=1`` the selection side still scales with the
+    prefix and total step bytes are not reduced); the incremental path
+    reads O(nkb·D) summaries + the planned blocks' keys, which is when
+    end-to-end traffic follows these numbers.
+    """
+    cnt = np.asarray(kv_counts)
+    pos = np.asarray(pos).reshape(-1)
+    b = pos.shape[0]
+    kv = n_kv_heads if n_kv_heads is not None else cnt.shape[-1]
+    valid_blocks = (pos + 1 + k_block - 1) // k_block          # (B,)
+    dense_tiles = int(valid_blocks.sum()) * kv * (cnt.size // (b * kv))
+    plan_tiles = int(cnt.sum())
+    tile_bytes = 2 * k_block * d * dtype_bytes                 # K + V tile
+    return {
+        "kv_fetch_tiles_dense": dense_tiles,
+        "kv_fetch_tiles_plan": plan_tiles,
+        "kv_fetch_bytes_dense": dense_tiles * tile_bytes,
+        "kv_fetch_bytes_plan": plan_tiles * tile_bytes,
+        "fetch_reduction": dense_tiles / max(plan_tiles, 1),
+    }
+
+
 def sata_attention_reference(q, k_, v, scores_mask) -> jax.Array:
     """Oracle: exact top-k selective attention, no planning/permutation."""
     bh, sq, _ = q.shape

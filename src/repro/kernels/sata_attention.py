@@ -80,11 +80,16 @@ def _acc_init(acc_ref, m_ref, l_ref):
     l_ref[...] = jnp.zeros_like(l_ref)
 
 
-def _acc_finalize(o_ref, acc_ref, l_ref):
-    """Rows with no admissible key (l == 0) emit zeros."""
+def _finalize_out(acc_ref, l_ref):
+    """Normalized output tile; rows with no admissible key (l == 0)
+    emit zeros.  Shared by the prefill and decode kernels — their out
+    refs differ only in leading block layout."""
     l = l_ref[...]
-    out = jnp.where(l > 0, acc_ref[...] / jnp.where(l > 0, l, 1.0), 0.0)
-    o_ref[0] = out.astype(o_ref.dtype)
+    return jnp.where(l > 0, acc_ref[...] / jnp.where(l > 0, l, 1.0), 0.0)
+
+
+def _acc_finalize(o_ref, acc_ref, l_ref):
+    o_ref[0] = _finalize_out(acc_ref, l_ref).astype(o_ref.dtype)
 
 
 def _kernel(bm_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
@@ -174,9 +179,17 @@ def _flash_update(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
     compare, optionally AND-ed with ``admissible``), or neither (block
     mode: dense math inside the tile).
     """
-    q = q_ref[0]                                   # (bq, d)
-    k = k_ref[0]                                   # (bk, d)
-    v = v_ref[0]
+    _flash_update_tile(q_ref[0], k_ref[0], v_ref[0], acc_ref, m_ref,
+                       l_ref, sm_scale=sm_scale, tile_mask=tile_mask,
+                       threshold=threshold, admissible=admissible)
+
+
+def _flash_update_tile(q, k, v, acc_ref, m_ref, l_ref, *,
+                       sm_scale: float, tile_mask=None, threshold=None,
+                       admissible=None):
+    """Array-level core of ``_flash_update`` — shared with the decode
+    kernel, whose block shapes carry a different leading layout.
+    q: (bq, d); k/v: (bk, d); accumulators are VMEM refs."""
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * sm_scale       # (bq, bk)

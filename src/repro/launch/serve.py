@@ -1,6 +1,16 @@
 """Serving driver: batched request decoding with top-k selective
 attention over a KV cache (continuous-batching-lite: fixed batch slots,
-per-slot positions, new requests claim finished slots).
+**per-slot positions**, new requests claim finished slots).
+
+Each slot owns its decode position and its cache region: claiming a
+slot resets both (``models.decode.reset_slot``), so a request never
+inherits the previous occupant's KV contents — and requests of
+different lengths decode concurrently at their own offsets.  Latency is
+reported per request (claim → last token), not just aggregate tok/s.
+
+With ``cfg.sata_decode`` routing on, every step fetches only the
+planned KV blocks (``core/decode_plan.py`` + the decode gather kernel)
+and the driver accumulates the fetch-byte savings against dense decode.
 
 Usage (CPU, reduced arch):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
@@ -24,10 +34,22 @@ from repro.models import model as mdl
 from repro.train.step import make_serve_step
 
 
+def _plan_counts(cache: Dict) -> Optional[np.ndarray]:
+    """Layer-stacked (..., B, KV) plan occupancy, if SATA decode is on
+    (hybrid keeps its attention cache under ``shared_kv``)."""
+    for name in ("kv", "shared_kv"):
+        kvc = cache.get(name)
+        if isinstance(kvc, dict) and "plan" in kvc:
+            cnt = np.asarray(kvc["plan"]["kv_counts"])
+            return cnt.reshape(-1, *cnt.shape[-2:])      # (L, B, KV)
+    return None
+
+
 def serve(arch: str, smoke: bool = True, n_requests: int = 8,
           batch_slots: int = 4, gen_len: int = 16, max_len: int = 64,
-          seed: int = 0, mesh=None, params=None) -> Dict[str, Any]:
-    cfg = (SMOKE if smoke else ARCHS)[arch]
+          seed: int = 0, mesh=None, params=None,
+          cfg=None) -> Dict[str, Any]:
+    cfg = cfg or (SMOKE if smoke else ARCHS)[arch]
     mesh = mesh or make_local_mesh()
     if params is None:
         params = mdl.init_params(jax.random.PRNGKey(seed), cfg)
@@ -46,33 +68,85 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
 
     step = jax.jit(lambda p, c, t, pos: dec.serve_step(p, cfg, c, t, pos))
 
+    # one deterministic prompt token per request: a request's output
+    # depends only on its own prompt, never on which slot served it
+    prompts = rng.integers(0, cfg.vocab_size, n_requests)
     queue: List[int] = list(range(n_requests))
     outputs: Dict[int, List[int]] = {}
-    slots = [None] * batch_slots                  # request id per slot
+    latency: Dict[int, float] = {}
+    t_claim: Dict[int, float] = {}
+    slots: List[Optional[int]] = [None] * batch_slots
+    pos_h = np.zeros(batch_slots, np.int32)       # per-slot positions
+    tokens_h = np.zeros((batch_slots, 1), np.int32)
     produced = 0
+    steps = 0
+    fetch_tiles_plan = fetch_tiles_dense = 0
+    from repro.kernels.ops import decode_fetch_stats
+    from repro.models.attention import decode_block_size
+    from repro.models.layers import _dtype
+    blk = decode_block_size(cfg, max_len)
+    tile_bytes = 2 * blk * cfg.hd * jnp.dtype(_dtype(cfg)).itemsize
+    # warm the jit trace before any latency clock starts — every slot a
+    # request claims is reset first, so the warm-up's cache writes never
+    # reach an output
+    logits, cache = step(params, cache, jnp.asarray(tokens_h),
+                         jnp.asarray(pos_h))
+    jax.block_until_ready(logits)
     t0 = time.time()
-    pos = 0
-    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch_slots, 1)),
-                         jnp.int32)
-    while (queue or any(s is not None for s in slots)) and pos < max_len:
+    max_steps = n_requests * gen_len + batch_slots + 1
+    while (queue or any(s is not None for s in slots)) and steps < max_steps:
         for i in range(batch_slots):              # claim free slots
             if slots[i] is None and queue:
-                slots[i] = queue.pop(0)
-                outputs[slots[i]] = []
-        logits, cache = step(params, cache, tokens, jnp.int32(pos))
+                r = queue.pop(0)
+                slots[i] = r
+                outputs[r] = []
+                cache = dec.reset_slot(cfg, cache, i)
+                pos_h[i] = 0
+                tokens_h[i, 0] = int(prompts[r])
+                t_claim[r] = time.time()
+        logits, cache = step(params, cache, jnp.asarray(tokens_h),
+                             jnp.asarray(pos_h))
         nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        counts = _plan_counts(cache)
+        active = [i for i in range(batch_slots) if slots[i] is not None]
+        if counts is not None and active:
+            # count only slots holding live requests — idle slots still
+            # run through the lockstep batch but serve nobody
+            st = decode_fetch_stats(counts[:, active], pos_h[active],
+                                    k_block=blk, d=cfg.hd)
+            fetch_tiles_plan += st["kv_fetch_tiles_plan"]
+            fetch_tiles_dense += st["kv_fetch_tiles_dense"]
+        now = time.time()
         for i in range(batch_slots):
-            if slots[i] is None:
+            r = slots[i]
+            if r is None:
                 continue
-            outputs[slots[i]].append(int(nxt[i]))
+            outputs[r].append(int(nxt[i]))
             produced += 1
-            if len(outputs[slots[i]]) >= gen_len:
+            pos_h[i] += 1
+            if len(outputs[r]) >= gen_len or pos_h[i] >= max_len:
+                latency[r] = now - t_claim[r]
                 slots[i] = None                   # finished → free the slot
-        tokens = nxt[:, None]
-        pos += 1
+            else:
+                tokens_h[i, 0] = int(nxt[i])
+        steps += 1
     dt = time.time() - t0
-    return {"outputs": outputs, "tokens_generated": produced,
-            "tok_per_s": produced / max(dt, 1e-9), "steps": pos}
+    out: Dict[str, Any] = {
+        "outputs": outputs, "tokens_generated": produced,
+        "tok_per_s": produced / max(dt, 1e-9), "steps": steps,
+        "request_latency_s": latency,
+        "latency_mean_s": float(np.mean(list(latency.values())))
+        if latency else 0.0,
+    }
+    if fetch_tiles_dense:
+        out["decode_fetch"] = {
+            "kv_fetch_tiles_plan": fetch_tiles_plan,
+            "kv_fetch_tiles_dense": fetch_tiles_dense,
+            "kv_fetch_bytes_plan": fetch_tiles_plan * tile_bytes,
+            "kv_fetch_bytes_dense": fetch_tiles_dense * tile_bytes,
+            "fetch_reduction": fetch_tiles_dense / max(fetch_tiles_plan, 1),
+        }
+    return out
 
 
 def main():
@@ -87,7 +161,15 @@ def main():
                 batch_slots=args.slots, gen_len=args.gen_len)
     print(f"[serve] generated {out['tokens_generated']} tokens over "
           f"{len(out['outputs'])} requests "
-          f"({out['tok_per_s']:.1f} tok/s on CPU)")
+          f"({out['tok_per_s']:.1f} tok/s on CPU, "
+          f"mean request latency {out['latency_mean_s'] * 1e3:.1f} ms)")
+    if "decode_fetch" in out:
+        f = out["decode_fetch"]
+        print(f"[serve] SATA decode attention-kernel KV fetch: "
+              f"{f['kv_fetch_bytes_plan']} B vs "
+              f"{f['kv_fetch_bytes_dense']} B dense "
+              f"({f['fetch_reduction']:.2f}x; selection-side reads scale "
+              f"with sata_decode_replan — see ops.decode_fetch_stats)")
 
 
 if __name__ == "__main__":

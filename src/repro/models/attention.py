@@ -126,12 +126,16 @@ def _attend(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
     scores = scores * (1.0 / np.sqrt(hd))
     scores = (dctx.constrain_cp_scores(scores) if dctx.cp_enabled()
               else constrain_scores(scores))
-    mask = jnp.ones(scores.shape[-2:], dtype=bool)
+    # mask carries an optional batch axis: per-slot decode validity
+    # (``valid_k`` (B, S)) differs across the batch, everything else
+    # broadcasts from (1, Q, S).
+    mask = jnp.ones((1,) + scores.shape[-2:], dtype=bool)
     if causal:
-        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        mask = mask & (k_pos[None, None, :] <= q_pos[None, :, None])
     if valid_k is not None:
-        mask = mask & valid_k[None, :]
-    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        vk = valid_k if valid_k.ndim == 2 else valid_k[None]
+        mask = mask & vk[:, None, :]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
     if cfg.attention_variant == "topk":
         sel = topk_threshold_mask(scores, cfg.topk_k,
                                   impl=getattr(cfg, "topk_impl", "auto"))
@@ -474,10 +478,96 @@ def attention_apply(params: Params, cfg, x: jax.Array,
 # Decode path (KV cache)
 # ---------------------------------------------------------------------------
 
+def decode_block_size(cfg, max_len: int) -> int:
+    """Decode k-block edge: ``sata_decode_block`` (default
+    ``sata_block``), clamped so at least one block tiles the cache."""
+    blk = getattr(cfg, "sata_decode_block", None) or \
+        getattr(cfg, "sata_block", 128)
+    return min(blk, max_len)
+
+
+def sata_decode_on(cfg, max_len: int) -> bool:
+    """Route single-token decode through the incremental KV-block plan
+    + gather kernel?  ``sata_decode``: "on"/"off" force; "auto" follows
+    the same bisect decision as prefill selection — SATA decode needs
+    per-row bisect thresholds, so it turns on exactly when
+    ``topk_threshold_mask`` would bisect a ``max_len`` row anyway.
+    Sharded runs fall back (``pallas_call`` has no SPMD rule)."""
+    mode = getattr(cfg, "sata_decode", "auto")
+    if mode == "off" or cfg.attention_variant != "topk":
+        return False
+    if dctx.cp_enabled() or dctx.mesh_installed():
+        return False
+    blk = decode_block_size(cfg, max_len)
+    if max_len % blk != 0:
+        if mode == "on":
+            raise ValueError(
+                f"sata_decode='on' needs the cache length ({max_len}) to "
+                f"tile by the decode block ({blk}) — set sata_decode_block")
+        return False
+    if mode == "on":
+        return True
+    return _use_bisect_impl(getattr(cfg, "topk_impl", "auto"), max_len)
+
+
 def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
     hd = cfg.hd
-    return {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
-            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype)}
+    cache = {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+             "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype)}
+    if sata_decode_on(cfg, max_len):
+        from repro.core.decode_plan import init_decode_plan
+        cache["plan"] = init_decode_plan(
+            batch, cfg.n_kv_heads, max_len, hd,
+            decode_block_size(cfg, max_len),
+            getattr(cfg, "sata_decode_blocks", None))
+    return cache
+
+
+def _per_slot_positions(pos: jax.Array, batch: int) -> jax.Array:
+    """Normalize ``pos`` to per-slot (B,) int32 — scalar callers (all
+    slots in lockstep) broadcast; serving passes a vector so each slot
+    decodes at its own position."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
+
+
+def _cache_scatter(cache: jax.Array, new: jax.Array, pos: jax.Array
+                   ) -> jax.Array:
+    """Write each slot's new K/V row at its own position.
+    cache: (B, S, KV, hd); new: (B, 1, KV, hd); pos: (B,)."""
+    upd = jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
+    return upd(cache, new.astype(cache.dtype), pos)
+
+
+def _attend_sata_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                        k_new: jax.Array, cfg, pos: jax.Array,
+                        plan: Dict) -> Tuple[jax.Array, Dict]:
+    """Decode attention through the incremental plan + gather kernel.
+
+    q: (B, 1, H, hd); k/v: (B, S, KV, hd) updated cache; k_new:
+    (B, 1, KV, hd) the key row just written (summaries absorb it
+    incrementally); pos: (B,).  Returns ((B, 1, H, hd), plan')."""
+    from repro.core.decode_plan import (decode_plan_update,
+                                        update_block_summaries)
+    from repro.kernels.ops import sata_decode_attention
+    b, _, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    blk = decode_block_size(cfg, k.shape[1])
+    # heads are kv-major (see _attend's grouped reshape), so the G query
+    # heads sharing a KV head sit contiguously
+    qg = q[:, 0].reshape(b, kv, g, hd)
+    # summarize the value actually WRITTEN to the cache (same dtype
+    # cast), so incremental summaries match a from-scratch recompute
+    # over cache contents bit for bit
+    plan = update_block_summaries(plan, k_new.astype(k.dtype), pos,
+                                  k_block=blk)
+    plan, thr = decode_plan_update(
+        plan, qg, k, pos, topk_k=cfg.topk_k, k_block=blk,
+        replan_interval=getattr(cfg, "sata_decode_replan", 1))
+    out = sata_decode_attention(qg, k, v, plan["kv_indices"],
+                                plan["kv_counts"], thr, pos, k_block=blk)
+    return out.reshape(b, 1, h, hd), plan
 
 
 def attention_decode(params: Params, cfg, x: jax.Array, cache: Dict,
@@ -485,39 +575,54 @@ def attention_decode(params: Params, cfg, x: jax.Array, cache: Dict,
                      ) -> Tuple[jax.Array, Dict]:
     """One-token decode: update cache at ``pos``, attend over the prefix.
 
-    x: (B, 1, D); cache k/v: (B, S_max, KV, hd); pos: scalar int32.
+    x: (B, 1, D); cache k/v: (B, S_max, KV, hd); pos: scalar int32 (all
+    slots in lockstep) or (B,) int32 per-slot positions (continuous
+    batching: each slot decodes at its own offset).
+
+    When the cache carries a ``plan`` (``init_kv_cache`` attaches one
+    iff ``sata_decode_on``), attention runs through the incremental
+    KV-block plan + gather kernel instead of attending densely over the
+    whole prefix — fetch cost scales with the selected blocks.
     """
     b = x.shape[0]
+    pos = _per_slot_positions(pos, b)
     q, k_new, v_new = _project_qkv(params, cfg, x)
     if use_rope:
-        posv = jnp.full((1,), pos, dtype=jnp.int32)
+        posv = pos[:, None]                                  # (B, 1)
         q = apply_rope(q, posv, cfg.rope_theta)
         k_new = apply_rope(k_new, posv, cfg.rope_theta)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
-                                            k_new.astype(cache["k"].dtype),
-                                            pos, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
-                                            v_new.astype(cache["v"].dtype),
-                                            pos, axis=1)
-    s_max = k.shape[1]
-    k_pos = jnp.arange(s_max)
-    valid = k_pos <= pos
-    out = _attend(q, k, v, cfg, jnp.full((1,), pos), k_pos,
-                  valid_k=valid, causal=False)
+    k = _cache_scatter(cache["k"], k_new, pos)
+    v = _cache_scatter(cache["v"], v_new, pos)
+    new_cache = {"k": k, "v": v}
+    if "plan" in cache:
+        out, new_cache["plan"] = _attend_sata_decode(
+            q, k, v, k_new, cfg, pos, cache["plan"])
+    else:
+        s_max = k.shape[1]
+        k_pos = jnp.arange(s_max)
+        valid = k_pos[None, :] <= pos[:, None]               # (B, S)
+        out = _attend(q, k, v, cfg, jnp.zeros((1,), jnp.int32), k_pos,
+                      valid_k=valid, causal=False)
     y = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ params["wo"]
-    return y, {"k": k, "v": v}
+    return y, new_cache
 
 
 def cross_attention_decode(params: Params, cfg, x: jax.Array,
                            context_kv: Dict) -> jax.Array:
-    """Decode-time cross-attention over precomputed context K/V."""
+    """Decode-time cross-attention over precomputed context K/V.
+
+    ``context_kv`` may carry ``"valid"`` (B, S_ctx) bool — the length
+    mask for padded encoder contexts (audio frames / image tokens are
+    padded to a fixed ``encoder_len``/``n_image_tokens``); without it
+    every context position attends."""
     b = x.shape[0]
     q = (x @ params["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
     if cfg.qk_norm:
         q = rms_head_norm(q, params["q_scale"])
     k, v = context_kv["k"], context_kv["v"]
     out = _attend(q, k, v, cfg, jnp.zeros((1,), jnp.int32),
-                  jnp.arange(k.shape[1]), causal=False)
+                  jnp.arange(k.shape[1]), valid_k=context_kv.get("valid"),
+                  causal=False)
     return out.reshape(b, 1, cfg.n_heads * cfg.hd) @ params["wo"]
 
 

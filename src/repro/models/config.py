@@ -37,6 +37,23 @@ class ModelConfig:
                                               # calibration plans) — jitted
                                               # serving gets a compact grid
                                               # without a concrete mask
+    sata_decode: str = "auto"                 # auto | on | off — route
+                                              # single-token decode through
+                                              # the incremental KV-block
+                                              # plan + gather kernel; auto
+                                              # follows the bisect decision
+                                              # at the cache length
+    sata_decode_block: Optional[int] = None   # decode k-block edge
+                                              # (default: sata_block)
+    sata_decode_blocks: Optional[int] = None  # plan width P (selected
+                                              # k-blocks kept per slot/
+                                              # head); None = full nkb
+                                              # (exact — nothing dropped)
+    sata_decode_replan: int = 1               # full re-plan every N steps
+                                              # (1 = every step = exact
+                                              # top-k; >1 uses the block-
+                                              # summary incremental plan
+                                              # in between)
     qk_norm: bool = False
     rope_theta: float = 10000.0
     causal: bool = True

@@ -67,15 +67,34 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
     raise ValueError(cfg.family)
 
 
+def _context_valid(batch: Dict, s_ctx: int, n_layers: int):
+    """Optional per-request encoder-length mask: ``context_lengths``
+    (B,) int in the batch marks how many of the padded ``s_ctx``
+    positions are real (audio frames / image tokens are padded to a
+    fixed length).  Returns (L, B, S_ctx) bool stacked for the layer
+    scan, or None when no lengths are given (all positions attend)."""
+    lengths = batch.get("context_lengths")
+    if lengths is None:
+        return None
+    valid = jnp.arange(s_ctx)[None, :] < jnp.asarray(lengths)[:, None]
+    return jnp.broadcast_to(valid, (n_layers,) + valid.shape)
+
+
 def prefill_context(params: Params, cfg: ModelConfig, cache: Dict,
                     batch: Dict[str, jax.Array]) -> Dict:
     """Populate cross-attention K/V from the modality context
-    (image embeds for vlm; encoder output for audio)."""
+    (image embeds for vlm; encoder output for audio).  An optional
+    ``batch["context_lengths"]`` (B,) masks padded context positions in
+    every decode-time cross-attention (see ``_context_valid``)."""
     if cfg.family == "vlm":
         ctx = batch["image_embeds"].astype(_dtype(cfg))
         cross_kv = jax.vmap(
             lambda p: attn.precompute_cross_kv(p["attn"], cfg, ctx))(
             params["cross_layers"])
+        valid = _context_valid(batch, ctx.shape[1],
+                               cfg.n_layers // cfg.cross_attn_period)
+        if valid is not None:
+            cross_kv = {**cross_kv, "valid": valid}
         return {**cache, "cross_kv": cross_kv}
     if cfg.family == "audio":
         from repro.models.model import _run_encoder
@@ -83,7 +102,50 @@ def prefill_context(params: Params, cfg: ModelConfig, cache: Dict,
         cross_kv = jax.vmap(
             lambda p: attn.precompute_cross_kv(p["attn_cross"], cfg, enc))(
             params["layers"])
+        valid = _context_valid(batch, enc.shape[1], cfg.n_layers)
+        if valid is not None:
+            cross_kv = {**cross_kv, "valid": valid}
         return {**cache, "cross_kv": cross_kv}
+    return cache
+
+
+def _reset_kv_slot(kv_cache: Dict, slot: int, batch_axis: int) -> Dict:
+    """Reset one batch slot's SATA plan (if any) to the init state.
+    The K/V buffers themselves need no zeroing: every read path masks
+    key positions ``<= pos`` (dense decode's ``valid_k``, the gather
+    kernel's in-body ``kpos <= pos``, both planners), and the claimed
+    slot restarts at ``pos = 0`` overwriting each position before it
+    ever becomes readable — so the previous occupant's K/V is already
+    invisible, and skipping the zeroing avoids copying the full
+    layer-stacked cache on every claim."""
+    if "plan" not in kv_cache:
+        return kv_cache
+    from repro.core.decode_plan import reset_plan_slot
+    return {**kv_cache,
+            "plan": reset_plan_slot(kv_cache["plan"], slot,
+                                    batch_axis=batch_axis)}
+
+
+def reset_slot(cfg: ModelConfig, cache: Dict, slot: int) -> Dict:
+    """Clear one batch slot's per-request decode state across all
+    layers — a serving slot claimed by a new request must not inherit
+    the previous request's plan summaries or recurrent states (position
+    masking already hides its K/V, see ``_reset_kv_slot``).
+    Cross-attention context (``cross_kv``) is left alone: the serving
+    driver re-prefills it per request."""
+    cache = dict(cache)
+    if "kv" in cache:
+        # vlm nests the self-attn cache (n_cross, n_inner, B, ...)
+        axis = 2 if cfg.family == "vlm" else 1
+        cache["kv"] = _reset_kv_slot(cache["kv"], slot, axis)
+    if "shared_kv" in cache:
+        cache["shared_kv"] = _reset_kv_slot(cache["shared_kv"], slot, 1)
+    for name in ("mamba", "rwkv"):
+        if name in cache:
+            # recurrent states have no position axis to mask — zeroing
+            # IS the reset, and they are O(B·d) small
+            cache[name] = jax.tree.map(lambda a: a.at[:, slot].set(0),
+                                       cache[name])
     return cache
 
 
@@ -98,7 +160,9 @@ def _dec_mlp(p, cfg, x):
 def serve_step(params: Params, cfg: ModelConfig, cache: Dict,
                tokens: jax.Array, pos: jax.Array
                ) -> Tuple[jax.Array, Dict]:
-    """tokens: (B, 1) current token ids; pos: scalar position.
+    """tokens: (B, 1) current token ids; pos: scalar position (all
+    slots in lockstep) or (B,) int32 per-slot positions (continuous
+    batching — each serving slot decodes at its own offset).
     → (logits (B, 1, V) fp32, updated cache)."""
     x = constrain(embed_apply(params["embed"], tokens).astype(_dtype(cfg)),
                   "act")

@@ -1,0 +1,419 @@
+"""Decode-path SATA: incremental plan maintenance properties, decode
+gather-kernel parity vs dense decode (ragged per-slot lengths, empty
+plan, first token), end-to-end model routing, the per-slot serving
+loop, and the cross-attention context-length mask."""
+import dataclasses
+import sys
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+from repro.configs.archs import SMOKE
+from repro.core.blockmap import bisect_select
+from repro.core.decode_plan import (decode_plan_update, full_replan,
+                                    incremental_plan, init_decode_plan,
+                                    reset_plan_slot, summaries_from_cache,
+                                    update_block_summaries)
+from repro.core.selection import NEG_INF, kth_largest_bisect
+from repro.kernels.ops import decode_fetch_stats, sata_decode_attention
+from repro.models import decode as dec
+from repro.models import model as mdl
+from repro.models.attention import sata_decode_on
+
+
+def _jnp_topk_decode(qg, k, v, pos, topk_k):
+    """Dense top-k (bisect) decode oracle: qg (B, KV, G, D);
+    k/v (B, S, KV, D); pos (B,)."""
+    d = qg.shape[-1]
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) / np.sqrt(d)
+    valid = (jnp.arange(k.shape[1]) <= pos[:, None])[:, None, None, :]
+    sc = jnp.where(valid, sc, NEG_INF)
+    thr = kth_largest_bisect(sc, topk_k)
+    sel = bisect_select(jnp.where(valid, sc, -jnp.inf), thr) & valid
+    sc = jnp.where(sel, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    p = jnp.where(sel.any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Plan maintenance properties
+# ---------------------------------------------------------------------------
+
+def _append_sequence(keys, b, kv, s, d, blk, positions):
+    """Drive the incremental summary state through an append sequence
+    and return (state, cache, final per-slot pos)."""
+    plan = init_decode_plan(b, kv, s, d, blk)
+    cache = jnp.zeros((b, s, kv, d), jnp.float32)
+    pos = -np.ones(b, np.int32)
+    for t, step_pos in enumerate(positions):
+        pos = np.asarray(step_pos, np.int32)
+        k_new = _rand(jax.random.PRNGKey(1000 + t), (b, 1, kv, d))
+        posj = jnp.asarray(pos)
+        upd = jax.vmap(lambda c, n, p:
+                       jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
+        cache = upd(cache, k_new, posj)
+        plan = update_block_summaries(plan, k_new, posj, k_block=blk)
+    return plan, cache, jnp.asarray(pos)
+
+
+def test_incremental_summaries_match_from_scratch():
+    """Append-only maintenance (ragged slot lengths, one slot reset and
+    re-claimed mid-stream — the serving lifecycle) leaves the summaries
+    bit-identical to recomputing them from the cache."""
+    b, kv, s, d, blk = 2, 2, 32, 8, 8
+    plan = init_decode_plan(b, kv, s, d, blk)
+    cache = jnp.zeros((b, s, kv, d), jnp.float32)
+    upd = jax.vmap(lambda c, n, p:
+                   jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
+    pos = np.zeros(b, np.int32)
+    for t in range(10):
+        if t == 6:
+            # slot 1 finishes; a new request claims it: cache region
+            # zeroed, plan slot reset, position back to 0
+            cache = cache.at[1].set(0.0)
+            plan = reset_plan_slot(plan, 1)
+            pos[1] = 0
+        k_new = _rand(jax.random.PRNGKey(1000 + t), (b, 1, kv, d))
+        posj = jnp.asarray(pos)
+        cache = upd(cache, k_new, posj)
+        plan = update_block_summaries(plan, k_new, posj, k_block=blk)
+        last = pos.copy()
+        pos += 1
+    posj = jnp.asarray(last)
+    ref_min, ref_max = summaries_from_cache(cache, posj, k_block=blk)
+    np.testing.assert_array_equal(np.asarray(plan["k_min"]),
+                                  np.asarray(ref_min))
+    np.testing.assert_array_equal(np.asarray(plan["k_max"]),
+                                  np.asarray(ref_max))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 12), st.integers(0, 2 ** 31 - 1))
+    def test_property_incremental_plan_equals_replan(n_steps, seed):
+        """After ANY append sequence, the incrementally-maintained state
+        yields exactly the plan a from-scratch re-plan produces: the
+        summaries are bitwise equal to ``summaries_from_cache``, so
+        ``incremental_plan`` from the maintained state == from the
+        rebuilt state, and the full re-plan is a pure function of the
+        cache either way."""
+        b, kv, s, d, blk = 1, 2, 32, 8, 8
+        positions = [[t] for t in range(n_steps)]
+        plan, cache, pos = _append_sequence(None, b, kv, s, d, blk,
+                                            positions)
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.standard_normal((b, kv, 2, d)), jnp.float32)
+        # rebuild the state from scratch off the same cache
+        k_min, k_max = summaries_from_cache(cache, pos, k_block=blk)
+        rebuilt = {**plan, "k_min": k_min, "k_max": k_max}
+        out_inc = incremental_plan(q, cache, plan, pos,
+                                   topk_k=4, k_block=blk)
+        out_scr = incremental_plan(q, cache, rebuilt, pos,
+                                   topk_k=4, k_block=blk)
+        for a, bb in zip(out_inc, out_scr):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_full_replan_covers_all_selected_tokens():
+    """Every token the bisect threshold selects lives in a planned
+    block (P = nkb: nothing may be dropped)."""
+    b, kv, g, s, d, blk = 2, 2, 2, 64, 8, 8
+    nkb = s // blk
+    q = _rand(jax.random.PRNGKey(0), (b, kv, g, d))
+    k = _rand(jax.random.PRNGKey(1), (b, s, kv, d))
+    pos = jnp.asarray([s - 1, 17], jnp.int32)
+    idx, cnt, thr = full_replan(q, k, pos, topk_k=4, k_block=blk,
+                                plan_blocks=nkb)
+    sc = jnp.einsum("bkgd,bskd->bkgs", q, k) / np.sqrt(d)
+    valid = (jnp.arange(s) <= pos[:, None])[:, None, None, :]
+    sel = bisect_select(jnp.where(valid, sc, -jnp.inf), thr) & valid
+    sel_blocks = sel.reshape(b, kv, g, nkb, blk).any(axis=(2, 4))
+    idxn, cntn = np.asarray(idx), np.asarray(cnt)
+    for i in range(b):
+        for j in range(kv):
+            planned = set(idxn[i, j, :cntn[i, j]].tolist())
+            needed = set(np.nonzero(np.asarray(sel_blocks[i, j]))[0].tolist())
+            assert needed <= planned, (needed, planned)
+            # ascending unique live entries (compact_kv_plan layout)
+            live = idxn[i, j, :cntn[i, j]]
+            assert (np.diff(live) > 0).all()
+
+
+def test_incremental_plan_enters_and_retires_blocks():
+    """A freshly appended block enters the plan the step its first
+    token lands; with a tight budget, a colder block retires."""
+    b, kv, s, d, blk = 1, 1, 32, 8, 8
+    plan = init_decode_plan(b, kv, s, d, blk, plan_blocks=2)
+    cache = jnp.zeros((b, s, kv, d), jnp.float32)
+    q = _rand(jax.random.PRNGKey(5), (b, kv, 1, d))
+    # block 0: weak keys; block 1: strong keys aligned with q
+    strong = 10.0 * q[:, :, 0][:, None, :, :]                # (B,1,KV,D)
+    upd = jax.vmap(lambda c, n, p:
+                   jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
+    for t in range(blk):
+        kn = 0.01 * _rand(jax.random.PRNGKey(t), (b, 1, kv, d))
+        cache = upd(cache, kn, jnp.asarray([t], jnp.int32))
+        plan = update_block_summaries(plan, kn, jnp.asarray([t]),
+                                      k_block=blk)
+    idx0, cnt0, _ = incremental_plan(q, cache, plan,
+                                     jnp.asarray([blk - 1]), topk_k=2,
+                                     k_block=blk)
+    assert int(cnt0[0, 0]) == 1 and int(idx0[0, 0, 0]) == 0
+    cache = upd(cache, strong, jnp.asarray([blk], jnp.int32))
+    plan = update_block_summaries(plan, strong, jnp.asarray([blk]),
+                                  k_block=blk)
+    idx1, cnt1, _ = incremental_plan(q, cache, plan, jnp.asarray([blk]),
+                                     topk_k=2, k_block=blk)
+    assert 1 in idx1[0, 0, :int(cnt1[0, 0])]                 # entered
+
+
+def test_block_upper_bound_never_underestimates():
+    """The Quest bound must dominate every true token score in the
+    block for mixed-sign queries (the whole point of ranking blocks by
+    it: a block holding a top-k key may never be evicted because its
+    bound undershot)."""
+    from repro.core.decode_plan import block_upper_bounds
+    b, kv, g, s, d, blk = 2, 2, 3, 64, 8, 8
+    q = _rand(jax.random.PRNGKey(20), (b, kv, g, d))
+    k = _rand(jax.random.PRNGKey(21), (b, s, kv, d))
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    k_min, k_max = summaries_from_cache(k, pos, k_block=blk)
+    ub = block_upper_bounds(q, k_min, k_max, sm_scale=1.0 / np.sqrt(d))
+    sc = jnp.einsum("bkgd,bskd->bkgs", q, k) / np.sqrt(d)
+    true_max = sc.reshape(b, kv, g, s // blk, blk).max(axis=-1)
+    assert float(jnp.min(ub - true_max)) >= -1e-6
+
+
+def test_reset_plan_slot_restores_init():
+    b, kv, s, d, blk = 2, 2, 16, 4, 8
+    plan = init_decode_plan(b, kv, s, d, blk)
+    k_new = _rand(jax.random.PRNGKey(0), (b, 1, kv, d))
+    plan = update_block_summaries(plan, k_new, jnp.zeros(b, jnp.int32),
+                                  k_block=blk)
+    plan = {**plan, "kv_counts": plan["kv_counts"] + 3}
+    reset = reset_plan_slot(plan, 0)
+    fresh = init_decode_plan(b, kv, s, d, blk)
+    for name in ("k_min", "k_max", "kv_indices", "kv_counts"):
+        np.testing.assert_array_equal(np.asarray(reset[name][0]),
+                                      np.asarray(fresh[name][0]))
+        if name in ("k_min", "k_max"):                       # slot 1 kept
+            np.testing.assert_array_equal(np.asarray(reset[name][1]),
+                                          np.asarray(plan[name][1]))
+
+
+# ---------------------------------------------------------------------------
+# Decode gather kernel
+# ---------------------------------------------------------------------------
+
+def test_decode_kernel_matches_dense_topk_ragged():
+    """Planned kernel vs the dense bisect-top-k oracle at ragged
+    per-slot lengths, including a first-token slot (pos=0)."""
+    b, kv, g, s, d, blk = 3, 2, 2, 64, 16, 16
+    nkb = s // blk
+    q = _rand(jax.random.PRNGKey(0), (b, kv, g, d))
+    k = _rand(jax.random.PRNGKey(1), (b, s, kv, d))
+    v = _rand(jax.random.PRNGKey(2), (b, s, kv, d))
+    pos = jnp.asarray([s - 1, 21, 0], jnp.int32)
+    idx, cnt, thr = full_replan(q, k, pos, topk_k=4, k_block=blk,
+                                plan_blocks=nkb)
+    out = sata_decode_attention(q, k, v, idx, cnt, thr, pos,
+                                k_block=blk, interpret=True)
+    ref = _jnp_topk_decode(q, k, v, pos, topk_k=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_kernel_bitwise_equal_to_dense_schedule():
+    """Planned schedule vs all-valid-blocks schedule, same thresholds:
+    a fully-masked tile is an exact no-op in the online softmax, so the
+    outputs must be BITWISE equal — the replan_interval=1 exactness the
+    bench pins."""
+    b, kv, g, s, d, blk = 2, 2, 1, 64, 8, 8
+    nkb = s // blk
+    q = _rand(jax.random.PRNGKey(3), (b, kv, g, d))
+    k = _rand(jax.random.PRNGKey(4), (b, s, kv, d))
+    v = _rand(jax.random.PRNGKey(5), (b, s, kv, d))
+    pos = jnp.asarray([s - 1, 30], jnp.int32)
+    idx, cnt, thr = full_replan(q, k, pos, topk_k=3, k_block=blk,
+                                plan_blocks=nkb)
+    out_plan = sata_decode_attention(q, k, v, idx, cnt, thr, pos,
+                                     k_block=blk, interpret=True)
+    idx_d = jnp.broadcast_to(jnp.arange(nkb, dtype=jnp.int32),
+                             (b, kv, nkb))
+    cnt_d = jnp.full((b, kv), nkb, jnp.int32)
+    out_dense = sata_decode_attention(q, k, v, idx_d, cnt_d, thr, pos,
+                                      k_block=blk, interpret=True)
+    assert float(jnp.max(jnp.abs(out_plan - out_dense))) == 0.0
+
+
+def test_decode_kernel_empty_plan_zero_output():
+    """kv_counts == 0 (nothing planned yet) must emit zeros, not stale
+    or NaN accumulator state."""
+    b, kv, g, s, d, blk = 2, 1, 2, 32, 8, 8
+    q = _rand(jax.random.PRNGKey(6), (b, kv, g, d))
+    k = _rand(jax.random.PRNGKey(7), (b, s, kv, d))
+    v = _rand(jax.random.PRNGKey(8), (b, s, kv, d))
+    idx = jnp.zeros((b, kv, 2), jnp.int32)
+    cnt = jnp.zeros((b, kv), jnp.int32).at[1, 0].set(1)
+    thr = jnp.full((b, kv, g, 1), -1e9, jnp.float32)
+    out = sata_decode_attention(q, k, v, idx, cnt, thr,
+                                jnp.asarray([0, 0], jnp.int32),
+                                k_block=blk, interpret=True)
+    assert float(jnp.abs(out[0]).max()) == 0.0
+    assert bool(jnp.isfinite(out).all())
+    assert float(jnp.abs(out[1]).max()) > 0.0       # row with work attends
+
+
+def test_decode_fetch_stats_scale_with_plan():
+    cnt = np.array([[2, 3], [1, 1]])
+    pos = np.array([63, 15])
+    st_ = decode_fetch_stats(cnt, pos, k_block=16, d=8)
+    assert st_["kv_fetch_tiles_plan"] == 7
+    assert st_["kv_fetch_tiles_dense"] == (4 + 1) * 2
+    assert st_["kv_fetch_bytes_plan"] == 7 * 2 * 16 * 8 * 4
+
+
+# ---------------------------------------------------------------------------
+# Model routing + end-to-end decode
+# ---------------------------------------------------------------------------
+
+def _greedy_logits(cfg, params, toks, max_len):
+    cache = dec.init_cache(cfg, batch=toks.shape[0], max_len=max_len)
+    outs = []
+    for t in range(toks.shape[1]):
+        lg, cache = dec.serve_step(params, cfg, cache, toks[:, t:t + 1],
+                                   jnp.int32(t))
+        outs.append(lg[:, 0])
+    return jnp.stack(outs, axis=1), cache
+
+
+@pytest.mark.parametrize("arch,kv_heads", [("qwen3-4b", 4),
+                                           ("olmo-1b", 2)])
+def test_sata_decode_matches_dense_decode(arch, kv_heads):
+    """End-to-end serve_step parity: SATA decode route (full re-plan
+    every step) vs dense decode, same bisect selection — GQA grouping
+    (G > 1) covered by the olmo variant."""
+    base = dataclasses.replace(SMOKE[arch], n_kv_heads=kv_heads,
+                               topk_impl="bisect")
+    cfg_d = dataclasses.replace(base, sata_decode="off")
+    cfg_s = dataclasses.replace(base, sata_decode="on",
+                                sata_decode_block=8, sata_decode_replan=1)
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg_d)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, base.vocab_size, (2, 6)), jnp.int32)
+    ld, _ = _greedy_logits(cfg_d, params, toks, max_len=16)
+    ls, cache = _greedy_logits(cfg_s, params, toks, max_len=16)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(ls),
+                               rtol=2e-5, atol=2e-5)
+    assert "plan" in cache["kv"]
+
+
+def test_sata_decode_incremental_route_runs():
+    """replan_interval > 1 exercises the summary-ranked incremental
+    branch (approximate): finite logits, plan counts within budget."""
+    cfg = dataclasses.replace(SMOKE["qwen3-4b"], topk_impl="bisect",
+                              sata_decode="on", sata_decode_block=8,
+                              sata_decode_blocks=2, sata_decode_replan=3)
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 7)), jnp.int32)
+    lg, cache = _greedy_logits(cfg, params, toks, max_len=16)
+    assert bool(jnp.isfinite(lg).all())
+    plan = cache["kv"]["plan"]
+    assert int(jnp.max(plan["kv_counts"])) <= 2
+    assert int(plan["step"][0]) == 7
+
+
+def test_sata_decode_routing():
+    cfg = SMOKE["qwen3-4b"]
+    assert not sata_decode_on(cfg, 64)                  # auto, short cache
+    assert sata_decode_on(
+        dataclasses.replace(cfg, sata_decode="on", sata_decode_block=16), 64)
+    assert not sata_decode_on(
+        dataclasses.replace(cfg, sata_decode="on", sata_decode_block=16,
+                            attention_variant="dense"), 64)
+    with pytest.raises(ValueError):
+        sata_decode_on(
+            dataclasses.replace(cfg, sata_decode="on",
+                                sata_decode_block=48), 64)
+    # auto follows the bisect decision at the cache length
+    assert sata_decode_on(dataclasses.replace(cfg, topk_impl="bisect"), 64)
+
+
+# ---------------------------------------------------------------------------
+# Serving loop: per-slot positions + slot reset
+# ---------------------------------------------------------------------------
+
+def test_serve_outputs_independent_of_slot_count():
+    """The lockstep-bug regression: a request's tokens depend only on
+    its own prompt — reusing a freed slot (fewer slots than requests)
+    must not leak the previous occupant's cache or position."""
+    from repro.launch.serve import serve
+    a = serve("olmo-1b", smoke=True, n_requests=4, batch_slots=2,
+              gen_len=4, max_len=32)
+    b = serve("olmo-1b", smoke=True, n_requests=4, batch_slots=4,
+              gen_len=4, max_len=32)
+    assert a["outputs"] == b["outputs"]
+    assert set(a["request_latency_s"]) == {0, 1, 2, 3}
+    assert all(v > 0 for v in a["request_latency_s"].values())
+
+
+def test_serve_reports_per_request_latency():
+    from repro.launch.serve import serve
+    out = serve("olmo-1b", smoke=True, n_requests=3, batch_slots=3,
+                gen_len=3, max_len=16)
+    assert len(out["request_latency_s"]) == 3
+    assert out["latency_mean_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention context-length mask
+# ---------------------------------------------------------------------------
+
+def test_cross_attention_decode_masks_padded_context():
+    """Two different paddings of the same image context must decode
+    identically once ``context_lengths`` is threaded — and differ
+    without it (the silent-ignore bug this pins).  The vlm family's
+    context K/V is per-position (no encoder mixing), so the decode-time
+    mask fully isolates the padded region."""
+    cfg = SMOKE["llama-3.2-vision-90b"]
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+    # the gated x-attn inits closed (tanh(0) = 0) — open it so the
+    # context actually reaches the logits
+    params["cross_layers"] = {**params["cross_layers"],
+                              "gate": jnp.ones_like(
+                                  params["cross_layers"]["gate"])}
+    rng = np.random.default_rng(2)
+    b, s_ctx, length = 2, cfg.n_image_tokens, 5
+    real = rng.standard_normal((b, s_ctx, cfg.d_model))
+    pad_a, pad_b = real.copy(), real.copy()
+    pad_a[:, length:] = rng.standard_normal((b, s_ctx - length,
+                                             cfg.d_model))
+    pad_b[:, length:] = 5.0 * rng.standard_normal((b, s_ctx - length,
+                                                   cfg.d_model))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+    lengths = np.full(b, length)
+
+    def run(embeds, with_lengths):
+        batch = {"image_embeds": jnp.asarray(embeds, jnp.float32)}
+        if with_lengths:
+            batch["context_lengths"] = jnp.asarray(lengths)
+        cache = dec.init_cache(cfg, batch=b, max_len=8)
+        cache = dec.prefill_context(params, cfg, cache, batch)
+        lg, _ = dec.serve_step(params, cfg, cache, toks, jnp.int32(0))
+        return np.asarray(lg)
+
+    np.testing.assert_array_equal(run(pad_a, True), run(pad_b, True))
+    assert np.abs(run(pad_a, False) - run(pad_b, False)).max() > 0
