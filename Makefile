@@ -3,7 +3,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test dev-deps bench bench-select bench-decode roofline-kernel
+.PHONY: test dev-deps bench bench-select bench-decode serve-smoke \
+	roofline-kernel
 
 dev-deps:
 	-pip install -r requirements-dev.txt
@@ -23,10 +24,17 @@ bench-select:
 	python -m benchmarks.run select --json-dir results/bench
 
 # BENCH_decode.json: dense decode vs the SATA decode plan + gather
-# kernel (tok/s, fetch bytes, replan-interval exactness) — the serving
+# kernel (tok/s, fetch bytes, replan-interval traffic tradeoff,
+# paged-vs-contiguous parity + HBM, prefill handoff) — the serving
 # row of the perf trajectory.
 bench-decode:
 	python -m benchmarks.run decode --json-dir results/bench
+
+# End-to-end serving smoke: the SATA decode route on the paged KV pool
+# (half the contiguous HBM reservation; exercises admission control,
+# stalls, and preemption) — asserts completion + fetch reduction.
+serve-smoke:
+	python examples/serve_topk.py --paged
 
 roofline-kernel:
 	python -m repro.launch.roofline --kernel

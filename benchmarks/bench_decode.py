@@ -14,7 +14,17 @@ with the *prefix* (dense decode streams every cached block) or with the
     (a tile whose entries are all threshold-masked is an exact no-op
     in the online softmax), and matches the pure-jnp top-k decode
     reference to fp32 accumulation tolerance;
-  * plan-update cost — incremental (summary-ranked) vs full re-plan.
+  * plan-update cost — incremental (summary-ranked) vs full re-plan;
+  * paged pool — page-table-indirect kernel vs the contiguous cache:
+    bitwise parity, equal-throughput timing, and reserved-vs-used HBM
+    for a mixed short/long-prefix slot mix (the utilization win paging
+    exists for);
+  * re-plan traffic tradeoff — amortized per-step selection bytes
+    across ``sata_decode_replan`` intervals (a full re-plan streams all
+    cached K; incremental steps read summaries + planned keys), the
+    exactness↔traffic knob in true bytes;
+  * prefill→decode handoff — a seeded plan starts decode step 0 on the
+    planned incremental path (0 full re-plans) instead of cold.
 """
 from __future__ import annotations
 
@@ -166,4 +176,151 @@ def bench_decode() -> List[Row]:
                       repeat=3)
         rows.append((f"decode/plan_update_{name}/S{s}", us,
                      f"P {nkb // 4} of nkb {nkb}"))
+
+    rows += _bench_paged(rng, interp, mode)
+    rows += _bench_replan_traffic()
+    rows += _bench_handoff()
     return rows
+
+
+def _bench_paged(rng, interp, mode) -> List[Row]:
+    """Paged pool vs contiguous cache: bitwise parity, equal-throughput
+    kernel timing, and reserved-vs-used HBM at a mixed short/long-prefix
+    slot mix — the serving-utilization case paging exists for."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.decode_plan import full_replan
+    from repro.core.paging import PageAllocator, logical_kv_view
+    from repro.kernels.ops import sata_decode_attention
+
+    rows: List[Row] = []
+    b, kv, g, d, blk = 4, 2, 4, 64, 128
+    s = 4096
+    nkb = s // blk
+    # mixed slot mix: one max_len prefix, three short ones — contiguous
+    # reserves B·max_len regardless; the pool holds only mapped pages
+    pos = jnp.asarray([s - 1, 511, 255, 127], jnp.int32)
+    used_pages = int(sum(int(p) // blk + 1 for p in pos))
+    n_pages = used_pages + used_pages // 4 + 1      # 25% headroom + ovf
+    alloc = PageAllocator(n_pages, b, nkb, blk)
+    for i in range(b):
+        ok = alloc.ensure(i, int(pos[i]))
+        assert ok, (i, int(pos[i]))
+    tbl = jnp.asarray(alloc.table)
+
+    k_c = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v_c = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((b, kv, g, d)), jnp.float32)
+    # scatter the SAME rows into the pool so both layouts see one cache
+    k_p = jnp.zeros((n_pages, blk, kv, d), jnp.float32)
+    v_p = jnp.zeros((n_pages, blk, kv, d), jnp.float32)
+    for i in range(b):
+        for lp in range(int(pos[i]) // blk + 1):
+            ph = int(alloc.table[i, lp])
+            k_p = k_p.at[ph].set(k_c[i, lp * blk:(lp + 1) * blk])
+            v_p = v_p.at[ph].set(v_c[i, lp * blk:(lp + 1) * blk])
+    assert bool((logical_kv_view(k_p, tbl) * (
+        jnp.arange(s)[None, :, None, None] <= pos[:, None, None, None])
+        == k_c * (jnp.arange(s)[None, :, None, None]
+                  <= pos[:, None, None, None])).all())
+
+    idx, cnt, thr = jax.jit(lambda q_, k__: full_replan(
+        q_, k__, pos, topk_k=64, k_block=blk, plan_blocks=nkb))(q, k_c)
+
+    fn_c = jax.jit(lambda q_, k__, v__: sata_decode_attention(
+        q_, k__, v__, idx, cnt, thr, pos, k_block=blk, interpret=interp))
+    fn_p = jax.jit(lambda q_, k__, v__: sata_decode_attention(
+        q_, k__, v__, idx, cnt, thr, pos, k_block=blk, page_table=tbl,
+        interpret=interp))
+    out_c = fn_c(q, k_c, v_c)
+    out_p = fn_p(q, k_p, v_p)
+    err = float(jnp.max(jnp.abs(out_c - out_p)))
+    rows.append((f"decode/paged_parity/S{s}_mixed", 0.0,
+                 f"max_err {err:.2e} paged vs contiguous (replan=1 plan)"))
+    jax.block_until_ready(fn_c(q, k_c, v_c))
+    _, us_c = timed(lambda: jax.block_until_ready(fn_c(q, k_c, v_c)),
+                    repeat=3)
+    jax.block_until_ready(fn_p(q, k_p, v_p))
+    _, us_p = timed(lambda: jax.block_until_ready(fn_p(q, k_p, v_p)),
+                    repeat=3)
+    row_bytes = 2 * kv * d * 4
+    reserved_c = b * s * row_bytes
+    reserved_p = n_pages * blk * row_bytes
+    used_p = used_pages * blk * row_bytes
+    rows.append((f"decode/paged_tok_s_{mode}/S{s}_mixed", us_p,
+                 f"{b * 1e6 / us_p:.1f} tok/s paged vs "
+                 f"{b * 1e6 / us_c:.1f} contiguous "
+                 f"({us_c / max(us_p, 1e-9):.2f}x)"))
+    rows.append((f"decode/paged_hbm/S{s}_mixed", 0.0,
+                 f"reserved {reserved_p} B vs {reserved_c} B contiguous "
+                 f"({reserved_c / reserved_p:.2f}x less), used {used_p} B "
+                 f"({used_p / reserved_p:.2f} pool occupancy)"))
+    return rows
+
+
+def _bench_replan_traffic() -> List[Row]:
+    """Amortized per-step selection+kernel bytes across re-plan
+    intervals: interval 1 is exact but streams all cached K every step;
+    longer intervals amortize the full re-plan over cheap incremental
+    steps (summaries + planned keys)."""
+    import numpy as np
+    from repro.kernels.ops import decode_fetch_stats
+
+    rows: List[Row] = []
+    b, kv, d, blk, s = 2, 2, 64, 128, 4096
+    nkb = s // blk
+    sel = nkb // 4                                 # 25% occupancy plan
+    cnt = np.full((b, kv), sel)
+    pos = np.full(b, s - 1)
+    for interval in (1, 2, 4, 16):
+        st = decode_fetch_stats(cnt, pos, k_block=blk, d=d,
+                                replan=1.0 / interval, nkb=nkb)
+        tag = "exact" if interval == 1 else "approx"
+        rows.append((f"decode/replan_traffic/S{s}_iv{interval}", 0.0,
+                     f"step {st['step_bytes_plan_route']} B plan-route vs "
+                     f"{st['step_bytes_dense_route']} B dense ("
+                     f"{st['step_bytes_dense_route'] / st['step_bytes_plan_route']:.2f}x, "
+                     f"plan side {st['plan_fetch_bytes_step']} B, {tag})"))
+    return rows
+
+
+def _bench_handoff() -> List[Row]:
+    """Prefill→decode handoff on the reduced serving model: a seeded
+    plan runs decode step 0 on the planned incremental path (0 full
+    re-plans), where a cold claim would re-plan (stream the whole
+    prefix) first."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.archs import SMOKE
+    from repro.models import decode as dec
+    from repro.models import model as mdl
+
+    cfg = dataclasses.replace(SMOKE["qwen3-4b"], topk_impl="bisect",
+                              sata_decode="on", sata_decode_block=8,
+                              sata_decode_replan=8)
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (1, 8)), jnp.int32)
+    max_len = 32
+
+    lg0, state = dec.prefill_prompt(params, cfg, toks, max_len)
+    cache = dec.init_cache(cfg, 1, max_len)
+    cache = dec.install_prefill(cfg, cache, 0, state)
+    nxt = jnp.argmax(lg0, -1)[:, None].astype(jnp.int32)
+    _, cache = dec.serve_step(params, cfg, cache, nxt, jnp.int32(8))
+    seeded = int(np.asarray(cache["kv"]["plan"]["replans"])[0])
+    planned = int(np.asarray(cache["kv"]["plan"]["kv_counts"]).min())
+
+    cold = dec.init_cache(cfg, 1, max_len)
+    for t in range(8):
+        _, cold = dec.serve_step(params, cfg, cold, toks[:, t:t + 1],
+                                 jnp.int32(t))
+    _, cold = dec.serve_step(params, cfg, cold, nxt, jnp.int32(8))
+    cold_replans = int(np.asarray(cold["kv"]["plan"]["replans"])[0])
+    return [("decode/prefill_handoff/step0", 0.0,
+             f"seeded: {seeded} full re-plans at decode step 0 "
+             f"(plan rows live, min counts {planned}) vs {cold_replans} "
+             f"on the cold token-by-token path")]

@@ -36,6 +36,31 @@ Two plan refresh modes, blended by ``replan_interval``:
   threshold *within* the plan.  Selection work and K fetch both scale
   with ``P·k_block``, not the prefix.
 
+The re-plan trigger is either a fixed integer interval
+(``plan["step"] % interval == 0`` — bit-compatible with PR 3) or
+**churn-adaptive** (``churn_budget`` set): each incremental step
+measures plan churn — blocks entering + retiring per (slot, kv head) —
+and a full re-plan fires once the accumulated churn reaches
+``churn_budget · P``.  A stable plan then re-plans rarely (selection
+traffic stays O(P·k_block)); a drifting one re-plans early (exactness
+recovers before the summary ranking strays far).
+
+**Paged cache**: every planner works identically over the paged
+serving layout (``core/paging.py``) — block summaries and plan indices
+are *logical* (block == page), so only key gathers change: pass the
+per-slot ``page_table`` and hand ``k_cache`` as the physical pool
+``(n_pages, page, KV, D)``.  The full re-plan streams the gathered
+logical view (it reads all cached K either way); the incremental
+gather dereferences pages per planned block, staying O(P·page).
+
+**Prefill→decode handoff**: ``plan_from_prefill`` seeds a claimed
+slot's state from prefill outputs — summaries recomputed from the
+written keys (bit-identical to incremental maintenance by the
+associativity argument above) and the plan rows from the prompt tail's
+selected blocks — with ``step`` already *off* the re-plan beat, so the
+first decode steps run the planned incremental path instead of a cold
+full re-plan (or, worse, a dense step).
+
 All functions are jittable; the state is a plain dict pytree so it
 stacks across layers and rides the serving scan next to the KV cache.
 """
@@ -48,6 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blockmap import bisect_select, compact_kv_plan
+from repro.core.paging import logical_kv_view
 from repro.core.selection import NEG_INF, kth_largest_bisect
 
 PlanState = Dict[str, jax.Array]
@@ -69,6 +95,12 @@ def init_decode_plan(batch: int, n_kv_heads: int, max_len: int, d: int,
         "kv_indices": jnp.zeros((batch, n_kv_heads, p), jnp.int32),
         "kv_counts": jnp.zeros((batch, n_kv_heads), jnp.int32),
         "step": jnp.zeros((), jnp.int32),
+        # churn-adaptive trigger state + re-plan counter (serving reads
+        # the counter for true plan-side traffic accounting); both stay
+        # untouched on the fixed-interval path, so integer intervals are
+        # bit-compatible with the pre-churn state machine.
+        "churn": jnp.zeros((), jnp.float32),
+        "replans": jnp.zeros((), jnp.int32),
     }
 
 
@@ -80,11 +112,11 @@ def reset_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
     (``step`` is global and has no batch axis)."""
     ix = (slice(None),) * batch_axis + (slot,)
     return {
+        **plan,                      # step/churn/replans are global
         "k_min": plan["k_min"].at[ix].set(jnp.inf),
         "k_max": plan["k_max"].at[ix].set(-jnp.inf),
         "kv_indices": plan["kv_indices"].at[ix].set(0),
         "kv_counts": plan["kv_counts"].at[ix].set(0),
-        "step": plan["step"],
     }
 
 
@@ -180,21 +212,41 @@ def full_replan(q: jax.Array, k_cache: jax.Array, pos: jax.Array, *,
 
 
 def gather_planned_keys(k_cache: jax.Array, kv_indices: jax.Array, *,
-                        k_block: int) -> Tuple[jax.Array, jax.Array]:
+                        k_block: int,
+                        page_table: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
     """Fetch only the planned blocks' keys: (B, KV, P·k_block, D) plus
-    the gathered token positions (B, KV, P·k_block).  This is the
-    O(P·k_block) selection-side fetch the incremental path banks on."""
-    b, s, kv, d = k_cache.shape
+    the gathered (logical) token positions (B, KV, P·k_block).  This is
+    the O(P·k_block) selection-side fetch the incremental path banks on.
+
+    Contiguous layout: k_cache (B, S, KV, D).  Paged layout
+    (``page_table`` (B, max_pages) given): k_cache is the physical pool
+    (n_pages, page, KV, D) with page == k_block — each planned logical
+    block dereferences the table to its physical page, so the fetch
+    still touches only P pages per (slot, head)."""
     tok = (kv_indices[..., None] * k_block +
            jnp.arange(k_block)[None, None, None, :])          # (B,KV,P,kb)
-    tok = tok.reshape(b, kv, -1)                              # (B,KV,P·kb)
-    kg = jnp.take_along_axis(
-        k_cache, tok.transpose(0, 2, 1)[..., None], axis=1)   # (B,P·kb,KV,D)
-    return kg.transpose(0, 2, 1, 3), tok
+    if page_table is None:
+        b, s, kv, d = k_cache.shape
+        tok = tok.reshape(b, kv, -1)                          # (B,KV,P·kb)
+        kg = jnp.take_along_axis(
+            k_cache, tok.transpose(0, 2, 1)[..., None], axis=1)
+        return kg.transpose(0, 2, 1, 3), tok                  # (B,KV,P·kb,D)
+    b, kv, p = kv_indices.shape
+    phys = jnp.take_along_axis(page_table,
+                               kv_indices.reshape(b, -1),
+                               axis=1).reshape(b, kv, p)      # (B,KV,P)
+    # pool → (KV, n_pages, page, D), then per-head physical-page gather
+    kp = jnp.moveaxis(k_cache, 2, 0)
+    kg = jax.vmap(lambda heads, ph: heads[ph],
+                  in_axes=(0, 1), out_axes=1)(kp, phys)       # (B,KV,P,pg,D)
+    return (kg.reshape(b, kv, p * k_block, k_cache.shape[-1]),
+            tok.reshape(b, kv, -1))
 
 
 def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
-                     pos: jax.Array, *, topk_k: int, k_block: int
+                     pos: jax.Array, *, topk_k: int, k_block: int,
+                     page_table: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Approximate per-step plan from the incrementally-maintained block
     summaries: rank all valid blocks by their upper-bound score (new
@@ -202,11 +254,13 @@ def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     retires when its bound drops out of the top-P), then bisect the
     exact token threshold over the planned blocks only.
 
-    Shapes as ``full_replan``.  Cost: O(nkb·D) ranking + O(P·k_block·D)
-    threshold — independent of the prefix length.
+    Shapes as ``full_replan``; with ``page_table`` set, ``k_cache`` is
+    the physical page pool and the planned-block gather walks the table
+    (see ``gather_planned_keys``).  Cost: O(nkb·D) ranking +
+    O(P·k_block·D) threshold — independent of the prefix length.
     """
-    b, s, kv, d = k_cache.shape
-    nkb = s // k_block
+    b, kv, _, d = q.shape
+    nkb = plan["k_min"].shape[2]
     p = plan["kv_indices"].shape[-1]
     sm_scale = 1.0 / np.sqrt(d)
     valid_blk = (jnp.arange(nkb) * k_block <= pos[:, None])   # (B, nkb)
@@ -222,7 +276,8 @@ def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     occ = bisect_select(ub_row, thr_b) & valid_blk[:, None, :]
     kv_indices, kv_counts = _compact_rows(occ, p)
     # exact token threshold, restricted to the planned blocks
-    kg, tok = gather_planned_keys(k_cache, kv_indices, k_block=k_block)
+    kg, tok = gather_planned_keys(k_cache, kv_indices, k_block=k_block,
+                                  page_table=page_table)
     sc = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32),
                     kg.astype(jnp.float32),
                     preferred_element_type=jnp.float32) * sm_scale
@@ -234,31 +289,117 @@ def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     return kv_indices, kv_counts, thr
 
 
+def _plan_occupancy(kv_indices: jax.Array, kv_counts: jax.Array,
+                    nkb: int) -> jax.Array:
+    """(B, KV, P) padded index lists → (B, KV, nkb) bool occupancy
+    (padding slots past the count are ignored)."""
+    hit = kv_indices[..., None] == jnp.arange(nkb)            # (B,KV,P,nkb)
+    live = (jnp.arange(kv_indices.shape[-1]) <
+            kv_counts[..., None])[..., None]
+    return (hit & live).any(axis=-2)
+
+
+def plan_churn(plan: PlanState, kv_indices: jax.Array,
+               kv_counts: jax.Array) -> jax.Array:
+    """Blocks entering + retiring between the carried plan and this
+    step's: per-slot mean over kv heads, then MAX over slots — the
+    drift signal the churn-adaptive trigger integrates.  Max, not mean,
+    across the batch: the re-plan trigger is global, and a lockstep
+    serving batch is mostly idle slots whose plans never move — a mean
+    would dilute one drifting request's churn by the batch width and
+    let its incremental plan stray far past the budget."""
+    nkb = plan["k_min"].shape[2]
+    o_old = _plan_occupancy(plan["kv_indices"], plan["kv_counts"], nkb)
+    o_new = _plan_occupancy(kv_indices, kv_counts, nkb)
+    per_slot = (o_old ^ o_new).sum(-1).astype(jnp.float32).mean(-1)
+    return per_slot.max()
+
+
 def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
                        pos: jax.Array, *, topk_k: int, k_block: int,
-                       replan_interval: int = 1
+                       replan_interval: int = 1,
+                       churn_budget: Optional[float] = None,
+                       page_table: Optional[jax.Array] = None
                        ) -> Tuple[PlanState, jax.Array]:
     """One decode step of plan maintenance (summaries must already hold
     the step's appended key — call ``update_block_summaries`` first).
-    Every ``replan_interval``-th step runs the exact full re-plan;
-    other steps use the incremental summary-ranked plan.  Returns the
-    updated state and the per-row thresholds for the decode kernel.
-    ``replan_interval=1`` re-plans every step (exact top-k)."""
+    Returns the updated state and the per-row thresholds for the decode
+    kernel.
+
+    Re-plan trigger: with ``churn_budget`` set (``sata_decode_replan=
+    "auto"``) a full re-plan fires when the churn accumulated over
+    incremental steps reaches ``churn_budget · P`` (and always at step
+    0 — a cold plan has nothing to rank from); otherwise every
+    ``replan_interval``-th step re-plans and intermediate steps use the
+    incremental summary-ranked plan, bit-compatible with the fixed-
+    interval state machine (``replan_interval=1`` = exact top-k every
+    step).  With ``page_table`` set, ``k_cache`` is the physical page
+    pool of the paged serving layout."""
     p = plan["kv_indices"].shape[-1]
 
     def _full(_):
-        return full_replan(q, k_cache, pos, topk_k=topk_k,
+        kc = k_cache if page_table is None else \
+            logical_kv_view(k_cache, page_table)
+        return full_replan(q, kc, pos, topk_k=topk_k,
                            k_block=k_block, plan_blocks=p)
 
     def _incr(_):
         return incremental_plan(q, k_cache, plan, pos, topk_k=topk_k,
-                                k_block=k_block)
+                                k_block=k_block, page_table=page_table)
 
-    if replan_interval <= 1:
+    churn = plan["churn"]
+    if churn_budget is not None:
+        do_full = (plan["step"] == 0) | (churn >= churn_budget * p)
+        kv_indices, kv_counts, thr = jax.lax.cond(do_full, _full, _incr,
+                                                  None)
+        churn = jnp.where(do_full, 0.0,
+                          churn + plan_churn(plan, kv_indices, kv_counts))
+    elif replan_interval <= 1:
+        do_full = jnp.bool_(True)
         kv_indices, kv_counts, thr = _full(None)
     else:
-        kv_indices, kv_counts, thr = jax.lax.cond(
-            plan["step"] % replan_interval == 0, _full, _incr, None)
+        do_full = plan["step"] % replan_interval == 0
+        kv_indices, kv_counts, thr = jax.lax.cond(do_full, _full, _incr,
+                                                  None)
     new_plan = {**plan, "kv_indices": kv_indices, "kv_counts": kv_counts,
-                "step": plan["step"] + 1}
+                "step": plan["step"] + 1, "churn": churn,
+                "replans": plan["replans"] + do_full.astype(jnp.int32)}
     return new_plan, thr
+
+
+def plan_from_prefill(k_cache: jax.Array, q_tail: jax.Array,
+                      pos: jax.Array, *, topk_k: int, k_block: int,
+                      plan_blocks: Optional[int] = None) -> PlanState:
+    """Seed a decode-plan state from prefill outputs — the prefill→
+    decode handoff.  Instead of claiming a slot cold (empty summaries,
+    forcing the first decode step through a full re-plan that streams
+    the whole prefix), seed:
+
+      * summaries from the keys prefill wrote (``summaries_from_cache``
+        — bit-identical to what incremental maintenance would have
+        accumulated, by min/max associativity);
+      * the plan rows from the prompt *tail's* selected blocks: the
+        prefill block map's last row already knows which k-blocks the
+        final positions touch, and the next decode query sits adjacent
+        to them, so its selection lands in (nearly) the same block set
+        — ``full_replan`` with the tail queries IS that row of the map
+        at exact single-row cost, amortized into prefill (which just
+        streamed all K anyway);
+      * ``step = 1`` — deliberately OFF the re-plan beat, so decode
+        step 0 runs the planned incremental path, not a cold dense
+        re-plan.
+
+    k_cache: (B, S, KV, D) the slot's written cache in LOGICAL layout
+    (paged callers pass ``logical_kv_view``); q_tail: (B, KV, G, D) the
+    last prompt position's grouped queries; pos: (B,) last written
+    positions.  Returns a fresh PlanState for these B slots."""
+    b, s, kv, d = k_cache.shape
+    plan = init_decode_plan(b, kv, s, d, k_block, plan_blocks)
+    k_min, k_max = summaries_from_cache(k_cache, pos, k_block=k_block)
+    p = plan["kv_indices"].shape[-1]
+    kv_indices, kv_counts, _ = full_replan(q_tail, k_cache, pos,
+                                           topk_k=topk_k, k_block=k_block,
+                                           plan_blocks=p)
+    return {**plan, "k_min": k_min, "k_max": k_max,
+            "kv_indices": kv_indices, "kv_counts": kv_counts,
+            "step": jnp.ones((), jnp.int32)}

@@ -1,0 +1,144 @@
+"""Paged serving KV cache: global page pool + per-slot page tables.
+
+Contiguous serving reserves one ``(max_len, KV, D)`` region per batch
+slot, so ``max_len`` is a static worst-case bound and HBM sits reserved
+for prefixes that never materialize.  The paged layout replaces it with
+
+  k_pages / v_pages  (n_pages, page, KV, D) — one global physical pool
+                     per layer; a page holds ``page`` consecutive token
+                     rows of ONE slot's cache;
+  page_table         (B, max_pages) int32 — per-slot logical→physical
+                     page map.  Logical page ``pos // page`` of slot
+                     ``b`` lives at physical page ``page_table[b, lp]``.
+
+Pages are allocated on append (the first write into a logical page maps
+a physical one) and freed when the slot's request completes, so a slot
+only ever holds ``ceil((pos+1)/page)`` pages and pool exhaustion turns
+into *backpressure on the claim loop* (the serving driver defers new
+requests, or stalls a slot one step at a page boundary) instead of a
+shape error.
+
+Physical page 0 is the reserved **overflow page**: unmapped table
+entries point at it, so a write from a stalled slot (its next page
+could not be allocated this step) lands there harmlessly — overflow
+contents are never read as valid data because every read path masks
+key positions ``<= pos`` and a stall can only happen at a page boundary
+(positions inside an already-written page always have their page
+mapped).  The stalled token is simply re-fed once a page frees; the
+incremental plan summaries tolerate the replay because min/max
+absorption of an identical key row is idempotent.
+
+The allocator is deliberately **host-side** (plain numpy): allocation
+is a serving-control decision made between jitted steps, exactly like
+slot claiming.  Device code only ever consumes the resulting table.
+
+SATA decode composes with near-zero kernel change: the decode plan
+(``core/decode_plan.py``) keeps block summaries per *logical* page and
+emits logical page indices; only the kernel's K/V BlockSpec index maps
+dereference the page table (one extra scalar-prefetch operand — grid
+and flash inner loop untouched).  This requires the decode k-block edge
+to equal the page size (plan blocks ARE pages).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+OVERFLOW_PAGE = 0
+
+
+def logical_kv_view(pages: jnp.ndarray, page_table: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Gather the pool back into the contiguous logical layout:
+    pages (n_pages, page, KV, D) + table (B, max_pages)
+    → (B, max_pages·page, KV, D).  Unmapped entries resolve to the
+    overflow page — whatever lives there is masked by position on every
+    read path.  This materializes the full logical cache, so it backs
+    only the paths that already stream all cached K (the dense decode
+    fallback and the exact full re-plan)."""
+    b, mp = page_table.shape
+    g = jnp.take(pages, page_table, axis=0)       # (B, mp, page, KV, D)
+    return g.reshape(b, mp * g.shape[2], *pages.shape[2:])
+
+
+class PageAllocator:
+    """Host-side free-list allocator for the paged pool.
+
+    Positions advance sequentially from 0 within a slot, so logical
+    pages map strictly in order; ``n_mapped[slot]`` is both the mapped
+    count and the next logical page to map.  ``table`` mirrors the
+    device page table (unmapped = OVERFLOW_PAGE)."""
+
+    def __init__(self, n_pages: int, batch_slots: int, max_pages: int,
+                 page: int):
+        assert n_pages >= 2, "pool needs >= 1 usable page + overflow"
+        self.n_pages = int(n_pages)
+        self.page = int(page)
+        self.max_pages = int(max_pages)
+        # LIFO free list keeps recently-freed (cache-warm) pages hot
+        self.free: List[int] = list(range(n_pages - 1, OVERFLOW_PAGE, -1))
+        self.table = np.full((batch_slots, max_pages), OVERFLOW_PAGE,
+                             np.int32)
+        self.n_mapped = np.zeros(batch_slots, np.int32)
+        self.pages_in_use_peak = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.n_pages - 1) - len(self.free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache rows."""
+        return -(-max(int(n_tokens), 0) // self.page)
+
+    def can_admit(self, n_new_pages: int = 1) -> bool:
+        """Admission control for the claim loop: only claim a slot when
+        the pool can back its first pages — exhaustion defers the
+        request instead of landing it on the overflow page."""
+        return len(self.free) >= n_new_pages
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Map physical pages for ``slot`` covering position ``pos``.
+        Returns False (slot must stall this step) on pool exhaustion;
+        any pages mapped before running dry stay mapped."""
+        need = pos // self.page + 1
+        while self.n_mapped[slot] < need:
+            if not self.free:
+                return False
+            phys = self.free.pop()
+            self.table[slot, self.n_mapped[slot]] = phys
+            self.n_mapped[slot] += 1
+        self.pages_in_use_peak = max(self.pages_in_use_peak,
+                                     self.pages_in_use)
+        return True
+
+    def free_slot(self, slot: int) -> int:
+        """Release all of a finished slot's pages back to the pool.
+        Stale table entries are reset to the overflow page (reads are
+        position-masked anyway, but a recycled physical page must not
+        stay visible through an old slot's table row)."""
+        n = int(self.n_mapped[slot])
+        for lp in range(n):
+            self.free.append(int(self.table[slot, lp]))
+        self.table[slot, :] = OVERFLOW_PAGE
+        self.n_mapped[slot] = 0
+        return n
+
+    def stats(self, *, row_bytes: int, layers: int = 1) -> Dict[str, int]:
+        """Pool occupancy in bytes.  ``row_bytes`` = bytes of ONE token
+        row of K+V for one layer (2 · KV · D · itemsize); ``layers``
+        scales to the stacked cache."""
+        page_bytes = self.page * row_bytes * layers
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page,
+            "pages_in_use": self.pages_in_use,
+            "pages_in_use_peak": self.pages_in_use_peak,
+            "hbm_reserved_bytes": self.n_pages * page_bytes,
+            "hbm_used_peak_bytes": self.pages_in_use_peak * page_bytes,
+        }

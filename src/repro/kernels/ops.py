@@ -47,7 +47,7 @@ def default_interpret() -> bool:
                                              "exact", "schedule",
                                              "max_kv_blocks", "selection",
                                              "topk_k", "causal",
-                                             "sel_chunk"))
+                                             "sel_chunk", "on_exceed"))
 def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
                    scores_mask: Optional[jax.Array] = None, *,
                    q_block: int = 128,
@@ -63,6 +63,7 @@ def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
                    block_map: Optional[jax.Array] = None,
                    q_pos: Optional[jax.Array] = None,
                    k_pos: Optional[jax.Array] = None,
+                   on_exceed: str = "truncate",
                    ) -> Tuple[jax.Array, jax.Array]:
     """Top-k selective attention through the SATA plan + Pallas kernel.
 
@@ -96,9 +97,17 @@ def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
     map get it from ``int(kv_counts.max())`` (``compact_kv_plan`` raises
     on a concrete under-estimate); inside jit it must be a static
     over-estimate — derive it from calibration traffic with
-    ``core.blockmap.occupancy_bound`` (an under-estimate cannot be
-    detected in-graph and drops occupied tiles; the default ``None``
-    keeps the safe full ``nkb``).
+    ``core.blockmap.occupancy_bound`` (the default ``None`` keeps the
+    safe full ``nkb``).
+
+    ``on_exceed`` (chunked selection only) decides what happens when a
+    row's true occupancy exceeds ``max_kv_blocks``: ``"truncate"``
+    keeps each row's first ``bound`` occupied k-blocks (the PR-2
+    approximation — an in-graph under-estimate is otherwise
+    undetectable), ``"dense"`` detects the overflow in-graph and
+    re-routes the whole batch through the full-width (dense-grid-cost)
+    schedule instead — the loss-free escape hatch that makes
+    sub-100-percentile ``occupancy_bound`` values safe to serve.
     """
     if schedule not in ("compact", "dense"):
         raise ValueError(f"unknown schedule {schedule!r}")
@@ -106,6 +115,8 @@ def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
         raise ValueError(f"unknown selection {selection!r}")
     if interpret is None:
         interpret = default_interpret()
+    if on_exceed not in ("truncate", "dense"):
+        raise ValueError(f"unknown on_exceed {on_exceed!r}")
     if selection == "chunked":
         if schedule != "compact":
             raise ValueError("chunked selection requires the compact "
@@ -116,7 +127,7 @@ def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
             exact=exact, causal=causal, interpret=interpret,
             max_kv_blocks=max_kv_blocks, sel_chunk=sel_chunk,
             thresholds=thresholds, block_map=block_map,
-            q_pos=q_pos, k_pos=k_pos)
+            q_pos=q_pos, k_pos=k_pos, on_exceed=on_exceed)
     if scores_mask is None:
         raise ValueError("selection='dense' needs scores_mask")
     if causal or any(a is not None for a in
@@ -164,7 +175,8 @@ def sata_attention(q: jax.Array, k_: jax.Array, v: jax.Array,
 
 def _sata_attention_chunked(q, k_, v, *, topk_k, q_block, k_block, exact,
                             causal, interpret, max_kv_blocks, sel_chunk,
-                            thresholds, block_map, q_pos, k_pos):
+                            thresholds, block_map, q_pos, k_pos,
+                            on_exceed="truncate"):
     """Mask-free selection → plan → threshold-mode kernel (see
     ``sata_attention``).  Keys keep their original order, so no
     permutation or scatter-back is needed."""
@@ -194,14 +206,35 @@ def _sata_attention_chunked(q, k_, v, *, topk_k, q_block, k_block, exact,
             q, k_, thresholds, q_block=q_block, k_block=k_block,
             sm_scale=sm_scale, causal=causal, q_pos=q_pos, k_pos=k_pos,
             chunk=chunk)
-    kv_indices, kv_counts = compact_kv_plan(block_map, pad_to=max_kv_blocks)
     pos_q = jnp.broadcast_to(q_pos[None, :, None], (bh, sq, 1))
     pos_k = jnp.broadcast_to(k_pos[None, :, None], (bh, sk, 1))
-    out = sata_block_attention_compact(
-        q, k_, v, kv_indices, kv_counts,
-        thresholds=thresholds if exact else None,
-        q_pos=pos_q, k_pos=pos_k, causal=causal,
-        q_block=q_block, k_block=k_block, interpret=interpret)
+
+    def _run(kv_indices, kv_counts):
+        return sata_block_attention_compact(
+            q, k_, v, kv_indices, kv_counts,
+            thresholds=thresholds if exact else None,
+            q_pos=pos_q, k_pos=pos_k, causal=causal,
+            q_block=q_block, k_block=k_block, interpret=interpret)
+
+    nkb = sk // k_block
+    bounded = max_kv_blocks is not None and max_kv_blocks < nkb
+    if bounded and on_exceed == "dense":
+        # loss-free escape hatch: a row whose occupancy exceeds the
+        # calibrated bound would silently lose selected tiles under
+        # truncation; detect the overflow in-graph and re-route the
+        # batch through the full-width schedule (dense-grid cost, exact
+        # result).  Both plans are cheap; only one kernel launch runs.
+        idx_t, cnt_t = compact_kv_plan(block_map, pad_to=max_kv_blocks,
+                                       truncate=True)
+        idx_f, cnt_f = compact_kv_plan(block_map)
+        out = jax.lax.cond(
+            (cnt_f > max_kv_blocks).any(),
+            lambda _: _run(idx_f, cnt_f),
+            lambda _: _run(idx_t, cnt_t), None)
+    else:
+        kv_indices, kv_counts = compact_kv_plan(block_map,
+                                                pad_to=max_kv_blocks)
+        out = _run(kv_indices, kv_counts)
     return out, block_map
 
 
@@ -210,6 +243,7 @@ def sata_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                           kv_indices: jax.Array, kv_counts: jax.Array,
                           thresholds: jax.Array, pos: jax.Array, *,
                           k_block: int = 128,
+                          page_table: Optional[jax.Array] = None,
                           interpret: Optional[bool] = None) -> jax.Array:
     """Decode-path selective attention: fetch only the planned k-blocks
     of the KV cache for one generated token per slot.
@@ -221,13 +255,28 @@ def sata_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     (B, KV, G, 1) fp32 per-row top-k thresholds (bisect predicate);
     pos: (B,) int32 per-slot positions.  Returns (B, KV, G, D).
 
+    With ``page_table`` (B, max_pages) given, k/v are the paged pool
+    ``(n_pages, page, KV, D)`` (``core/paging.py``; page == k_block)
+    and the kernel's K/V index maps dereference the table — same grid,
+    same inner loop, one extra prefetch operand.
+
     Grid is ``(B·KV, P)`` — scheduled work and K/V fetch both scale
     with the *selected* block count, not the prefix length
     (``decode_fetch_stats`` accounts for it).
     """
-    from repro.kernels.sata_decode import sata_decode_attention_kernel
+    from repro.kernels.sata_decode import (
+        sata_decode_attention_kernel, sata_decode_attention_paged_kernel)
     if interpret is None:
         interpret = default_interpret()
+    if page_table is not None:
+        # the plan's logical block edge must BE the page size, or the
+        # kernel would dereference block-granular indices as page ids
+        assert k.shape[1] == k_block, (
+            f"paged decode needs k_block == page size "
+            f"({k_block} != {k.shape[1]})")
+        return sata_decode_attention_paged_kernel(
+            q, k, v, page_table, kv_indices, kv_counts, thresholds, pos,
+            interpret=interpret)
     return sata_decode_attention_kernel(
         q, k, v, kv_indices, kv_counts, thresholds, pos,
         k_block=k_block, interpret=interpret)
@@ -235,18 +284,27 @@ def sata_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
                        n_kv_heads: Optional[int] = None,
-                       dtype_bytes: int = 4) -> Dict:
-    """Per-step K/V fetch accounting for the *attention kernel*: dense
-    decode streams every valid block of the prefix per (slot, kv head);
-    the planned kernel fetches ``kv_counts`` tiles.  kv_counts: (B, KV)
-    [or any (..., KV)] int; pos: (B,) int per-slot positions.
+                       dtype_bytes: int = 4,
+                       replan: Optional[float] = None,
+                       nkb: Optional[int] = None) -> Dict:
+    """Per-step K/V fetch accounting for the decode route.  kv_counts:
+    (B, KV) [or any (..., KV)] int; pos: (B,) int per-slot positions.
 
-    Scope: kernel-side fetches only.  The plan *maintenance* reads keys
-    too — a full re-plan streams all valid K (so at
-    ``sata_decode_replan=1`` the selection side still scales with the
-    prefix and total step bytes are not reduced); the incremental path
-    reads O(nkb·D) summaries + the planned blocks' keys, which is when
-    end-to-end traffic follows these numbers.
+    Kernel side (always reported): dense decode streams every valid
+    block of the prefix per (slot, kv head); the planned kernel fetches
+    ``kv_counts`` tiles.
+
+    Plan side (``replan`` given — the fraction of this step's layer
+    plans that ran the full re-plan; a plain bool works):
+    the selection machinery reads keys too, and pretending otherwise
+    overstates the win.  A full re-plan streams ALL valid cached K (one
+    K-only pass — so at ``sata_decode_replan=1`` selection traffic
+    still scales with the prefix); an incremental step reads the
+    2×(nkb·D) fp32 summaries (``nkb`` — pass it, it is a property of
+    the cache, not of the counts) plus the planned blocks' keys for the
+    in-plan threshold.  ``step_bytes_plan_route`` then totals kernel +
+    plan traffic for the step, the honest number to compare against
+    ``step_bytes_dense_route`` (dense decode plans nothing).
     """
     cnt = np.asarray(kv_counts)
     pos = np.asarray(pos).reshape(-1)
@@ -256,13 +314,31 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
     dense_tiles = int(valid_blocks.sum()) * kv * (cnt.size // (b * kv))
     plan_tiles = int(cnt.sum())
     tile_bytes = 2 * k_block * d * dtype_bytes                 # K + V tile
-    return {
+    out = {
         "kv_fetch_tiles_dense": dense_tiles,
         "kv_fetch_tiles_plan": plan_tiles,
         "kv_fetch_bytes_dense": dense_tiles * tile_bytes,
         "kv_fetch_bytes_plan": plan_tiles * tile_bytes,
         "fetch_reduction": dense_tiles / max(plan_tiles, 1),
     }
+    if replan is not None:
+        k_tile_bytes = k_block * d * dtype_bytes               # K only
+        full_b = dense_tiles * k_tile_bytes
+        layers = cnt.size // (b * kv)
+        summaries_b = (0 if nkb is None
+                       else 2 * nkb * d * 4 * b * kv * layers)  # fp32
+        incr_b = summaries_b + plan_tiles * k_tile_bytes
+        # ``replan`` may be a bool (this step) or a fraction (layers of
+        # a churn-adaptive stack can trigger independently)
+        frac = float(replan)
+        out["plan_fetch_bytes_full"] = full_b
+        out["plan_fetch_bytes_incremental"] = incr_b
+        out["plan_fetch_bytes_step"] = int(round(
+            frac * full_b + (1.0 - frac) * incr_b))
+        out["step_bytes_plan_route"] = (out["kv_fetch_bytes_plan"]
+                                        + out["plan_fetch_bytes_step"])
+        out["step_bytes_dense_route"] = out["kv_fetch_bytes_dense"]
+    return out
 
 
 def sata_attention_reference(q, k_, v, scores_mask) -> jax.Array:

@@ -25,6 +25,16 @@ K/V stay in the serving cache layout ``(B, S, KV, D)`` — the index maps
 slice ``(b, block, kv_head)`` tiles directly, so no head-expanded or
 transposed copy of the cache is ever materialized.
 
+**Paged cache** (``sata_decode_attention_paged_kernel``): the serving
+cache may instead live in a global page pool ``(n_pages, page, KV, D)``
+with a per-slot page table (``core/paging.py``).  Because the plan's
+block edge equals the page size, the ONLY change is one more scalar-
+prefetch operand — the page table — and a K/V index map that
+dereferences it: ``physical = table[slot, kv_indices[row, j]]``.  The
+grid, the flash inner loop, and the in-body masks are byte-for-byte the
+same kernel (positions stay *logical*: ``kv_indices`` holds logical
+page ids, so causality masking never sees physical placement).
+
 Selection inside a fetched tile is threshold mode only: the element
 mask is re-derived as ``bf16(score) >= bf16(thr)`` (the bisect predicate
 shared with prefill) AND ``token <= pos``.  With a full re-plan every
@@ -139,3 +149,76 @@ def sata_decode_attention_kernel(
       kv_counts.reshape(b * n_kv).astype(jnp.int32),
       pos.astype(jnp.int32),
       q, k, v, thresholds.astype(jnp.float32))
+
+
+def _paged_decode_kernel(idx_ref, cnt_ref, pos_ref, tbl_ref, *args, **kw):
+    """Paged body == contiguous body: the page table is consumed only by
+    the BlockSpec index maps, never inside the kernel."""
+    del tbl_ref
+    _decode_kernel(idx_ref, cnt_ref, pos_ref, *args, **kw)
+
+
+def sata_decode_attention_paged_kernel(
+    q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    page_table: jax.Array, kv_indices: jax.Array, kv_counts: jax.Array,
+    thresholds: jax.Array, pos: jax.Array,
+    *, sm_scale: Optional[float] = None, interpret: bool = False,
+) -> jax.Array:
+    """Decode gather kernel over the paged pool: q (B, KV, G, D);
+    k_pages/v_pages (n_pages, page, KV, D); page_table (B, max_pages)
+    int32 (logical→physical); kv_indices (B, KV, P) int32 *logical*
+    page ids; kv_counts (B, KV); thresholds (B, KV, G, 1) fp32;
+    pos (B,).  Returns (B, KV, G, D).  The k-block edge IS the page
+    size."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, n_kv, g, d = q.shape
+    n_pages, page, kvh, dk = k_pages.shape
+    assert (kvh, dk) == (n_kv, d), (k_pages.shape, q.shape)
+    assert v_pages.shape == k_pages.shape
+    p = kv_indices.shape[-1]
+    assert kv_indices.shape == (b, n_kv, p), kv_indices.shape
+    assert kv_counts.shape == (b, n_kv), kv_counts.shape
+    assert thresholds.shape == (b, n_kv, g, 1), thresholds.shape
+    assert page_table.shape[0] == b, (page_table.shape, b)
+    assert pos.shape == (b,), pos.shape
+    if p == 0:
+        return jnp.zeros((b, n_kv, g, d), q.dtype)
+    sm_scale = float(sm_scale if sm_scale is not None else 1.0 / np.sqrt(d))
+
+    def q_map(i, j, idx_ref, cnt_ref, pos_ref, tbl_ref):
+        return (i // n_kv, i % n_kv, 0, 0)
+
+    def kv_map(i, j, idx_ref, cnt_ref, pos_ref, tbl_ref):
+        # the one paged-vs-contiguous difference: logical plan entry →
+        # physical page through the slot's table row
+        return (tbl_ref[i // n_kv, idx_ref[i, j]], 0, i % n_kv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b * n_kv, p),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), q_map),
+            pl.BlockSpec((1, page, 1, d), kv_map),
+            pl.BlockSpec((1, page, 1, d), kv_map),
+            pl.BlockSpec((1, 1, g, 1), q_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), q_map),
+        scratch_shapes=[
+            _vmem((g, d), jnp.float32),             # acc
+            _vmem((g, 1), jnp.float32),             # running max m
+            _vmem((g, 1), jnp.float32),             # running sum l
+        ],
+    )
+    kernel = functools.partial(_paged_decode_kernel, sm_scale=sm_scale,
+                               n_slots=p, k_block=page, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, d), q.dtype),
+        interpret=interpret,
+    )(kv_indices.reshape(b * n_kv, p).astype(jnp.int32),
+      kv_counts.reshape(b * n_kv).astype(jnp.int32),
+      pos.astype(jnp.int32),
+      page_table.astype(jnp.int32),
+      q, k_pages, v_pages, thresholds.astype(jnp.float32))

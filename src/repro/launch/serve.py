@@ -2,15 +2,38 @@
 attention over a KV cache (continuous-batching-lite: fixed batch slots,
 **per-slot positions**, new requests claim finished slots).
 
-Each slot owns its decode position and its cache region: claiming a
-slot resets both (``models.decode.reset_slot``), so a request never
+Each slot owns its decode position; claiming a slot resets its
+per-request state (``models.decode.reset_slot``), so a request never
 inherits the previous occupant's KV contents — and requests of
 different lengths decode concurrently at their own offsets.  Latency is
 reported per request (claim → last token), not just aggregate tok/s.
 
+**Cache layout** (``cfg.kv_cache_layout``):
+
+* ``"contiguous"`` — one (max_len, KV, D) region per slot per layer:
+  simple, but every slot reserves worst-case HBM for its whole life.
+* ``"paged"`` — a global page pool + per-slot page table
+  (``core/paging.py``).  The driver owns the host-side allocator:
+  pages map on append (a slot holds only ``ceil(pos/page)`` pages),
+  free when its request completes, and pool exhaustion becomes
+  *backpressure* — the claim loop defers new requests (admission
+  control), and a mid-flight slot that cannot map its next page at a
+  page boundary stalls for a step (its token is re-fed once a page
+  frees; the overflow page swallows the discarded write).  The run
+  report includes page occupancy: HBM reserved vs actually used, and
+  the reserved-bytes ratio vs the contiguous layout.
+
+**Prefill→decode handoff** (``prompt_len > 1``, dense/moe): prompts
+prefill in one full-sequence pass (``models.decode.prefill_prompt``)
+whose K/V rows and *seeded decode plan* install into the claimed slot —
+the first decode step starts planned (summaries + the prompt tail's
+selected blocks) instead of running a cold full re-plan.
+
 With ``cfg.sata_decode`` routing on, every step fetches only the
 planned KV blocks (``core/decode_plan.py`` + the decode gather kernel)
-and the driver accumulates the fetch-byte savings against dense decode.
+and the driver accumulates both kernel-side and *plan-side* traffic
+(full re-plans stream all cached K; the plan state's ``replans``
+counter makes the split exact even under ``sata_decode_replan="auto"``).
 
 Usage (CPU, reduced arch):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
@@ -27,28 +50,40 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.archs import ARCHS, SMOKE
-from repro.distributed import ctx as dctx
+from repro.core.paging import PageAllocator
 from repro.launch.mesh import make_local_mesh
+from repro.models import attention as attn
 from repro.models import decode as dec
 from repro.models import model as mdl
-from repro.train.step import make_serve_step
 
 
-def _plan_counts(cache: Dict) -> Optional[np.ndarray]:
-    """Layer-stacked (..., B, KV) plan occupancy, if SATA decode is on
+def _plan_field(cache: Dict, field: str) -> Optional[np.ndarray]:
+    """One field of the SATA decode-plan state, if routing is on
     (hybrid keeps its attention cache under ``shared_kv``)."""
     for name in ("kv", "shared_kv"):
         kvc = cache.get(name)
         if isinstance(kvc, dict) and "plan" in kvc:
-            cnt = np.asarray(kvc["plan"]["kv_counts"])
-            return cnt.reshape(-1, *cnt.shape[-2:])      # (L, B, KV)
+            return np.asarray(kvc["plan"][field])
     return None
+
+
+def _plan_counts(cache: Dict) -> Optional[np.ndarray]:
+    """Layer-stacked (L, B, KV) plan occupancy."""
+    cnt = _plan_field(cache, "kv_counts")
+    return None if cnt is None else cnt.reshape(-1, *cnt.shape[-2:])
+
+
+def _plan_replans(cache: Dict) -> Optional[float]:
+    """Mean cumulative full-re-plan count across the layer stack (the
+    churn-adaptive trigger can fire per layer)."""
+    r = _plan_field(cache, "replans")
+    return None if r is None else float(r.astype(np.float64).mean())
 
 
 def serve(arch: str, smoke: bool = True, n_requests: int = 8,
           batch_slots: int = 4, gen_len: int = 16, max_len: int = 64,
           seed: int = 0, mesh=None, params=None,
-          cfg=None) -> Dict[str, Any]:
+          cfg=None, prompt_len: int = 1) -> Dict[str, Any]:
     cfg = cfg or (SMOKE if smoke else ARCHS)[arch]
     mesh = mesh or make_local_mesh()
     if params is None:
@@ -68,9 +103,40 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
 
     step = jax.jit(lambda p, c, t, pos: dec.serve_step(p, cfg, c, t, pos))
 
-    # one deterministic prompt token per request: a request's output
+    # --- paged-pool allocator (host-side; device consumes the table)
+    alloc: Optional[PageAllocator] = None
+    from repro.models.layers import _dtype
+    if attn.paged_kv_on(cfg):
+        page = attn.kv_page_size(cfg, max_len)
+        pool = cache.get("kv", cache.get("shared_kv"))
+        n_pages = int(pool["k_pages"].shape[1])
+        alloc = PageAllocator(n_pages, batch_slots, max_len // page, page)
+        cache = dec.set_page_table(cfg, cache, alloc.table)
+        # backpressure only helps when at least ONE request's worst-case
+        # working set fits: otherwise the livelock handler preempts the
+        # sole active slot forever and the run silently truncates
+        need_rows = min(max_len, max(1, prompt_len) + gen_len - 1)
+        need = alloc.pages_for(need_rows)
+        if need > alloc.free_pages:
+            raise ValueError(
+                f"kv_pool_pages={n_pages} ({alloc.free_pages} usable) "
+                f"cannot hold one request's worst-case working set "
+                f"({need} pages of {page} tokens) — no schedule can make "
+                f"progress; grow the pool or shorten gen_len/max_len")
+
+    # --- prompt prefill (handoff) — dense/moe full-sequence path
+    prompt_len = max(1, int(prompt_len))
+    use_prefill = prompt_len > 1 and cfg.family in ("dense", "moe")
+    if prompt_len > 1 and not use_prefill:
+        raise NotImplementedError(
+            f"prompt_len > 1 needs the dense/moe prefill path "
+            f"(family {cfg.family!r})")
+    prefill = (jax.jit(lambda p, t: dec.prefill_prompt(p, cfg, t, max_len))
+               if use_prefill else None)
+
+    # deterministic prompt tokens per request: a request's output
     # depends only on its own prompt, never on which slot served it
-    prompts = rng.integers(0, cfg.vocab_size, n_requests)
+    prompts = rng.integers(0, cfg.vocab_size, (n_requests, prompt_len))
     queue: List[int] = list(range(n_requests))
     outputs: Dict[int, List[int]] = {}
     latency: Dict[int, float] = {}
@@ -80,53 +146,128 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     tokens_h = np.zeros((batch_slots, 1), np.int32)
     produced = 0
     steps = 0
+    deferred_claims = stalled_steps = preemptions = 0
     fetch_tiles_plan = fetch_tiles_dense = 0
+    plan_bytes = kernel_bytes_plan = kernel_bytes_dense = 0
+    last_replans = 0.0
     from repro.kernels.ops import decode_fetch_stats
-    from repro.models.attention import decode_block_size
-    from repro.models.layers import _dtype
-    blk = decode_block_size(cfg, max_len)
+    blk = attn.decode_block_size(cfg, max_len)
     tile_bytes = 2 * blk * cfg.hd * jnp.dtype(_dtype(cfg)).itemsize
     # warm the jit trace before any latency clock starts — every slot a
-    # request claims is reset first, so the warm-up's cache writes never
-    # reach an output
+    # request claims is reset first (paged: the unmapped tables route
+    # the warm-up writes to the overflow page), so the warm-up never
+    # reaches an output
     logits, cache = step(params, cache, jnp.asarray(tokens_h),
                          jnp.asarray(pos_h))
     jax.block_until_ready(logits)
+    last_replans = _plan_replans(cache) or 0.0    # skip warm-up's re-plan
+    replans_base = last_replans
     t0 = time.time()
-    max_steps = n_requests * gen_len + batch_slots + 1
+    # paged backpressure can stall slots / defer claims / preempt-and-
+    # restart, so budget extra lockstep steps beyond the contiguous-
+    # layout worst case
+    max_steps = 4 * (n_requests * gen_len + batch_slots + 1)
     while (queue or any(s is not None for s in slots)) and steps < max_steps:
         for i in range(batch_slots):              # claim free slots
             if slots[i] is None and queue:
+                if alloc is not None and not alloc.can_admit(
+                        alloc.pages_for(max(prompt_len, 1))):
+                    deferred_claims += 1          # backpressure: wait
+                    break
                 r = queue.pop(0)
                 slots[i] = r
                 outputs[r] = []
+                t_claim[r] = time.time()          # claim → last token
                 cache = dec.reset_slot(cfg, cache, i)
-                pos_h[i] = 0
-                tokens_h[i, 0] = int(prompts[r])
-                t_claim[r] = time.time()
+                if use_prefill:
+                    if alloc is not None:
+                        ok = alloc.ensure(i, prompt_len - 1)
+                        assert ok, "admission control reserved these pages"
+                    lg0, state = prefill(params, jnp.asarray(
+                        prompts[r:r + 1], jnp.int32))
+                    phys = (alloc.table[i, :alloc.pages_for(prompt_len)]
+                            if alloc is not None else None)
+                    cache = dec.install_prefill(cfg, cache, i, state, phys)
+                    pos_h[i] = prompt_len
+                    # the prefill's last-position argmax IS the first
+                    # generated token — record it, don't just feed it
+                    first = int(jnp.argmax(lg0[0]))
+                    outputs[r].append(first)
+                    produced += 1
+                    tokens_h[i, 0] = first
+                    if len(outputs[r]) >= gen_len or pos_h[i] >= max_len:
+                        latency[r] = time.time() - t_claim[r]
+                        slots[i] = None           # gen_len=1: done already
+                        if alloc is not None:
+                            alloc.free_slot(i)
+                else:
+                    pos_h[i] = 0
+                    tokens_h[i, 0] = int(prompts[r, 0])
+        active = [i for i in range(batch_slots) if slots[i] is not None]
+        stalled: List[int] = []
+        if alloc is not None and active:
+            while True:
+                stalled = [i for i in active if slots[i] is not None
+                           and not alloc.ensure(i, int(pos_h[i]))]
+                runnable = [i for i in active if slots[i] is not None
+                            and i not in stalled]
+                if not stalled or runnable:
+                    break
+                # every active slot is stalled and pages only free when
+                # a request completes — livelock.  Preempt the slot with
+                # the least progress: free its pages, requeue its
+                # request (regeneration is deterministic, so the final
+                # output is unchanged), and let the others advance.
+                victim = min(stalled, key=lambda i: len(outputs[slots[i]]))
+                r = slots[victim]
+                produced -= len(outputs[r])       # discarded, not served
+                outputs[r] = []
+                queue.insert(0, r)
+                slots[victim] = None
+                alloc.free_slot(victim)
+                preemptions += 1
+            stalled_steps += len(stalled)
+            cache = dec.set_page_table(cfg, cache, alloc.table)
+            # preemption may have freed slots out of the stale list
+            active = [i for i in range(batch_slots) if slots[i] is not None]
         logits, cache = step(params, cache, jnp.asarray(tokens_h),
                              jnp.asarray(pos_h))
         nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
         counts = _plan_counts(cache)
-        active = [i for i in range(batch_slots) if slots[i] is not None]
-        if counts is not None and active:
+        live = [i for i in active if i not in stalled]
+        frac = 0.0
+        replans = _plan_replans(cache)
+        if replans is not None:
+            # track EVERY step so an all-deferred step's re-plan is not
+            # later clamped into the next live step's delta
+            frac = min(1.0, max(0.0, replans - last_replans))
+            last_replans = replans
+        if counts is not None and live:
             # count only slots holding live requests — idle slots still
             # run through the lockstep batch but serve nobody
-            st = decode_fetch_stats(counts[:, active], pos_h[active],
-                                    k_block=blk, d=cfg.hd)
+            st = decode_fetch_stats(counts[:, live], pos_h[live],
+                                    k_block=blk, d=cfg.hd, replan=frac,
+                                    nkb=max_len // blk,
+                                    dtype_bytes=jnp.dtype(
+                                        _dtype(cfg)).itemsize)
             fetch_tiles_plan += st["kv_fetch_tiles_plan"]
             fetch_tiles_dense += st["kv_fetch_tiles_dense"]
+            plan_bytes += st["plan_fetch_bytes_step"]
+            kernel_bytes_plan += st["kv_fetch_bytes_plan"]
+            kernel_bytes_dense += st["kv_fetch_bytes_dense"]
         now = time.time()
         for i in range(batch_slots):
             r = slots[i]
-            if r is None:
-                continue
+            if r is None or i in stalled:
+                continue                          # stalled: re-fed as-is
             outputs[r].append(int(nxt[i]))
             produced += 1
             pos_h[i] += 1
             if len(outputs[r]) >= gen_len or pos_h[i] >= max_len:
                 latency[r] = now - t_claim[r]
-                slots[i] = None                   # finished → free the slot
+                slots[i] = None                   # finished → free slot
+                if alloc is not None:
+                    alloc.free_slot(i)            # … and its pages
             else:
                 tokens_h[i, 0] = int(nxt[i])
         steps += 1
@@ -145,7 +286,30 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             "kv_fetch_bytes_plan": fetch_tiles_plan * tile_bytes,
             "kv_fetch_bytes_dense": fetch_tiles_dense * tile_bytes,
             "fetch_reduction": fetch_tiles_dense / max(fetch_tiles_plan, 1),
+            # plan-side (selection) traffic — full re-plans stream all
+            # cached K, incremental steps read summaries + planned keys
+            "plan_fetch_bytes": plan_bytes,
+            "step_bytes_plan_route": kernel_bytes_plan + plan_bytes,
+            "step_bytes_dense_route": kernel_bytes_dense,
+            "true_reduction": kernel_bytes_dense
+            / max(kernel_bytes_plan + plan_bytes, 1),
+            "replans": last_replans - replans_base,
         }
+    if alloc is not None:
+        layers = int(jax.tree_util.tree_leaves(
+            cache.get("kv", cache.get("shared_kv")))[0].shape[0])
+        row_bytes = 2 * cfg.n_kv_heads * cfg.hd \
+            * jnp.dtype(_dtype(cfg)).itemsize
+        occ = alloc.stats(row_bytes=row_bytes, layers=layers)
+        occ["contiguous_reserved_bytes"] = \
+            batch_slots * max_len * row_bytes * layers
+        occ["reserved_vs_contiguous"] = (
+            occ["contiguous_reserved_bytes"]
+            / max(occ["hbm_reserved_bytes"], 1))
+        occ["deferred_claims"] = deferred_claims
+        occ["stalled_steps"] = stalled_steps
+        occ["preemptions"] = preemptions
+        out["page_occupancy"] = occ
     return out
 
 
@@ -156,9 +320,17 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=1)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV pool")
     args = ap.parse_args()
+    cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
+    if args.paged:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_cache_layout="paged")
     out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
-                batch_slots=args.slots, gen_len=args.gen_len)
+                batch_slots=args.slots, gen_len=args.gen_len,
+                prompt_len=args.prompt_len, cfg=cfg)
     print(f"[serve] generated {out['tokens_generated']} tokens over "
           f"{len(out['outputs'])} requests "
           f"({out['tok_per_s']:.1f} tok/s on CPU, "
@@ -168,8 +340,18 @@ def main():
         print(f"[serve] SATA decode attention-kernel KV fetch: "
               f"{f['kv_fetch_bytes_plan']} B vs "
               f"{f['kv_fetch_bytes_dense']} B dense "
-              f"({f['fetch_reduction']:.2f}x; selection-side reads scale "
-              f"with sata_decode_replan — see ops.decode_fetch_stats)")
+              f"({f['fetch_reduction']:.2f}x kernel-side); with plan "
+              f"traffic ({f['plan_fetch_bytes']} B, "
+              f"{f['replans']:.0f} re-plans): {f['true_reduction']:.2f}x "
+              f"end-to-end")
+    if "page_occupancy" in out:
+        o = out["page_occupancy"]
+        print(f"[serve] paged pool: {o['pages_in_use_peak']}/{o['n_pages']}"
+              f" pages peak, HBM used {o['hbm_used_peak_bytes']} B of "
+              f"{o['hbm_reserved_bytes']} B reserved "
+              f"({o['reserved_vs_contiguous']:.2f}x less reserved than "
+              f"contiguous would need; {o['deferred_claims']} deferred "
+              f"claims, {o['stalled_steps']} stalled steps)")
 
 
 if __name__ == "__main__":

@@ -233,18 +233,24 @@ def _sata_kernel_fwd(qf, kf, vf, sel, blk, schedule, max_kv_blocks):
                              max_kv_blocks), (qf, kf, vf, sel)
 
 
-def _check_bwd_untruncated(max_kv_blocks, nkb: int) -> None:
+def _check_bwd_untruncated(max_kv_blocks, nkb: int,
+                           on_exceed: str = "truncate") -> None:
     """A truncating ``max_kv_blocks`` drops occupied tiles in the
     *forward* kernel, but the reference recompute differentiates the
     full selected set — the gradients would belong to a different
-    function than the value.  The bound is a serving-path feature;
-    refuse to train through it rather than bias gradients silently."""
-    if max_kv_blocks is not None and max_kv_blocks < nkb:
+    function than the value.  Refuse to train through it rather than
+    bias gradients silently.  The ``"dense"`` overflow fallback is
+    exempt: its forward is loss-free by construction (rows within the
+    bound drop nothing, and an overflow re-routes to the full-width
+    schedule), so value and gradient describe the same function."""
+    if max_kv_blocks is not None and max_kv_blocks < nkb \
+            and on_exceed != "dense":
         raise NotImplementedError(
             f"backward through a truncating max_kv_blocks "
             f"({max_kv_blocks} < nkb={nkb}) would differentiate a "
             f"different function than the forward computes — unset "
-            f"sata_max_kv_blocks (or use the full nkb) for training")
+            f"sata_max_kv_blocks (or use the full nkb, or "
+            f"sata_bound_fallback='dense') for training")
 
 
 def _sata_kernel_bwd(blk, schedule, max_kv_blocks, res, g):
@@ -259,10 +265,11 @@ def _sata_kernel_bwd(blk, schedule, max_kv_blocks, res, g):
 _sata_kernel_call.defvjp(_sata_kernel_fwd, _sata_kernel_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11))
 def _sata_kernel_chunked_call(qf, kf, vf, thr, bm, q_pos, k_pos,
                               blk: int, causal: bool, chunk: int,
-                              max_kv_blocks: Optional[int]):
+                              max_kv_blocks: Optional[int],
+                              on_exceed: str = "truncate"):
     """Chunked-selection kernel route: the Pallas kernel re-derives the
     element mask per tile from ``thr`` (threshold mode), and the custom
     VJP recomputes through ``_selective_ref_chunked`` from the same
@@ -273,20 +280,24 @@ def _sata_kernel_chunked_call(qf, kf, vf, thr, bm, q_pos, k_pos,
         qf, kf, vf, None, q_block=blk, k_block=blk, exact=True,
         schedule="compact", selection="chunked", causal=causal,
         sel_chunk=chunk, max_kv_blocks=max_kv_blocks,
-        thresholds=thr, block_map=bm, q_pos=q_pos, k_pos=k_pos)
+        thresholds=thr, block_map=bm, q_pos=q_pos, k_pos=k_pos,
+        on_exceed=on_exceed)
     return out
 
 
 def _sata_kernel_chunked_fwd(qf, kf, vf, thr, bm, q_pos, k_pos,
-                             blk, causal, chunk, max_kv_blocks):
+                             blk, causal, chunk, max_kv_blocks,
+                             on_exceed):
     out = _sata_kernel_chunked_call(qf, kf, vf, thr, bm, q_pos, k_pos,
-                                    blk, causal, chunk, max_kv_blocks)
+                                    blk, causal, chunk, max_kv_blocks,
+                                    on_exceed)
     return out, (qf, kf, vf, thr, bm, q_pos, k_pos)
 
 
-def _sata_kernel_chunked_bwd(blk, causal, chunk, max_kv_blocks, res, g):
+def _sata_kernel_chunked_bwd(blk, causal, chunk, max_kv_blocks,
+                             on_exceed, res, g):
     qf, kf, vf, thr, bm, q_pos, k_pos = res
-    _check_bwd_untruncated(max_kv_blocks, bm.shape[-1])
+    _check_bwd_untruncated(max_kv_blocks, bm.shape[-1], on_exceed)
     _, vjp = jax.vjp(
         lambda q, k, v: _selective_ref_chunked(q, k, v, thr, q_pos, k_pos,
                                                causal=causal, chunk=chunk),
@@ -372,8 +383,9 @@ def _attend_sata_kernel(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
         thr, bm = _select_chunked(qf, kf, cfg.topk_k, q_pos=qp, k_pos=kp,
                                   causal=causal, chunk=chunk,
                                   q_block=blk, k_block=blk)
-        out = _sata_kernel_chunked_call(qf, kf, vf, thr, bm, qp, kp,
-                                        blk, causal, chunk, mkb)
+        out = _sata_kernel_chunked_call(
+            qf, kf, vf, thr, bm, qp, kp, blk, causal, chunk, mkb,
+            getattr(cfg, "sata_bound_fallback", "dense"))
     else:
         scores = jnp.einsum("bqd,bkd->bqk", qf, kf,
                             preferred_element_type=jnp.float32)
@@ -486,6 +498,18 @@ def decode_block_size(cfg, max_len: int) -> int:
     return min(blk, max_len)
 
 
+def paged_kv_on(cfg) -> bool:
+    """Serve from the paged pool layout (``core/paging.py``)?"""
+    return getattr(cfg, "kv_cache_layout", "contiguous") == "paged"
+
+
+def kv_page_size(cfg, max_len: int) -> int:
+    """Tokens per page: ``kv_page_size`` or the decode k-block edge —
+    the equality SATA decode requires (plan blocks ARE pages)."""
+    page = getattr(cfg, "kv_page_size", 0) or decode_block_size(cfg, max_len)
+    return min(int(page), max_len)
+
+
 def sata_decode_on(cfg, max_len: int) -> bool:
     """Route single-token decode through the incremental KV-block plan
     + gather kernel?  ``sata_decode``: "on"/"off" force; "auto" follows
@@ -511,10 +535,45 @@ def sata_decode_on(cfg, max_len: int) -> bool:
 
 
 def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+    """Serving self-attention cache for one layer.
+
+    Contiguous layout: per-slot ``k``/``v`` (B, max_len, KV, hd)
+    regions.  Paged layout (``kv_cache_layout="paged"``): a global
+    ``k_pages``/``v_pages`` pool (n_pages, page, KV, hd) plus a
+    per-slot ``page_table`` (B, max_pages) int32 — pages map on append
+    and free on request completion (``core/paging.py``), so ``max_len``
+    bounds only the *logical* address space, not reserved HBM.  Either
+    way a SATA decode ``plan`` rides alongside when routing is on; in
+    the paged layout its block edge must equal the page size (plan
+    blocks ARE pages, so the decode kernel can dereference the table)."""
     hd = cfg.hd
-    cache = {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
-             "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype)}
-    if sata_decode_on(cfg, max_len):
+    sata = sata_decode_on(cfg, max_len)
+    if paged_kv_on(cfg):
+        from repro.core.paging import OVERFLOW_PAGE
+        page = kv_page_size(cfg, max_len)
+        if max_len % page:
+            raise ValueError(f"max_len ({max_len}) must tile by the page "
+                             f"size ({page})")
+        max_pages = max_len // page
+        n_pages = getattr(cfg, "kv_pool_pages", 0) or batch * max_pages + 1
+        cache = {
+            "k_pages": jnp.zeros((n_pages, page, cfg.n_kv_heads, hd), dtype),
+            "v_pages": jnp.zeros((n_pages, page, cfg.n_kv_heads, hd), dtype),
+            "page_table": jnp.full((batch, max_pages), OVERFLOW_PAGE,
+                                   jnp.int32),
+        }
+        if sata:
+            blk = decode_block_size(cfg, max_len)
+            if blk != page:
+                raise ValueError(
+                    f"paged SATA decode needs kv_page_size == the decode "
+                    f"k-block edge ({page} != {blk}): the plan's logical "
+                    f"blocks must BE pages for the kernel's index maps to "
+                    f"dereference the page table")
+    else:
+        cache = {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+                 "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype)}
+    if sata:
         from repro.core.decode_plan import init_decode_plan
         cache["plan"] = init_decode_plan(
             batch, cfg.n_kv_heads, max_len, hd,
@@ -539,21 +598,35 @@ def _cache_scatter(cache: jax.Array, new: jax.Array, pos: jax.Array
     return upd(cache, new.astype(cache.dtype), pos)
 
 
+def _resolve_replan(cfg) -> Tuple[int, Optional[float]]:
+    """``sata_decode_replan`` → (interval, churn_budget): an integer
+    keeps the fixed-interval trigger (budget None, bit-compatible);
+    ``"auto"`` switches to the churn-adaptive trigger with
+    ``sata_decode_churn`` as the accumulated-churn budget."""
+    rp = getattr(cfg, "sata_decode_replan", 1)
+    if rp == "auto":
+        return 1, float(getattr(cfg, "sata_decode_churn", 0.25))
+    return int(rp), None
+
+
 def _attend_sata_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                         k_new: jax.Array, cfg, pos: jax.Array,
-                        plan: Dict) -> Tuple[jax.Array, Dict]:
+                        plan: Dict, *, k_block: int,
+                        page_table: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, Dict]:
     """Decode attention through the incremental plan + gather kernel.
 
-    q: (B, 1, H, hd); k/v: (B, S, KV, hd) updated cache; k_new:
-    (B, 1, KV, hd) the key row just written (summaries absorb it
-    incrementally); pos: (B,).  Returns ((B, 1, H, hd), plan')."""
+    q: (B, 1, H, hd); k/v: the updated cache — (B, S, KV, hd)
+    contiguous, or the (n_pages, page, KV, hd) pool when ``page_table``
+    is given (paged layout; ``k_block`` == page); k_new: (B, 1, KV, hd)
+    the key row just written (summaries absorb it incrementally);
+    pos: (B,).  Returns ((B, 1, H, hd), plan')."""
     from repro.core.decode_plan import (decode_plan_update,
                                         update_block_summaries)
     from repro.kernels.ops import sata_decode_attention
     b, _, h, hd = q.shape
     kv = k.shape[2]
     g = h // kv
-    blk = decode_block_size(cfg, k.shape[1])
     # heads are kv-major (see _attend's grouped reshape), so the G query
     # heads sharing a KV head sit contiguously
     qg = q[:, 0].reshape(b, kv, g, hd)
@@ -561,12 +634,15 @@ def _attend_sata_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     # cast), so incremental summaries match a from-scratch recompute
     # over cache contents bit for bit
     plan = update_block_summaries(plan, k_new.astype(k.dtype), pos,
-                                  k_block=blk)
+                                  k_block=k_block)
+    interval, churn_budget = _resolve_replan(cfg)
     plan, thr = decode_plan_update(
-        plan, qg, k, pos, topk_k=cfg.topk_k, k_block=blk,
-        replan_interval=getattr(cfg, "sata_decode_replan", 1))
+        plan, qg, k, pos, topk_k=cfg.topk_k, k_block=k_block,
+        replan_interval=interval, churn_budget=churn_budget,
+        page_table=page_table)
     out = sata_decode_attention(qg, k, v, plan["kv_indices"],
-                                plan["kv_counts"], thr, pos, k_block=blk)
+                                plan["kv_counts"], thr, pos,
+                                k_block=k_block, page_table=page_table)
     return out.reshape(b, 1, h, hd), plan
 
 
@@ -575,9 +651,11 @@ def attention_decode(params: Params, cfg, x: jax.Array, cache: Dict,
                      ) -> Tuple[jax.Array, Dict]:
     """One-token decode: update cache at ``pos``, attend over the prefix.
 
-    x: (B, 1, D); cache k/v: (B, S_max, KV, hd); pos: scalar int32 (all
-    slots in lockstep) or (B,) int32 per-slot positions (continuous
-    batching: each slot decodes at its own offset).
+    x: (B, 1, D); cache k/v: (B, S_max, KV, hd) contiguous, or the
+    paged pool (``k_pages``/``v_pages`` + ``page_table`` — see
+    ``init_kv_cache``); pos: scalar int32 (all slots in lockstep) or
+    (B,) int32 per-slot positions (continuous batching: each slot
+    decodes at its own offset).
 
     When the cache carries a ``plan`` (``init_kv_cache`` attaches one
     iff ``sata_decode_on``), attention runs through the incremental
@@ -591,15 +669,52 @@ def attention_decode(params: Params, cfg, x: jax.Array, cache: Dict,
         posv = pos[:, None]                                  # (B, 1)
         q = apply_rope(q, posv, cfg.rope_theta)
         k_new = apply_rope(k_new, posv, cfg.rope_theta)
+    if "k_pages" in cache:
+        return _paged_decode_step(params, cfg, cache, q, k_new, v_new, pos)
     k = _cache_scatter(cache["k"], k_new, pos)
     v = _cache_scatter(cache["v"], v_new, pos)
     new_cache = {"k": k, "v": v}
     if "plan" in cache:
+        blk = decode_block_size(cfg, k.shape[1])
         out, new_cache["plan"] = _attend_sata_decode(
-            q, k, v, k_new, cfg, pos, cache["plan"])
+            q, k, v, k_new, cfg, pos, cache["plan"], k_block=blk)
     else:
         s_max = k.shape[1]
         k_pos = jnp.arange(s_max)
+        valid = k_pos[None, :] <= pos[:, None]               # (B, S)
+        out = _attend(q, k, v, cfg, jnp.zeros((1,), jnp.int32), k_pos,
+                      valid_k=valid, causal=False)
+    y = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ params["wo"]
+    return y, new_cache
+
+
+def _paged_decode_step(params: Params, cfg, cache: Dict, q: jax.Array,
+                       k_new: jax.Array, v_new: jax.Array,
+                       pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One-token decode against the paged pool: scatter the new K/V row
+    into each slot's current page (``page_table[b, pos // page]``),
+    then attend — through the paged plan + gather kernel when a plan
+    rides along, else densely over the gathered logical view.  A slot
+    whose current page is unmapped writes to the overflow page (its
+    output is garbage by construction and the serving driver discards
+    it — see ``core/paging.py`` on stalls)."""
+    from repro.core.paging import logical_kv_view
+    b = q.shape[0]
+    kp, vp, tbl = cache["k_pages"], cache["v_pages"], cache["page_table"]
+    page = kp.shape[1]
+    phys = jnp.take_along_axis(tbl, (pos // page)[:, None], axis=1)[:, 0]
+    off = pos % page
+    kp = kp.at[phys, off].set(k_new[:, 0].astype(kp.dtype))
+    vp = vp.at[phys, off].set(v_new[:, 0].astype(vp.dtype))
+    new_cache = {**cache, "k_pages": kp, "v_pages": vp}
+    if "plan" in cache:
+        out, new_cache["plan"] = _attend_sata_decode(
+            q, kp, vp, k_new, cfg, pos, cache["plan"], k_block=page,
+            page_table=tbl)
+    else:
+        k = logical_kv_view(kp, tbl)
+        v = logical_kv_view(vp, tbl)
+        k_pos = jnp.arange(k.shape[1])
         valid = k_pos[None, :] <= pos[:, None]               # (B, S)
         out = _attend(q, k, v, cfg, jnp.zeros((1,), jnp.int32), k_pos,
                       valid_k=valid, causal=False)

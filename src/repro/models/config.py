@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +37,14 @@ class ModelConfig:
                                               # calibration plans) — jitted
                                               # serving gets a compact grid
                                               # without a concrete mask
+    sata_bound_fallback: str = "dense"        # dense | truncate — when a
+                                              # row's occupancy exceeds
+                                              # sata_max_kv_blocks, "dense"
+                                              # reruns the batch on the
+                                              # full-width (dense-cost)
+                                              # grid (loss-free escape
+                                              # hatch); "truncate" keeps
+                                              # the first `bound` blocks
     sata_decode: str = "auto"                 # auto | on | off — route
                                               # single-token decode through
                                               # the incremental KV-block
@@ -49,11 +57,37 @@ class ModelConfig:
                                               # k-blocks kept per slot/
                                               # head); None = full nkb
                                               # (exact — nothing dropped)
-    sata_decode_replan: int = 1               # full re-plan every N steps
+    sata_decode_replan: Union[int, str] = 1   # full re-plan every N steps
                                               # (1 = every step = exact
                                               # top-k; >1 uses the block-
                                               # summary incremental plan
-                                              # in between)
+                                              # in between; "auto" derives
+                                              # the trigger from observed
+                                              # plan churn — see
+                                              # sata_decode_churn)
+    sata_decode_churn: float = 0.25           # "auto" re-plan budget: full
+                                              # re-plan once accumulated
+                                              # blocks entering/retiring
+                                              # per (slot, head) reaches
+                                              # this fraction of the plan
+                                              # width P
+
+    # --- serving KV-cache layout ---
+    kv_cache_layout: str = "contiguous"       # contiguous | paged — paged
+                                              # serves from a global page
+                                              # pool + per-slot page table
+                                              # (pages allocated on append,
+                                              # freed on reset_slot), so
+                                              # short prefixes stop
+                                              # reserving max_len HBM
+    kv_page_size: int = 0                     # tokens per page (0 = the
+                                              # decode k-block edge; SATA
+                                              # decode requires equality —
+                                              # plan blocks ARE pages)
+    kv_pool_pages: int = 0                    # physical pages in the pool
+                                              # (0 = slots·max_pages + 1:
+                                              # contiguous-equivalent
+                                              # capacity + overflow page)
     qk_norm: bool = False
     rope_theta: float = 10000.0
     causal: bool = True

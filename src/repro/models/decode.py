@@ -1,9 +1,19 @@
 """Serving path: per-family cache init + single-token decode step.
 
-``serve_step`` consumes one new token against a KV cache of length
-``max_len`` (the decode_* / long_* dry-run shapes).  Caches are stacked
-(L, ...) and scanned alongside the layer params so the HLO stays small
-for deep models.
+``serve_step`` consumes one new token against a KV cache of logical
+length ``max_len`` (the decode_* / long_* dry-run shapes).  Caches are
+stacked (L, ...) and scanned alongside the layer params so the HLO
+stays small for deep models.
+
+Two cache layouts (``cfg.kv_cache_layout``): contiguous per-slot
+regions, or the **paged pool** (``core/paging.py``) — a global
+``(n_pages, page, KV, hd)`` pool per layer plus a per-slot page table,
+where the serving driver allocates pages on append and frees them when
+a request completes (``set_page_table`` pushes the host allocator's
+table to the device).  ``prefill_prompt``/``install_prefill`` implement
+the prefill→decode handoff: a prompt prefills in one full-sequence pass
+and lands in a claimed slot with its decode plan pre-seeded, so the
+first decode steps are planned instead of cold.
 """
 from __future__ import annotations
 
@@ -11,6 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.distributed.ctx import constrain
 from repro.models import attention as attn
@@ -22,8 +33,20 @@ from repro.models.model import Params, _decoder_block_apply, maybe_scan
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
-    """Stacked (L, ...) caches per family."""
+    """Stacked (L, ...) caches per family.
+
+    With ``cfg.kv_cache_layout == "paged"`` the self-attention caches
+    hold a page pool + per-slot page table instead of contiguous
+    per-slot regions (see ``attn.init_kv_cache``); the serving driver
+    owns allocation (``core.paging.PageAllocator``) and pushes table
+    updates with ``set_page_table``.  The vlm family's nested cache
+    grouping is not paged yet."""
     dt = _dtype(cfg)
+    if attn.paged_kv_on(cfg) and cfg.family == "vlm":
+        raise NotImplementedError(
+            "paged KV serving does not cover the vlm family's nested "
+            "(n_cross, n_inner) cache grouping yet — use "
+            "kv_cache_layout='contiguous'")
 
     def stack(n, make):
         one = make()
@@ -147,6 +170,146 @@ def reset_slot(cfg: ModelConfig, cache: Dict, slot: int) -> Dict:
             cache[name] = jax.tree.map(lambda a: a.at[:, slot].set(0),
                                        cache[name])
     return cache
+
+
+def set_page_table(cfg: ModelConfig, cache: Dict, table) -> Dict:
+    """Push the host allocator's page table into the device cache.
+    ``table``: (B, max_pages) int32 (``PageAllocator.table``).  The
+    table is identical across layers (all layers of a slot grow in
+    lockstep), so it broadcasts over the stacked cache's layer axis."""
+    cache = dict(cache)
+    tbl = jnp.asarray(np.asarray(table), jnp.int32)
+    for name in ("kv", "shared_kv"):
+        kvc = cache.get(name)
+        if isinstance(kvc, dict) and "page_table" in kvc:
+            n = kvc["page_table"].shape[0]
+            cache[name] = {**kvc,
+                           "page_table": jnp.broadcast_to(
+                               tbl, (n,) + tbl.shape)}
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Prompt prefill → decode handoff
+# ---------------------------------------------------------------------------
+
+def prefill_prompt(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                   max_len: int) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Full-sequence prompt prefill for serving (dense/moe families).
+
+    Runs the decoder over the whole (B, S_p) prompt at once — the
+    prefill analogue of ``serve_step``'s per-token loop — and returns
+    everything the decode path needs to continue WITHOUT a cold start:
+
+      * ``logits`` (B, V) at the last prompt position (the first
+        generated token's distribution);
+      * ``k``/``v`` (L, B, S_p, KV, hd) per-layer prompt K/V rows, for
+        ``install_prefill`` to place into the serving cache (contiguous
+        slot region or allocated pages);
+      * when SATA decode routing is on, ``plan``: a per-layer seeded
+        decode-plan state (``core.decode_plan.plan_from_prefill``) —
+        block summaries over the written keys plus the prompt tail's
+        selected blocks, with ``step`` already off the re-plan beat, so
+        decode step 0 runs the *planned* incremental path instead of a
+        cold full re-plan over the prefix.
+
+    Attention runs the exact dense reference (``attn._attend``, the
+    same top-k mask decode uses) rather than ``attention_apply``'s
+    kernel routing: prompt lengths need not tile ``sata_block``, and
+    the handoff's contract with the decode path is selection-exact
+    math, not a particular schedule — kernel-routed prefill agrees to
+    the usual fp32 accumulation tolerance.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"prefill_prompt covers the dense/moe serving families "
+            f"(got {cfg.family!r}) — other families prefill token-by-"
+            f"token through serve_step")
+    from repro.core.decode_plan import plan_from_prefill
+    b, sp = tokens.shape
+    # strictly less: the first decode step writes at pos == sp, and a
+    # clamped scatter at max_len would silently corrupt the last prompt
+    # row instead of erroring
+    assert sp < max_len, (sp, max_len)
+    dt = _dtype(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    g = cfg.n_heads // kvh
+    seed_plan = attn.sata_decode_on(cfg, max_len)
+    blk = attn.decode_block_size(cfg, max_len)
+    positions = jnp.arange(sp)
+    x = constrain(embed_apply(params["embed"], tokens).astype(dt), "act")
+
+    def body(h, p):
+        hn = apply_norm(p["ln1"], cfg, h)
+        q, k, v = attn._project_qkv(p["attn"], cfg, hn)
+        q = attn.apply_rope(q, positions, cfg.rope_theta)
+        k = attn.apply_rope(k, positions, cfg.rope_theta)
+        out = attn._attend(q, k, v, cfg, positions, positions, causal=True)
+        y = out.reshape(b, sp, cfg.n_heads * hd) @ p["attn"]["wo"]
+        h = _dec_mlp(p, cfg, h + y)
+        kc, vc = k.astype(dt), v.astype(dt)
+        if not seed_plan:
+            return h, (kc, vc)
+        # seed the handoff from the WRITTEN keys (cache dtype), padded
+        # to the logical cache length the decode plan is sized for
+        k_pad = jnp.zeros((b, max_len, kvh, hd), dt).at[:, :sp].set(kc)
+        qg = q[:, -1].reshape(b, kvh, g, hd)
+        seed = plan_from_prefill(
+            k_pad, qg, jnp.full((b,), sp - 1, jnp.int32),
+            topk_k=cfg.topk_k, k_block=blk,
+            plan_blocks=getattr(cfg, "sata_decode_blocks", None))
+        return h, (kc, vc, seed)
+
+    x, ys = maybe_scan(cfg, body, x, params["layers"])
+    x = apply_norm(params["final_ln"], cfg, x[:, -1:])
+    logits = constrain(unembed_apply(params["embed"], cfg, x), "logits")
+    state = {"k": ys[0], "v": ys[1]}
+    if seed_plan:
+        state["plan"] = ys[2]
+    return logits[:, 0], state
+
+
+def install_prefill(cfg: ModelConfig, cache: Dict, slot: int,
+                    state: Dict[str, Any], phys_pages=None) -> Dict:
+    """Place one prefilled request (``prefill_prompt`` output, B=1)
+    into serving slot ``slot``: the prompt K/V rows into the slot's
+    contiguous region — or, paged, into the driver-allocated
+    ``phys_pages`` (ascending logical order; the tail page's unwritten
+    rows stay garbage, masked by position on every read) — and the
+    seeded plan rows into the slot's plan state.  The plan's global
+    ``step`` is bumped to at least the seed's (off the re-plan beat):
+    on a fresh cache this is what makes decode step 0 planned rather
+    than a cold full re-plan."""
+    ks, vs = state["k"], state["v"]          # (L, 1, S_p, KV, hd)
+    sp = ks.shape[2]
+    kv = dict(cache["kv"])
+    if "k_pages" in kv:
+        assert phys_pages is not None, "paged install needs the pages"
+        page = kv["k_pages"].shape[2]
+        phys = jnp.asarray(np.asarray(phys_pages), jnp.int32)
+        n_p = phys.shape[0]
+        assert n_p * page >= sp, (n_p, page, sp)
+        pad = n_p * page - sp
+
+        def place(pool, rows):
+            rows = jnp.pad(rows[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            rows = rows.reshape(rows.shape[0], n_p, page, *rows.shape[2:])
+            return pool.at[:, phys].set(rows.astype(pool.dtype))
+
+        kv["k_pages"] = place(kv["k_pages"], ks)
+        kv["v_pages"] = place(kv["v_pages"], vs)
+    else:
+        kv["k"] = kv["k"].at[:, slot, :sp].set(
+            ks[:, 0].astype(kv["k"].dtype))
+        kv["v"] = kv["v"].at[:, slot, :sp].set(
+            vs[:, 0].astype(kv["v"].dtype))
+    if "plan" in state and "plan" in kv:
+        seed, plan = state["plan"], dict(kv["plan"])
+        for name in ("k_min", "k_max", "kv_indices", "kv_counts"):
+            plan[name] = plan[name].at[:, slot].set(seed[name][:, 0])
+        plan["step"] = jnp.maximum(plan["step"], seed["step"])
+        kv["plan"] = plan
+    return {**cache, "kv": kv}
 
 
 def _dec_mlp(p, cfg, x):

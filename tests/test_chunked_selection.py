@@ -344,15 +344,24 @@ def test_truncating_max_kv_blocks_refuses_backward():
     """A truncating bound drops tiles only in the forward kernel; the
     reference recompute would differentiate the full selected set, so
     training through it must raise instead of silently biasing grads.
-    Forward (the serving path) still works."""
+    Forward (the serving path) still works.  The loss-free "dense"
+    overflow fallback (the default) is exempt: its forward never drops
+    a selected tile, so value and gradient describe the same function
+    and training through a bound is sound."""
     from repro.models.attention import attention_apply, attention_init
     cfg = _mk_cfg(use_sata_kernel=True, sata_selection="chunked",
-                  sata_max_kv_blocks=2)          # < nkb = 128/32
+                  sata_max_kv_blocks=2,          # < nkb = 128/32
+                  sata_bound_fallback="truncate")
     params = attention_init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 64), jnp.float32)
     assert jnp.isfinite(attention_apply(params, cfg, x)).all()
     with pytest.raises(NotImplementedError, match="truncating"):
         jax.grad(lambda p: (attention_apply(p, cfg, x) ** 2).sum())(params)
+    cfg_d = _mk_cfg(use_sata_kernel=True, sata_selection="chunked",
+                    sata_max_kv_blocks=2, sata_bound_fallback="dense")
+    g = jax.grad(lambda p: (attention_apply(p, cfg_d, x) ** 2).sum())(params)
+    assert all(bool(jnp.isfinite(leaf).all())
+               for leaf in jax.tree_util.tree_leaves(g))
 
 
 # ---------------------------------------------------------------------------
