@@ -4,7 +4,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test dev-deps bench bench-select bench-decode serve-smoke \
-	roofline-kernel
+	roofline-kernel check-regression
 
 dev-deps:
 	-pip install -r requirements-dev.txt
@@ -33,8 +33,28 @@ bench-decode:
 # End-to-end serving smoke: the SATA decode route on the paged KV pool
 # (half the contiguous HBM reservation; exercises admission control,
 # stalls, and preemption) — asserts completion + fetch reduction.
+# The --shared-prefix scenario then drives the prefix cache: requests
+# sharing a prompt prefix map its cached pages (hit-rate > 0, prefill
+# tokens saved, CoW on append) with outputs bitwise equal to the
+# cache-disabled run.
 serve-smoke:
 	python examples/serve_topk.py --paged
+	python examples/serve_topk.py --shared-prefix
 
 roofline-kernel:
 	python -m repro.launch.roofline --kernel
+
+# Bench-regression gate (the CI step behind `make bench*`): regenerate
+# the three artifacts into results/bench_fresh and compare against the
+# COMMITTED baselines in results/bench.  Contract (details in
+# benchmarks/check_regression.py): deterministic counters and
+# bitwise-parity (max_err 0.0) fields are gated EXACTLY; wall-time
+# ratios are tolerance-banded after normalizing by the suite median
+# (cancels machine speed); dropped rows fail, new rows pass.  To bless
+# a new baseline after an intended change: `make bench bench-select
+# bench-decode` and commit the regenerated results/bench JSONs.
+check-regression:
+	python -m benchmarks.run kernel select decode \
+		--json-dir results/bench_fresh
+	python -m benchmarks.check_regression \
+		--baseline-dir results/bench --fresh-dir results/bench_fresh

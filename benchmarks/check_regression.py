@@ -1,0 +1,197 @@
+"""Bench-regression gate: freshly generated ``BENCH_<suite>.json``
+artifacts vs the committed baselines in ``results/bench/``.
+
+The perf-trajectory artifacts were upload-only until PR 5; this turns
+them into a firewall.  **Gate contract** (what fails the build):
+
+* **Exact fields** — deterministic counters parsed out of each row's
+  ``derived`` string (fetch bytes/tiles, tile visits, re-plan counts,
+  reserved/used HBM, prefill tokens saved, hit counts, the
+  ``quad_SxS_buffer`` flag): must be EQUAL to the baseline.  These are
+  pure functions of code + seeds — any drift is a real behavior
+  change, not noise.
+* **Parity fields** — ``max_err`` values: a ``0.0`` baseline is a
+  bitwise property and must stay exactly ``0.0``; a nonzero baseline
+  (fp accumulation-order tolerance) may not grow beyond 4x (platform
+  jitter guard, catches order-of-magnitude breakage).
+* **Wall-time rows** (``us_per_call > 0`` in both files): per-row
+  ratio fresh/baseline, NORMALIZED by the suite's median ratio — the
+  median cancels machine-speed differences between the baseline
+  machine and the CI runner, so what is gated is each row's slowdown
+  *relative to the rest of the suite*.  A normalized ratio above
+  ``--tol-wall`` (default 2.0) fails.  Rows under ``--min-us`` are
+  skipped as noise.
+* **Coverage** — a baseline row missing from the fresh run fails (a
+  silently dropped benchmark reads as "no regression"); new rows are
+  reported as trajectory growth and pass.
+
+**Blessing a new baseline** (intended perf change or new rows):
+re-run ``make bench bench-select bench-decode`` and commit the
+regenerated ``results/bench/BENCH_*.json`` — the gate always compares
+against whatever baseline is committed.
+
+A markdown trajectory table is appended to ``$GITHUB_STEP_SUMMARY``
+when set (or ``--summary PATH``).  Exit code 1 on any regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+SUITES = ("kernel", "select", "decode")
+
+# deterministic integer counters: (label, regex with one int group)
+EXACT_PATTERNS = [
+    ("plan_bytes", r"planB (\d+)"),
+    ("dense_bytes", r"denseB (\d+)"),
+    ("fetch_tiles", r"fetch tiles (\d+)"),
+    ("tile_visits", r"visits (\d+)"),
+    ("fetch_bytes", r"fetchB (\d+)"),
+    ("reserved_bytes", r"reserved (\d+) B"),
+    ("used_bytes", r"used (\d+) B"),
+    ("step_plan_bytes", r"step (\d+) B plan-route"),
+    ("step_dense_bytes", r"vs (\d+) B dense"),
+    ("full_replans", r"(\d+) full re-plans"),
+    ("tokens_saved", r"saved (\d+)/"),
+    ("hits", r"\((\d+)/\d+ hits\)"),
+    ("cow_copies", r"(\d+) CoW copies"),
+    ("quad_buffer", r"quad_SxS_buffer=(True|False)"),
+    ("outputs_equal", r"outputs_equal=(True|False)"),
+]
+MAX_ERR_RE = re.compile(r"max_err[_a-z]*\s+([0-9.]+e?[+-]?[0-9]*)")
+
+
+def _fields(derived: str) -> Dict[str, str]:
+    out = {}
+    for label, pat in EXACT_PATTERNS:
+        m = re.search(pat, derived)
+        if m:
+            out[label] = m.group(1)
+    return out
+
+
+def _load(path: pathlib.Path) -> Optional[Dict[str, Tuple[float, str]]]:
+    if not path.exists():
+        return None
+    data = json.loads(path.read_text())
+    return {r["name"]: (float(r["us_per_call"]), str(r["derived"]))
+            for r in data["rows"]}
+
+
+def check_suite(suite: str, base: Dict, fresh: Dict, *, tol_wall: float,
+                min_us: float) -> Tuple[List[str], List[str]]:
+    """Returns (failures, table_rows)."""
+    fails: List[str] = []
+    table: List[str] = []
+    common = [n for n in base if n in fresh]
+    for name in base:
+        if name not in fresh:
+            fails.append(f"{suite}: row `{name}` disappeared from the "
+                         f"fresh run (coverage regression)")
+    # wall-time: normalize by the suite median ratio (cancels machine
+    # speed), then band each row
+    ratios = {}
+    for name in common:
+        b_us, f_us = base[name][0], fresh[name][0]
+        if b_us > min_us and f_us > 0:
+            ratios[name] = f_us / b_us
+    median = sorted(ratios.values())[len(ratios) // 2] if ratios else 1.0
+    for name in common:
+        b_us, b_der = base[name]
+        f_us, f_der = fresh[name]
+        status = "ok"
+        norm = ratios.get(name, 0.0) / median if name in ratios else None
+        if norm is not None and norm > tol_wall:
+            status = "WALL-REGRESSION"
+            fails.append(
+                f"{suite}: `{name}` wall time {f_us:.0f}us vs baseline "
+                f"{b_us:.0f}us — {norm:.2f}x the suite-median drift "
+                f"(tolerance {tol_wall}x)")
+        bf, ff = _fields(b_der), _fields(f_der)
+        for label, bval in bf.items():
+            fval = ff.get(label)
+            if fval != bval:
+                status = "EXACT-MISMATCH"
+                fails.append(
+                    f"{suite}: `{name}` field {label}: baseline {bval} "
+                    f"vs fresh {fval} (exact-gated)")
+        mb = MAX_ERR_RE.search(b_der)
+        mf = MAX_ERR_RE.search(f_der)
+        if mb and mf:
+            be, fe = float(mb.group(1)), float(mf.group(1))
+            if be == 0.0 and fe != 0.0:
+                status = "PARITY-BROKEN"
+                fails.append(f"{suite}: `{name}` bitwise parity broke: "
+                             f"max_err {fe:g} (baseline 0.0)")
+            elif be > 0.0 and fe > 4.0 * be:
+                status = "PARITY-DRIFT"
+                fails.append(f"{suite}: `{name}` max_err {fe:g} > 4x "
+                             f"baseline {be:g}")
+        table.append(f"| {name} | {b_us:.0f} | {f_us:.0f} | "
+                     f"{norm:.2f}x | {status} |" if norm is not None else
+                     f"| {name} | — | — | — | {status} |")
+    for name in fresh:
+        if name not in base:
+            table.append(f"| {name} | (new) | {fresh[name][0]:.0f} "
+                         f"| — | new row |")
+    return fails, table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline-dir", default="results/bench")
+    ap.add_argument("--fresh-dir", default="results/bench_fresh")
+    ap.add_argument("--suites", nargs="*", default=list(SUITES))
+    ap.add_argument("--tol-wall", type=float, default=2.0,
+                    help="normalized wall-ratio band (default 2.0x)")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="skip wall gating under this baseline time")
+    ap.add_argument("--summary", default=os.environ.get(
+        "GITHUB_STEP_SUMMARY"))
+    args = ap.parse_args()
+    all_fails: List[str] = []
+    lines = ["# Bench regression gate", ""]
+    for suite in args.suites:
+        base = _load(pathlib.Path(args.baseline_dir)
+                     / f"BENCH_{suite}.json")
+        fresh = _load(pathlib.Path(args.fresh_dir) / f"BENCH_{suite}.json")
+        lines.append(f"## {suite}")
+        if base is None:
+            lines += [f"_no committed baseline — gate skipped "
+                      f"(bless one via `make bench-{suite}`)_", ""]
+            print(f"[gate] {suite}: no baseline, skipped", file=sys.stderr)
+            continue
+        if fresh is None:
+            all_fails.append(f"{suite}: fresh artifact missing from "
+                             f"{args.fresh_dir}")
+            lines += ["_fresh artifact missing_", ""]
+            continue
+        fails, table = check_suite(suite, base, fresh,
+                                   tol_wall=args.tol_wall,
+                                   min_us=args.min_us)
+        all_fails += fails
+        lines += ["| row | baseline us | fresh us | norm ratio | status |",
+                  "|---|---|---|---|---|"] + table + [""]
+    if all_fails:
+        lines += ["## ❌ regressions", ""] + [f"- {f}" for f in all_fails]
+    else:
+        lines += ["✅ no regressions against the committed baselines"]
+    report = "\n".join(lines)
+    print(report)
+    if args.summary:
+        with open(args.summary, "a") as fh:
+            fh.write(report + "\n")
+    if all_fails:
+        print(f"\n[gate] FAILED: {len(all_fails)} regression(s)",
+              file=sys.stderr)
+        sys.exit(1)
+    print("\n[gate] green", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,10 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="serve from the paged KV pool (half the "
                          "contiguous reservation)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="shared-prefix scenario: requests share a "
+                         "prompt prefix and the prefix cache maps its "
+                         "pages instead of re-prefilling them")
     args = ap.parse_args()
     cfg = dataclasses.replace(
         SMOKE["qwen3-4b"],
@@ -28,6 +32,8 @@ def main():
         sata_decode_block=8,        # k-block edge over the 64-token cache
         sata_decode_replan=1,       # full re-plan every step (exact top-k)
     )
+    if args.shared_prefix:
+        return shared_prefix_demo(cfg)
     if args.paged:
         # pool sized to HALF the contiguous reservation (3 slots × 8
         # pages): short-prefix slots stop reserving max_len worth of
@@ -64,6 +70,32 @@ def main():
     print(f"[serve_topk] request {first} tokens: {out['outputs'][first]}")
     assert all(len(v) == 48 for v in out["outputs"].values())
     assert f["kv_fetch_tiles_plan"] < f["kv_fetch_tiles_dense"]
+
+
+def shared_prefix_demo(cfg):
+    """Six requests share a 16-token system prefix of their 20-token
+    prompts: the prefix cache prefills the shared pages ONCE, every
+    later claim maps them (refcount bump, zero copy, prefill only over
+    the tail), and the outputs stay bitwise identical to serving with
+    the cache disabled."""
+    base = dataclasses.replace(cfg, kv_cache_layout="paged")
+    kw = dict(smoke=True, n_requests=6, batch_slots=3, gen_len=8,
+              max_len=64, prompt_len=20)
+    off = serve("qwen3-4b", shared_prefix_len=16, cfg=base, **kw)
+    on = serve("qwen3-4b", shared_prefix_len=16,
+               cfg=dataclasses.replace(base, kv_prefix_cache=True), **kw)
+    p = on["prefix_cache"]
+    print(f"[serve_topk] shared-prefix: hit-rate {p['hit_rate']:.2f} "
+          f"({p['hits']}/{p['requests']}), prefill tokens saved "
+          f"{p['prefill_tokens_saved']}/{p['prefill_tokens_total']}, "
+          f"{p['cow_copies']} CoW copies, shared-page peak "
+          f"{p['shared_pages_peak']}")
+    print(f"[serve_topk] outputs bitwise equal to cache-disabled run: "
+          f"{on['outputs'] == off['outputs']}")
+    assert on["outputs"] == off["outputs"], "prefix cache changed outputs"
+    assert p["hit_rate"] > 0 and p["prefill_tokens_saved"] > 0
+    assert p["shared_pages_peak"] > 0
+    assert all(len(v) == 8 for v in on["outputs"].values())
 
 
 if __name__ == "__main__":

@@ -17,8 +17,10 @@ head, a persistent plan over the KV cache:
                  (``compact_kv_plan`` layout: the decode kernel's
                  scalar-prefetch schedule).
   kv_counts      (B, KV) int32   — live entries per row.
-  step           ()  int32       — decode steps since init (drives the
-                 periodic full re-plan).
+  step           (B,) int32      — per-slot decode steps since the slot
+                 was (re)claimed (drives the periodic full re-plan;
+                 per-slot so a drifting request re-plans without
+                 dragging stable slots along).
 
 Two plan refresh modes, blended by ``replan_interval``:
 
@@ -43,7 +45,12 @@ measures plan churn — blocks entering + retiring per (slot, kv head) —
 and a full re-plan fires once the accumulated churn reaches
 ``churn_budget · P``.  A stable plan then re-plans rarely (selection
 traffic stays O(P·k_block)); a drifting one re-plans early (exactness
-recovers before the summary ranking strays far).
+recovers before the summary ranking strays far).  Both triggers are
+**per slot** (``step``/``churn``/``replans`` are (B,)): one drifting
+request's full re-plan no longer rewrites every stable slot's plan —
+when a step mixes triggered and untriggered slots, both branches
+evaluate and each slot keeps its own (the all-full / all-incremental
+fast paths still run one branch).
 
 **Paged cache**: every planner works identically over the paged
 serving layout (``core/paging.py``) — block summaries and plan indices
@@ -94,13 +101,23 @@ def init_decode_plan(batch: int, n_kv_heads: int, max_len: int, d: int,
         "k_max": jnp.full((batch, n_kv_heads, nkb, d), -jnp.inf, jnp.float32),
         "kv_indices": jnp.zeros((batch, n_kv_heads, p), jnp.int32),
         "kv_counts": jnp.zeros((batch, n_kv_heads), jnp.int32),
-        "step": jnp.zeros((), jnp.int32),
+        "step": jnp.zeros((batch,), jnp.int32),
         # churn-adaptive trigger state + re-plan counter (serving reads
         # the counter for true plan-side traffic accounting); both stay
         # untouched on the fixed-interval path, so integer intervals are
-        # bit-compatible with the pre-churn state machine.
-        "churn": jnp.zeros((), jnp.float32),
-        "replans": jnp.zeros((), jnp.int32),
+        # bit-compatible with the pre-churn state machine.  ``replans``
+        # is cumulative over the slot's whole pool lifetime (NOT reset
+        # on claim): serving accounts traffic by its monotone delta.
+        "churn": jnp.zeros((batch,), jnp.float32),
+        "replans": jnp.zeros((batch,), jnp.int32),
+        # liveness: only active slots age (``step``), fire re-plan
+        # beats, and count re-plans — a serving slot whose request
+        # completed must not keep forcing full re-plans (and inflating
+        # the traffic accounting) on a beat nobody is listening to.
+        # Defaults True so non-serving callers are unaffected; serving
+        # releases on completion (``release_plan_slot``) and
+        # re-activates on claim (``reset_plan_slot``).
+        "active": jnp.ones((batch,), bool),
     }
 
 
@@ -108,16 +125,31 @@ def reset_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
                     ) -> PlanState:
     """Reset one batch slot's plan to the init state (claimed serving
     slots must not inherit the previous request's summaries).  Works on
-    layer-stacked states: ``batch_axis`` names the batch dimension
-    (``step`` is global and has no batch axis)."""
+    layer-stacked states: ``batch_axis`` names the batch dimension.
+    The slot's ``step``/``churn`` restart too (a cold slot's first
+    update must run the full re-plan); ``replans`` stays — it is the
+    cumulative traffic counter serving reads by delta."""
     ix = (slice(None),) * batch_axis + (slot,)
     return {
-        **plan,                      # step/churn/replans are global
+        **plan,                      # replans is cumulative accounting
         "k_min": plan["k_min"].at[ix].set(jnp.inf),
         "k_max": plan["k_max"].at[ix].set(-jnp.inf),
         "kv_indices": plan["kv_indices"].at[ix].set(0),
         "kv_counts": plan["kv_counts"].at[ix].set(0),
+        "step": plan["step"].at[ix].set(0),
+        "churn": plan["churn"].at[ix].set(0.0),
+        "active": plan["active"].at[ix].set(True),
     }
+
+
+def release_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
+                      ) -> PlanState:
+    """Mark one batch slot's plan inactive — its request completed (or
+    was preempted), so the slot stops aging, never fires a re-plan
+    beat, and contributes nothing to the re-plan accounting until a
+    new claim re-activates it (``reset_plan_slot``)."""
+    ix = (slice(None),) * batch_axis + (slot,)
+    return {**plan, "active": plan["active"].at[ix].set(False)}
 
 
 def update_block_summaries(plan: PlanState, k_new: jax.Array,
@@ -302,17 +334,15 @@ def _plan_occupancy(kv_indices: jax.Array, kv_counts: jax.Array,
 def plan_churn(plan: PlanState, kv_indices: jax.Array,
                kv_counts: jax.Array) -> jax.Array:
     """Blocks entering + retiring between the carried plan and this
-    step's: per-slot mean over kv heads, then MAX over slots — the
-    drift signal the churn-adaptive trigger integrates.  Max, not mean,
-    across the batch: the re-plan trigger is global, and a lockstep
-    serving batch is mostly idle slots whose plans never move — a mean
-    would dilute one drifting request's churn by the batch width and
-    let its incremental plan stray far past the budget."""
+    step's, per slot (mean over kv heads) — the drift signal the
+    churn-adaptive trigger integrates.  Per-slot (B,), not a batch
+    reduction: each serving slot accumulates only its own drift, so
+    one churning request re-plans alone and an idle slot's frozen plan
+    neither dilutes nor inflates anyone's budget."""
     nkb = plan["k_min"].shape[2]
     o_old = _plan_occupancy(plan["kv_indices"], plan["kv_counts"], nkb)
     o_new = _plan_occupancy(kv_indices, kv_counts, nkb)
-    per_slot = (o_old ^ o_new).sum(-1).astype(jnp.float32).mean(-1)
-    return per_slot.max()
+    return (o_old ^ o_new).sum(-1).astype(jnp.float32).mean(-1)
 
 
 def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
@@ -326,15 +356,19 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
     Returns the updated state and the per-row thresholds for the decode
     kernel.
 
-    Re-plan trigger: with ``churn_budget`` set (``sata_decode_replan=
-    "auto"``) a full re-plan fires when the churn accumulated over
-    incremental steps reaches ``churn_budget · P`` (and always at step
-    0 — a cold plan has nothing to rank from); otherwise every
-    ``replan_interval``-th step re-plans and intermediate steps use the
-    incremental summary-ranked plan, bit-compatible with the fixed-
-    interval state machine (``replan_interval=1`` = exact top-k every
-    step).  With ``page_table`` set, ``k_cache`` is the physical page
-    pool of the paged serving layout."""
+    Re-plan trigger (per slot — ``step``/``churn`` are (B,)): with
+    ``churn_budget`` set (``sata_decode_replan="auto"``) a slot's full
+    re-plan fires when the churn IT accumulated over incremental steps
+    reaches ``churn_budget · P`` (and always at its step 0 — a cold
+    plan has nothing to rank from); otherwise every
+    ``replan_interval``-th step of the slot re-plans and intermediate
+    steps use the incremental summary-ranked plan, bit-compatible with
+    the fixed-interval state machine (``replan_interval=1`` = exact
+    top-k every step).  A step mixing triggered and untriggered slots
+    evaluates both branches and selects per slot; steps where the
+    whole batch agrees keep the single-branch fast path.  With
+    ``page_table`` set, ``k_cache`` is the physical page pool of the
+    paged serving layout."""
     p = plan["kv_indices"].shape[-1]
 
     def _full(_):
@@ -347,22 +381,40 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
         return incremental_plan(q, k_cache, plan, pos, topk_k=topk_k,
                                 k_block=k_block, page_table=page_table)
 
+    active = plan["active"]
     churn = plan["churn"]
     if churn_budget is not None:
-        do_full = (plan["step"] == 0) | (churn >= churn_budget * p)
-        kv_indices, kv_counts, thr = jax.lax.cond(do_full, _full, _incr,
-                                                  None)
-        churn = jnp.where(do_full, 0.0,
-                          churn + plan_churn(plan, kv_indices, kv_counts))
+        do_full = ((plan["step"] == 0) | (churn >= churn_budget * p)) \
+            & active
     elif replan_interval <= 1:
-        do_full = jnp.bool_(True)
+        do_full = active
+    else:
+        do_full = (plan["step"] % replan_interval == 0) & active
+
+    if replan_interval <= 1 and churn_budget is None:
+        # exact mode computes the full re-plan unconditionally (idle
+        # slots ride the batched einsum for free); ``do_full`` above
+        # still scopes the accounting to active slots
         kv_indices, kv_counts, thr = _full(None)
     else:
-        do_full = plan["step"] % replan_interval == 0
-        kv_indices, kv_counts, thr = jax.lax.cond(do_full, _full, _incr,
-                                                  None)
+        def _mixed(_):
+            fi, fc, ft = _full(None)
+            ii, ic, it = _incr(None)
+            sel = do_full
+            return (jnp.where(sel[:, None, None], fi, ii),
+                    jnp.where(sel[:, None], fc, ic),
+                    jnp.where(sel[:, None, None, None], ft, it))
+
+        branch = jnp.where(do_full.all(), 2,
+                           jnp.where(do_full.any(), 1, 0))
+        kv_indices, kv_counts, thr = jax.lax.switch(
+            branch, [_incr, _mixed, _full], None)
+    if churn_budget is not None:
+        churn = jnp.where(do_full, 0.0,
+                          churn + plan_churn(plan, kv_indices, kv_counts))
     new_plan = {**plan, "kv_indices": kv_indices, "kv_counts": kv_counts,
-                "step": plan["step"] + 1, "churn": churn,
+                "step": plan["step"] + active.astype(jnp.int32),
+                "churn": churn,
                 "replans": plan["replans"] + do_full.astype(jnp.int32)}
     return new_plan, thr
 
@@ -402,4 +454,4 @@ def plan_from_prefill(k_cache: jax.Array, q_tail: jax.Array,
                                            plan_blocks=p)
     return {**plan, "k_min": k_min, "k_max": k_max,
             "kv_indices": kv_indices, "kv_counts": kv_counts,
-            "step": jnp.ones((), jnp.int32)}
+            "step": jnp.ones((b,), jnp.int32)}

@@ -32,6 +32,24 @@ The allocator is deliberately **host-side** (plain numpy): allocation
 is a serving-control decision made between jitted steps, exactly like
 slot claiming.  Device code only ever consumes the resulting table.
 
+**Shared-prefix page cache** (PR 5): physical pages carry a
+**refcount**, so one page can back the same logical block of several
+slots at once.  ``PrefixCache`` keeps a prompt-prefix trie keyed on
+page-aligned token-hash chains: each node is one physical page worth
+of prompt tokens, children extend the chain, and a claim first walks
+the trie (``match``) to map the longest cached prefix into the new
+slot's page table — refcount bump, zero copy, and the prefill pass
+runs only over the unmatched tail.  Shared pages are **immutable while
+``refcount > 1``**: any append that would land in one goes through
+copy-on-write (``ensure_writable``: allocate a fresh page, have the
+driver copy the rows device-side, remap the slot's table entry,
+decrement the old page) — in particular a prompt whose final page is
+partial gets that page registered in the trie at install, so the
+owner's own first decode append CoWs it and the trie keeps the
+pristine prompt-only page.  ``free_slot`` decrements instead of
+recycling, so completing (or preempting) a request never frees a page
+the trie or another slot still references.
+
 SATA decode composes with near-zero kernel change: the decode plan
 (``core/decode_plan.py``) keeps block summaries per *logical* page and
 emits logical page indices; only the kernel's K/V BlockSpec index maps
@@ -41,7 +59,8 @@ to equal the page size (plan blocks ARE pages).
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import hashlib
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -83,6 +102,12 @@ class PageAllocator:
                              np.int32)
         self.n_mapped = np.zeros(batch_slots, np.int32)
         self.pages_in_use_peak = 0
+        # per-physical-page reference count: slot table entries + (for
+        # prefix-cached pages) the trie's retention each count one.  A
+        # page recycles only at ref == 0; ref > 1 marks it SHARED and
+        # therefore immutable (writes must CoW first).
+        self.ref = np.zeros(n_pages, np.int64)
+        self.shared_pages_peak = 0
 
     @property
     def free_pages(self) -> int:
@@ -91,6 +116,11 @@ class PageAllocator:
     @property
     def pages_in_use(self) -> int:
         return (self.n_pages - 1) - len(self.free)
+
+    @property
+    def shared_pages(self) -> int:
+        """Physical pages currently referenced more than once."""
+        return int((self.ref > 1).sum())
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages needed to hold ``n_tokens`` cache rows."""
@@ -111,20 +141,70 @@ class PageAllocator:
             if not self.free:
                 return False
             phys = self.free.pop()
+            self.ref[phys] = 1
             self.table[slot, self.n_mapped[slot]] = phys
             self.n_mapped[slot] += 1
         self.pages_in_use_peak = max(self.pages_in_use_peak,
                                      self.pages_in_use)
         return True
 
+    def map_shared(self, slot: int, phys_pages: List[int]) -> None:
+        """Map already-populated physical pages (a matched cached
+        prefix) as the slot's first logical pages: refcount bump, zero
+        copy.  Must precede any ``ensure`` for the slot (logical pages
+        map strictly in order)."""
+        assert self.n_mapped[slot] == 0, "shared prefix maps first"
+        for lp, phys in enumerate(phys_pages):
+            assert phys != OVERFLOW_PAGE
+            self.table[slot, lp] = int(phys)
+            self.ref[phys] += 1
+        self.n_mapped[slot] = len(phys_pages)
+        self.shared_pages_peak = max(self.shared_pages_peak,
+                                     self.shared_pages)
+
+    def deref(self, phys: int) -> None:
+        """Drop one reference; the page recycles at zero."""
+        assert phys != OVERFLOW_PAGE and self.ref[phys] > 0, phys
+        self.ref[phys] -= 1
+        if self.ref[phys] == 0:
+            self.free.append(int(phys))
+
+    def ensure_writable(self, slot: int, pos: int
+                        ) -> Tuple[bool, Optional[Tuple[int, int]]]:
+        """Copy-on-write gate: the page holding ``pos`` must be
+        exclusively owned before the slot may write a row into it.
+        Returns ``(ok, copy)`` — ``copy = (src, dst)`` when a shared
+        page was remapped and the caller must copy the K/V rows
+        device-side (``models.decode.copy_phys_pages``) before the
+        write lands; ``(False, None)`` when the pool cannot back the
+        copy (the slot stalls this step, exactly like ``ensure``)."""
+        lp = pos // self.page
+        if lp >= self.n_mapped[slot]:
+            return True, None                    # unmapped: ensure() maps
+        src = int(self.table[slot, lp])
+        if self.ref[src] <= 1:
+            return True, None                    # exclusive: write away
+        if not self.free:
+            return False, None                   # CoW needs a page: stall
+        dst = self.free.pop()
+        self.ref[dst] = 1
+        self.table[slot, lp] = dst
+        self.ref[src] -= 1                       # shared pages never hit 0
+        self.pages_in_use_peak = max(self.pages_in_use_peak,
+                                     self.pages_in_use)
+        return True, (src, dst)
+
     def free_slot(self, slot: int) -> int:
-        """Release all of a finished slot's pages back to the pool.
-        Stale table entries are reset to the overflow page (reads are
-        position-masked anyway, but a recycled physical page must not
-        stay visible through an old slot's table row)."""
+        """Release a finished slot's references.  Pages drop back to
+        the free list only when nothing else references them — a page
+        shared with the prefix trie or another slot survives (this is
+        what makes preemption safe under sharing).  Stale table entries
+        reset to the overflow page (reads are position-masked anyway,
+        but a recycled physical page must not stay visible through an
+        old slot's table row)."""
         n = int(self.n_mapped[slot])
         for lp in range(n):
-            self.free.append(int(self.table[slot, lp]))
+            self.deref(int(self.table[slot, lp]))
         self.table[slot, :] = OVERFLOW_PAGE
         self.n_mapped[slot] = 0
         return n
@@ -139,6 +219,227 @@ class PageAllocator:
             "page_size": self.page,
             "pages_in_use": self.pages_in_use,
             "pages_in_use_peak": self.pages_in_use_peak,
+            "shared_pages": self.shared_pages,
+            "shared_pages_peak": self.shared_pages_peak,
+            "private_pages": self.pages_in_use - self.shared_pages,
             "hbm_reserved_bytes": self.n_pages * page_bytes,
             "hbm_used_peak_bytes": self.pages_in_use_peak * page_bytes,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix page cache
+# ---------------------------------------------------------------------------
+
+class _TrieNode:
+    """One physical page worth of prompt tokens.  ``ntok == page``
+    (full) nodes key the chain walk by token-hash and may have
+    children; partial nodes (``ntok < page``) terminate a chain and
+    match by token-prefix comparison only."""
+
+    __slots__ = ("phys", "tokens", "digest", "children", "partials",
+                 "parent", "stamp")
+
+    def __init__(self, phys: int, tokens: Tuple[int, ...], digest: bytes,
+                 parent: Optional["_TrieNode"]):
+        self.phys = int(phys)
+        self.tokens = tokens
+        self.digest = digest
+        self.children: Dict[bytes, "_TrieNode"] = {}
+        self.partials: List["_TrieNode"] = []
+        self.parent = parent
+        self.stamp = 0
+
+    @property
+    def evictable(self) -> bool:
+        return not self.children and not self.partials
+
+
+def _chain_digest(parent_digest: bytes, tokens: np.ndarray) -> bytes:
+    """Position-dependent page key: hashing the parent digest chains
+    the pages, so identical page contents at different prefix depths
+    never collide.  Token equality is still verified on lookup — the
+    digest only routes."""
+    return hashlib.sha1(
+        parent_digest + np.ascontiguousarray(tokens, np.int64).tobytes()
+    ).digest()
+
+
+class PrefixCache:
+    """Prompt-prefix trie over the page pool.
+
+    ``match(tokens)`` walks full-page children by chained token hash
+    (verifying the stored tokens — the digest only routes) and finishes
+    with the longest token-prefix match against the stop node's
+    children, so a prompt sharing only half a cached page still maps
+    that page (the tail prefill CoWs it before writing).  ``register``
+    inserts a freshly prefilled prompt's pages — full pages as chain
+    nodes, the final partial page as a terminal node — bumping each
+    page's refcount by one for the trie's own retention.  ``evict``
+    releases least-recently-used leaf pages no slot references when the
+    pool runs dry; interior nodes free once their subtree is gone.
+
+    Everything is host-side bookkeeping, like the allocator it feeds.
+    """
+
+    def __init__(self, alloc: PageAllocator):
+        self.alloc = alloc
+        self.page = alloc.page
+        self.root = _TrieNode(OVERFLOW_PAGE, (), b"root", None)
+        self._clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.tokens_saved = 0
+        self.evictions = 0
+
+    @property
+    def cached_pages(self) -> int:
+        n = 0
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            if node is not self.root:
+                n += 1
+            stack.extend(node.children.values())
+            stack.extend(node.partials)
+        return n
+
+    def _touch(self, node: _TrieNode) -> None:
+        self._clock += 1
+        while node is not None and node is not self.root:
+            node.stamp = self._clock
+            node = node.parent
+
+    def match(self, tokens: np.ndarray
+              ) -> Tuple[int, List[int], Optional[int]]:
+        """Longest cached prefix of ``tokens``: returns
+        ``(matched_tokens, phys_pages, partial_rows)`` where
+        ``phys_pages`` are the ascending physical pages to map
+        (``map_shared``) and ``partial_rows`` is the number of valid
+        rows in the last mapped page when the match ends mid-page
+        (``None`` for a page-aligned match).  Callers wanting the
+        prefill to always produce last-token logits should match
+        ``tokens[:-1]``.  Pure lookup (plus LRU touch) — the driver
+        records hit statistics with ``note`` once a claim actually
+        lands, so a deferred admission never double-counts."""
+        toks = np.asarray(tokens, np.int64).reshape(-1)
+        node, phys, m = self.root, [], 0
+        while len(toks) - m >= self.page:
+            page_toks = toks[m:m + self.page]
+            child = node.children.get(_chain_digest(node.digest, page_toks))
+            if child is None or child.tokens != tuple(page_toks.tolist()):
+                break
+            node, m = child, m + self.page
+            phys.append(child.phys)
+        # longest common token prefix among the stop node's children
+        # (full AND partial): a shared page is useful even half-used —
+        # the tail prefill CoWs it and overwrites from the divergence
+        best, best_len = None, 0
+        rest = tuple(toks[m:].tolist())
+        for cand in list(node.children.values()) + node.partials:
+            lcp = 0
+            for a, b in zip(rest, cand.tokens):
+                if a != b:
+                    break
+                lcp += 1
+            if lcp > best_len:
+                best, best_len = cand, lcp
+        if best is not None:
+            phys.append(best.phys)
+            m += best_len
+            self._touch(best)
+        elif phys:
+            self._touch(node)
+        return m, phys, (best_len if best is not None else None)
+
+    def note(self, matched_tokens: int) -> None:
+        """Record one admitted request's hit statistics."""
+        if matched_tokens:
+            self.hits += 1
+            self.tokens_saved += matched_tokens
+        else:
+            self.misses += 1
+
+    def register(self, tokens: np.ndarray, table_row: np.ndarray) -> int:
+        """Insert a prompt's pages (the slot's current mapping
+        ``table_row``) into the trie; each newly retained page's
+        refcount bumps by one for the trie.  Already-cached chain nodes
+        are skipped (the match that preceded this register mapped
+        them); a partial page is skipped when an existing sibling
+        already covers its tokens.  Returns pages newly retained."""
+        toks = np.asarray(tokens, np.int64).reshape(-1)
+        node, m, added = self.root, 0, 0
+        while len(toks) - m >= self.page:
+            page_toks = toks[m:m + self.page]
+            digest = _chain_digest(node.digest, page_toks)
+            child = node.children.get(digest)
+            if child is None or child.tokens != tuple(page_toks.tolist()):
+                phys = int(table_row[m // self.page])
+                child = _TrieNode(phys, tuple(page_toks.tolist()), digest,
+                                  node)
+                node.children[digest] = child
+                self.alloc.ref[phys] += 1
+                added += 1
+            node, m = child, m + self.page
+        rest = tuple(toks[m:].tolist())
+        if rest:
+            covered = any(
+                len(cand.tokens) >= len(rest)
+                and cand.tokens[:len(rest)] == rest
+                for cand in list(node.children.values()) + node.partials)
+            if not covered:
+                phys = int(table_row[m // self.page])
+                part = _TrieNode(phys, rest,
+                                 _chain_digest(node.digest,
+                                               np.asarray(rest)), node)
+                node.partials.append(part)
+                self.alloc.ref[phys] += 1
+                added += 1
+                node = part
+        self._touch(node)
+        self.alloc.shared_pages_peak = max(self.alloc.shared_pages_peak,
+                                           self.alloc.shared_pages)
+        return added
+
+    def evict(self, need_pages: int) -> int:
+        """Free least-recently-used evictable leaves until ``need_pages``
+        pages sit on the free list (or nothing more can go).  Only
+        leaves no slot references (``ref == 1`` — the trie's own
+        retention is the last one) are touched: evicting a leaf some
+        running slot still maps would free nothing now and destroy a
+        warm entry for nothing.  An interior node whose subtree
+        evicted becomes a leaf itself and goes on a later round."""
+        freed = 0
+        while len(self.alloc.free) < need_pages:
+            victims = []
+            stack = [self.root]
+            while stack:
+                n = stack.pop()
+                stack.extend(n.children.values())
+                stack.extend(n.partials)
+                if n is not self.root and n.evictable \
+                        and self.alloc.ref[n.phys] == 1:
+                    victims.append(n)
+            pick = min(victims, key=lambda n: n.stamp, default=None)
+            if pick is None:
+                break
+            parent = pick.parent
+            if pick in parent.partials:
+                parent.partials.remove(pick)
+            else:
+                parent.children.pop(pick.digest, None)
+            self.alloc.deref(pick.phys)
+            freed += 1
+            self.evictions += 1
+        return freed
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "requests": total,
+            "hits": self.hits,
+            "hit_rate": self.hits / max(total, 1),
+            "prefill_tokens_saved": self.tokens_saved,
+            "cached_pages": self.cached_pages,
+            "evictions": self.evictions,
         }

@@ -29,6 +29,21 @@ whose K/V rows and *seeded decode plan* install into the claimed slot —
 the first decode step starts planned (summaries + the prompt tail's
 selected blocks) instead of running a cold full re-plan.
 
+**Shared-prefix page cache** (``cfg.kv_prefix_cache``, paged only): a
+claim first walks the prompt-prefix trie (``core.paging.PrefixCache``)
+and maps the longest cached prefix's pages straight into the new
+slot's table — refcount bump, zero copy, and prefill runs only over
+the unmatched tail (its queries attend over the gathered prefix K/V,
+so the math is the full prefill's, minus the matched positions'
+FLOPs).  Shared pages are immutable: any append that would land in
+one (in particular the owner's first append into its registered
+partial prompt page) goes through copy-on-write — allocate, copy
+device-side, remap — or stalls the step when the pool is dry, and the
+driver evicts least-recently-used trie pages under pressure.
+Completion/preemption decrement refcounts, never freeing a page the
+trie or another slot still holds.  The run report adds hit-rate,
+prefill tokens saved, CoW copies, and shared-vs-private occupancy.
+
 With ``cfg.sata_decode`` routing on, every step fetches only the
 planned KV blocks (``core/decode_plan.py`` + the decode gather kernel)
 and the driver accumulates both kernel-side and *plan-side* traffic
@@ -50,7 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.archs import ARCHS, SMOKE
-from repro.core.paging import PageAllocator
+from repro.core.paging import PageAllocator, PrefixCache
 from repro.launch.mesh import make_local_mesh
 from repro.models import attention as attn
 from repro.models import decode as dec
@@ -73,17 +88,25 @@ def _plan_counts(cache: Dict) -> Optional[np.ndarray]:
     return None if cnt is None else cnt.reshape(-1, *cnt.shape[-2:])
 
 
-def _plan_replans(cache: Dict) -> Optional[float]:
-    """Mean cumulative full-re-plan count across the layer stack (the
-    churn-adaptive trigger can fire per layer)."""
+def _plan_replans(cache: Dict) -> Optional[np.ndarray]:
+    """Cumulative per-(layer, slot) full-re-plan counters, layer axes
+    flattened to (L, B) — both the churn-adaptive trigger and the
+    per-slot beat fire independently, so the caller attributes deltas
+    to the slots that actually hold live requests."""
     r = _plan_field(cache, "replans")
-    return None if r is None else float(r.astype(np.float64).mean())
+    return None if r is None else \
+        r.astype(np.float64).reshape(-1, r.shape[-1])
 
 
 def serve(arch: str, smoke: bool = True, n_requests: int = 8,
           batch_slots: int = 4, gen_len: int = 16, max_len: int = 64,
           seed: int = 0, mesh=None, params=None,
-          cfg=None, prompt_len: int = 1) -> Dict[str, Any]:
+          cfg=None, prompt_len: int = 1,
+          shared_prefix_len: int = 0) -> Dict[str, Any]:
+    """``shared_prefix_len``: the generated prompts share their first
+    N tokens (a common system prompt) — the workload the prefix cache
+    exists for.  Outputs stay a function of each request's own full
+    prompt, cache or no cache."""
     cfg = cfg or (SMOKE if smoke else ARCHS)[arch]
     mesh = mesh or make_local_mesh()
     if params is None:
@@ -133,10 +156,50 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             f"(family {cfg.family!r})")
     prefill = (jax.jit(lambda p, t: dec.prefill_prompt(p, cfg, t, max_len))
                if use_prefill else None)
+    prefill_tail = (jax.jit(lambda p, t, pk: dec.prefill_prompt(
+        p, cfg, t, max_len, prefix_kv=pk)) if use_prefill else None)
+
+    # --- shared-prefix page cache (prompt-prefix trie over the pool)
+    pcache: Optional[PrefixCache] = None
+    if attn.prefix_cache_on(cfg):
+        assert alloc is not None
+        pcache = PrefixCache(alloc)
+    cow_copies = 0
+    page = alloc.page if alloc is not None else max_len
+
+    def _push_tables():
+        nonlocal cache
+        cache = dec.set_page_table(
+            cfg, cache, alloc.table,
+            page_ref=alloc.ref if pcache is not None else None)
+
+    def _step_writable(i: int) -> bool:
+        """Pool-side gate before slot ``i`` appends at pos_h[i]: CoW
+        the target page if it is shared, map it if it is new — evicting
+        trie-retained pages first when the pool is dry (cached prefixes
+        are a use of SPARE pages, never a reason to stall a live
+        request).  False = stall this step."""
+        nonlocal cache, cow_copies
+        ok, cp = alloc.ensure_writable(i, int(pos_h[i]))
+        if not ok and pcache is not None and pcache.evict(1):
+            ok, cp = alloc.ensure_writable(i, int(pos_h[i]))
+        if not ok:
+            return False
+        if cp is not None:
+            cache = dec.copy_phys_pages(cache, [cp])
+            cow_copies += 1
+        if alloc.ensure(i, int(pos_h[i])):
+            return True
+        if pcache is not None and pcache.evict(1):
+            return alloc.ensure(i, int(pos_h[i]))
+        return False
 
     # deterministic prompt tokens per request: a request's output
     # depends only on its own prompt, never on which slot served it
     prompts = rng.integers(0, cfg.vocab_size, (n_requests, prompt_len))
+    if shared_prefix_len:
+        assert shared_prefix_len < prompt_len, "tail must be non-empty"
+        prompts[:, :shared_prefix_len] = prompts[0, :shared_prefix_len]
     queue: List[int] = list(range(n_requests))
     outputs: Dict[int, List[int]] = {}
     latency: Dict[int, float] = {}
@@ -149,10 +212,14 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     deferred_claims = stalled_steps = preemptions = 0
     fetch_tiles_plan = fetch_tiles_dense = 0
     plan_bytes = kernel_bytes_plan = kernel_bytes_dense = 0
-    last_replans = 0.0
+    noted: set = set()               # requests whose hit/miss is counted
     from repro.kernels.ops import decode_fetch_stats
     blk = attn.decode_block_size(cfg, max_len)
     tile_bytes = 2 * blk * cfg.hd * jnp.dtype(_dtype(cfg)).itemsize
+    # every slot starts RELEASED (no request → no re-plan beat, no
+    # accounting); a claim re-activates it through reset_slot
+    for i in range(batch_slots):
+        cache = dec.release_slot(cfg, cache, i)
     # warm the jit trace before any latency clock starts — every slot a
     # request claims is reset first (paged: the unmapped tables route
     # the warm-up writes to the overflow page), so the warm-up never
@@ -160,8 +227,8 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     logits, cache = step(params, cache, jnp.asarray(tokens_h),
                          jnp.asarray(pos_h))
     jax.block_until_ready(logits)
-    last_replans = _plan_replans(cache) or 0.0    # skip warm-up's re-plan
-    replans_base = last_replans
+    last_rep = _plan_replans(cache)               # skip warm-up's re-plan
+    rep_base = last_rep
     t0 = time.time()
     # paged backpressure can stall slots / defer claims / preempt-and-
     # restart, so budget extra lockstep steps beyond the contiguous-
@@ -170,24 +237,76 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     while (queue or any(s is not None for s in slots)) and steps < max_steps:
         for i in range(batch_slots):              # claim free slots
             if slots[i] is None and queue:
-                if alloc is not None and not alloc.can_admit(
-                        alloc.pages_for(max(prompt_len, 1))):
-                    deferred_claims += 1          # backpressure: wait
-                    break
+                # prefix match BEFORE admission: a matched prefix maps
+                # cached pages, so it shrinks the claim's pool demand
+                # (match tokens[:-1] — the tail must stay non-empty so
+                # the prefill always produces last-token logits)
+                m, phys_m = 0, []
+                if pcache is not None and use_prefill:
+                    m, phys_m, _ = pcache.match(prompts[queue[0], :-1])
+                if alloc is not None:
+                    def _need():
+                        return max(alloc.pages_for(max(prompt_len, 1))
+                                   - len(phys_m) + (1 if m % page else 0),
+                                   0)
+                    if not alloc.can_admit(_need()):
+                        if pcache is not None:
+                            pcache.evict(_need())
+                            # eviction may have dropped matched pages —
+                            # re-walk before trusting the mapping
+                            m, phys_m, _ = pcache.match(
+                                prompts[queue[0], :-1])
+                        if not alloc.can_admit(_need()):
+                            deferred_claims += 1  # backpressure: wait
+                            break
                 r = queue.pop(0)
                 slots[i] = r
                 outputs[r] = []
                 t_claim[r] = time.time()          # claim → last token
                 cache = dec.reset_slot(cfg, cache, i)
                 if use_prefill:
+                    if pcache is not None and r not in noted:
+                        # once per REQUEST: a preempted request's
+                        # re-claim would otherwise double-count (its
+                        # own registered pages guarantee the re-claim
+                        # hits, inflating saved past total)
+                        noted.add(r)
+                        pcache.note(m)
+                    if m:
+                        alloc.map_shared(i, phys_m)
+                        if m % page:
+                            # the tail's first rows land inside the
+                            # last matched page: shared → CoW now
+                            ok, cp = alloc.ensure_writable(i, m)
+                            assert ok, "admission reserved the CoW page"
+                            if cp is not None:
+                                cache = dec.copy_phys_pages(cache, [cp])
+                                cow_copies += 1
                     if alloc is not None:
                         ok = alloc.ensure(i, prompt_len - 1)
                         assert ok, "admission control reserved these pages"
-                    lg0, state = prefill(params, jnp.asarray(
-                        prompts[r:r + 1], jnp.int32))
+                        _push_tables()
+                    if m:
+                        prefix = dec.gather_prefix_kv(cache,
+                                                      alloc.table[i], m)
+                        lg0, state = prefill_tail(
+                            params,
+                            jnp.asarray(prompts[r:r + 1, m:], jnp.int32),
+                            prefix)
+                    else:
+                        lg0, state = prefill(params, jnp.asarray(
+                            prompts[r:r + 1], jnp.int32))
                     phys = (alloc.table[i, :alloc.pages_for(prompt_len)]
                             if alloc is not None else None)
-                    cache = dec.install_prefill(cfg, cache, i, state, phys)
+                    cache = dec.install_prefill(cfg, cache, i, state, phys,
+                                                prefix_len=m)
+                    if pcache is not None:
+                        # retain the prompt's pages (full pages chain
+                        # the trie; the final partial page becomes a
+                        # terminal node, so the owner's own first
+                        # append below will copy-on-write it)
+                        pcache.register(prompts[r], alloc.table[i])
+                        _push_tables()
                     pos_h[i] = prompt_len
                     # the prefill's last-position argmax IS the first
                     # generated token — record it, don't just feed it
@@ -198,6 +317,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                     if len(outputs[r]) >= gen_len or pos_h[i] >= max_len:
                         latency[r] = time.time() - t_claim[r]
                         slots[i] = None           # gen_len=1: done already
+                        cache = dec.release_slot(cfg, cache, i)
                         if alloc is not None:
                             alloc.free_slot(i)
                 else:
@@ -208,26 +328,32 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         if alloc is not None and active:
             while True:
                 stalled = [i for i in active if slots[i] is not None
-                           and not alloc.ensure(i, int(pos_h[i]))]
+                           and not _step_writable(i)]
                 runnable = [i for i in active if slots[i] is not None
                             and i not in stalled]
                 if not stalled or runnable:
                     break
-                # every active slot is stalled and pages only free when
-                # a request completes — livelock.  Preempt the slot with
-                # the least progress: free its pages, requeue its
-                # request (regeneration is deterministic, so the final
-                # output is unchanged), and let the others advance.
+                # every active slot is stalled: first reclaim pages only
+                # the prefix trie still holds, then — pages only free
+                # when a request completes — livelock.  Preempt the
+                # slot with the least progress: drop its references,
+                # requeue its request (regeneration is deterministic,
+                # so the final output is unchanged; shared pages it
+                # mapped survive through their other references), and
+                # let the others advance.
+                if pcache is not None and pcache.evict(1):
+                    continue
                 victim = min(stalled, key=lambda i: len(outputs[slots[i]]))
                 r = slots[victim]
                 produced -= len(outputs[r])       # discarded, not served
                 outputs[r] = []
                 queue.insert(0, r)
                 slots[victim] = None
+                cache = dec.release_slot(cfg, cache, victim)
                 alloc.free_slot(victim)
                 preemptions += 1
             stalled_steps += len(stalled)
-            cache = dec.set_page_table(cfg, cache, alloc.table)
+            _push_tables()
             # preemption may have freed slots out of the stale list
             active = [i for i in range(batch_slots) if slots[i] is not None]
         logits, cache = step(params, cache, jnp.asarray(tokens_h),
@@ -236,12 +362,15 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         counts = _plan_counts(cache)
         live = [i for i in active if i not in stalled]
         frac = 0.0
-        replans = _plan_replans(cache)
-        if replans is not None:
-            # track EVERY step so an all-deferred step's re-plan is not
-            # later clamped into the next live step's delta
-            frac = min(1.0, max(0.0, replans - last_replans))
-            last_replans = replans
+        rep = _plan_replans(cache)
+        if rep is not None:
+            # per-(layer, slot) delta, attributed to LIVE slots only —
+            # released slots never fire, and an idle slot's counter
+            # must not dilute or inflate the live traffic blend
+            delta = np.clip(rep - last_rep, 0.0, 1.0)
+            last_rep = rep
+            if live:
+                frac = float(delta[:, live].mean())
         if counts is not None and live:
             # count only slots holding live requests — idle slots still
             # run through the lockstep batch but serve nobody
@@ -266,6 +395,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             if len(outputs[r]) >= gen_len or pos_h[i] >= max_len:
                 latency[r] = now - t_claim[r]
                 slots[i] = None                   # finished → free slot
+                cache = dec.release_slot(cfg, cache, i)
                 if alloc is not None:
                     alloc.free_slot(i)            # … and its pages
             else:
@@ -293,7 +423,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             "step_bytes_dense_route": kernel_bytes_dense,
             "true_reduction": kernel_bytes_dense
             / max(kernel_bytes_plan + plan_bytes, 1),
-            "replans": last_replans - replans_base,
+            "replans": float((last_rep - rep_base).mean()),
         }
     if alloc is not None:
         layers = int(jax.tree_util.tree_leaves(
@@ -310,6 +440,12 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         occ["stalled_steps"] = stalled_steps
         occ["preemptions"] = preemptions
         out["page_occupancy"] = occ
+    if pcache is not None:
+        pstats = pcache.stats()
+        pstats["prefill_tokens_total"] = len(latency) * prompt_len
+        pstats["cow_copies"] = cow_copies
+        pstats["shared_pages_peak"] = alloc.shared_pages_peak
+        out["prefix_cache"] = pstats
     return out
 
 
@@ -323,14 +459,20 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=1)
     ap.add_argument("--paged", action="store_true",
                     help="serve from the paged KV pool")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix page cache (implies --paged)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prompts share their first N tokens")
     args = ap.parse_args()
     cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
-    if args.paged:
+    if args.paged or args.prefix_cache:
         import dataclasses
-        cfg = dataclasses.replace(cfg, kv_cache_layout="paged")
+        cfg = dataclasses.replace(cfg, kv_cache_layout="paged",
+                                  kv_prefix_cache=args.prefix_cache)
     out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
                 batch_slots=args.slots, gen_len=args.gen_len,
-                prompt_len=args.prompt_len, cfg=cfg)
+                prompt_len=args.prompt_len, cfg=cfg,
+                shared_prefix_len=args.shared_prefix_len)
     print(f"[serve] generated {out['tokens_generated']} tokens over "
           f"{len(out['outputs'])} requests "
           f"({out['tok_per_s']:.1f} tok/s on CPU, "
@@ -352,6 +494,14 @@ def main():
               f"({o['reserved_vs_contiguous']:.2f}x less reserved than "
               f"contiguous would need; {o['deferred_claims']} deferred "
               f"claims, {o['stalled_steps']} stalled steps)")
+    if "prefix_cache" in out:
+        p = out["prefix_cache"]
+        print(f"[serve] prefix cache: hit-rate {p['hit_rate']:.2f} "
+              f"({p['hits']}/{p['requests']}), prefill tokens saved "
+              f"{p['prefill_tokens_saved']}/{p['prefill_tokens_total']}, "
+              f"{p['cow_copies']} CoW copies, {p['cached_pages']} cached "
+              f"pages ({p['evictions']} evicted), shared-page peak "
+              f"{p['shared_pages_peak']}")
 
 
 if __name__ == "__main__":

@@ -503,6 +503,19 @@ def paged_kv_on(cfg) -> bool:
     return getattr(cfg, "kv_cache_layout", "contiguous") == "paged"
 
 
+def prefix_cache_on(cfg) -> bool:
+    """Shared-prefix page cache (``core.paging.PrefixCache``)?  Only
+    meaningful on the paged layout — sharing IS page-table aliasing."""
+    if not getattr(cfg, "kv_prefix_cache", False):
+        return False
+    if not paged_kv_on(cfg):
+        raise ValueError(
+            "kv_prefix_cache=True requires kv_cache_layout='paged' — "
+            "prefix sharing aliases physical pages through the page "
+            "table, which the contiguous layout does not have")
+    return True
+
+
 def kv_page_size(cfg, max_len: int) -> int:
     """Tokens per page: ``kv_page_size`` or the decode k-block edge —
     the equality SATA decode requires (plan blocks ARE pages)."""
@@ -562,6 +575,20 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
             "page_table": jnp.full((batch, max_pages), OVERFLOW_PAGE,
                                    jnp.int32),
         }
+        if prefix_cache_on(cfg):
+            # per-physical-page refcounts (driver-pushed): the paged
+            # write path write-protects shared pages with them
+            cache["page_ref"] = jnp.zeros((n_pages,), jnp.int32)
+            if sata:
+                # per-physical-page K summaries: registered prompt
+                # pages keep their elementwise min/max here, so a
+                # cache-hit install seeds the decode plan's matched
+                # blocks without re-reading their keys (bit-identical
+                # to a from-scratch recompute by min/max associativity)
+                cache["page_k_min"] = jnp.full(
+                    (n_pages, cfg.n_kv_heads, hd), jnp.inf, jnp.float32)
+                cache["page_k_max"] = jnp.full(
+                    (n_pages, cfg.n_kv_heads, hd), -jnp.inf, jnp.float32)
         if sata:
             blk = decode_block_size(cfg, max_len)
             if blk != page:
@@ -697,12 +724,24 @@ def _paged_decode_step(params: Params, cfg, cache: Dict, q: jax.Array,
     rides along, else densely over the gathered logical view.  A slot
     whose current page is unmapped writes to the overflow page (its
     output is garbage by construction and the serving driver discards
-    it — see ``core/paging.py`` on stalls)."""
-    from repro.core.paging import logical_kv_view
+    it — see ``core/paging.py`` on stalls).
+
+    With the prefix cache on, the cache carries driver-pushed per-page
+    refcounts (``page_ref``): a write that would land in a SHARED page
+    (refcount > 1 — the driver must copy-on-write it first) re-routes
+    to the overflow page instead.  This is write-protection, not
+    recovery — the structural guarantee that shared prompt pages are
+    immutable holds even against a driver bug, at the price of that
+    slot's token being garbage (position-masked, driver re-feeds on
+    the stall path)."""
+    from repro.core.paging import OVERFLOW_PAGE, logical_kv_view
     b = q.shape[0]
     kp, vp, tbl = cache["k_pages"], cache["v_pages"], cache["page_table"]
     page = kp.shape[1]
     phys = jnp.take_along_axis(tbl, (pos // page)[:, None], axis=1)[:, 0]
+    ref = cache.get("page_ref")
+    if ref is not None:
+        phys = jnp.where(ref[phys] > 1, OVERFLOW_PAGE, phys)
     off = pos % page
     kp = kp.at[phys, off].set(k_new[:, 0].astype(kp.dtype))
     vp = vp.at[phys, off].set(v_new[:, 0].astype(vp.dtype))

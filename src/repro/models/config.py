@@ -88,6 +88,14 @@ class ModelConfig:
                                               # (0 = slots·max_pages + 1:
                                               # contiguous-equivalent
                                               # capacity + overflow page)
+    kv_prefix_cache: bool = False             # shared-prefix page cache
+                                              # (paged layout only): a
+                                              # prompt-prefix trie maps
+                                              # cached prompt pages into
+                                              # new slots (refcounted,
+                                              # copy-on-write on append;
+                                              # prefill runs only on the
+                                              # unmatched tail)
     qk_norm: bool = False
     rope_theta: float = 10000.0
     causal: bool = True

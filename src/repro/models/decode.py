@@ -172,21 +172,95 @@ def reset_slot(cfg: ModelConfig, cache: Dict, slot: int) -> Dict:
     return cache
 
 
-def set_page_table(cfg: ModelConfig, cache: Dict, table) -> Dict:
+def release_slot(cfg: ModelConfig, cache: Dict, slot: int) -> Dict:
+    """Mark a serving slot's decode plan inactive when its request
+    completes or is preempted: an empty slot must not keep aging onto
+    re-plan beats (forcing the mixed full+incremental branch for the
+    whole batch) or counting re-plans into the traffic accounting.
+    The next claim re-activates it through ``reset_slot``."""
+    from repro.core.decode_plan import release_plan_slot
+
+    def rel(kv_cache: Dict, batch_axis: int) -> Dict:
+        if "plan" not in kv_cache:
+            return kv_cache
+        return {**kv_cache, "plan": release_plan_slot(
+            kv_cache["plan"], slot, batch_axis=batch_axis)}
+
+    cache = dict(cache)
+    if "kv" in cache:
+        cache["kv"] = rel(cache["kv"], 2 if cfg.family == "vlm" else 1)
+    if "shared_kv" in cache:
+        cache["shared_kv"] = rel(cache["shared_kv"], 1)
+    return cache
+
+
+def set_page_table(cfg: ModelConfig, cache: Dict, table,
+                   page_ref=None) -> Dict:
     """Push the host allocator's page table into the device cache.
     ``table``: (B, max_pages) int32 (``PageAllocator.table``).  The
     table is identical across layers (all layers of a slot grow in
-    lockstep), so it broadcasts over the stacked cache's layer axis."""
+    lockstep), so it broadcasts over the stacked cache's layer axis.
+    ``page_ref`` (n_pages,) pushes the per-page refcounts alongside
+    when the prefix cache is on — the paged write path write-protects
+    shared pages (refcount > 1) with them."""
     cache = dict(cache)
     tbl = jnp.asarray(np.asarray(table), jnp.int32)
     for name in ("kv", "shared_kv"):
         kvc = cache.get(name)
         if isinstance(kvc, dict) and "page_table" in kvc:
             n = kvc["page_table"].shape[0]
-            cache[name] = {**kvc,
-                           "page_table": jnp.broadcast_to(
-                               tbl, (n,) + tbl.shape)}
+            kvc = {**kvc, "page_table": jnp.broadcast_to(
+                tbl, (n,) + tbl.shape)}
+            if page_ref is not None and "page_ref" in kvc:
+                ref = jnp.asarray(np.asarray(page_ref), jnp.int32)
+                kvc["page_ref"] = jnp.broadcast_to(ref, (n,) + ref.shape)
+            cache[name] = kvc
     return cache
+
+
+def copy_phys_pages(cache: Dict, pairs) -> Dict:
+    """Copy-on-write, device side: for each ``(src, dst)`` physical
+    page pair the allocator remapped (``PageAllocator.ensure_writable``)
+    copy the K/V page rows — and the per-page summary rows, so a
+    copied page's summary stays coherent — across all layers.  The
+    rows beyond the writer's position are garbage either way
+    (position-masked on every read path), so a whole-page copy is
+    exact."""
+    if not pairs:
+        return cache
+    src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+    dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+    cache = dict(cache)
+    for name in ("kv", "shared_kv"):
+        kvc = cache.get(name)
+        if isinstance(kvc, dict) and "k_pages" in kvc:
+            kvc = dict(kvc)
+            for f in ("k_pages", "v_pages", "page_k_min", "page_k_max"):
+                if f in kvc:
+                    kvc[f] = kvc[f].at[:, dst].set(kvc[f][:, src])
+            cache[name] = kvc
+    return cache
+
+
+def gather_prefix_kv(cache: Dict, table_row, prefix_len: int) -> Dict:
+    """Gather a slot's first ``prefix_len`` cached K/V rows from the
+    page pool into the logical layout — the matched shared prefix a
+    tail prefill attends over.  ``table_row``: the slot's page-table
+    row (host numpy).  Returns {"k", "v"}: (L, 1, prefix_len, KV, hd).
+    This read is inherent to exact attention (the tail's queries need
+    every prefix key); what the prefix cache skips is the *compute*
+    that produced those rows."""
+    kv = cache["kv"]
+    page = kv["k_pages"].shape[2]
+    n_lp = -(-prefix_len // page)
+    phys = jnp.asarray(np.asarray(table_row[:n_lp]), jnp.int32)
+
+    def g(pool):
+        x = pool[:, phys]                        # (L, n_lp, page, KV, hd)
+        x = x.reshape(x.shape[0], n_lp * page, *x.shape[3:])
+        return x[:, None, :prefix_len]
+
+    return {"k": g(kv["k_pages"]), "v": g(kv["v_pages"])}
 
 
 # ---------------------------------------------------------------------------
@@ -194,7 +268,8 @@ def set_page_table(cfg: ModelConfig, cache: Dict, table) -> Dict:
 # ---------------------------------------------------------------------------
 
 def prefill_prompt(params: Params, cfg: ModelConfig, tokens: jax.Array,
-                   max_len: int) -> Tuple[jax.Array, Dict[str, Any]]:
+                   max_len: int, prefix_kv: Optional[Dict] = None
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Full-sequence prompt prefill for serving (dense/moe families).
 
     Runs the decoder over the whole (B, S_p) prompt at once — the
@@ -213,6 +288,17 @@ def prefill_prompt(params: Params, cfg: ModelConfig, tokens: jax.Array,
         decode step 0 runs the *planned* incremental path instead of a
         cold full re-plan over the prefix.
 
+    **Continuation mode** (``prefix_kv`` given — the shared-prefix
+    cache hit path): ``tokens`` is only the UNMATCHED TAIL of the
+    prompt and ``prefix_kv`` = {"k", "v"} (L, B, m, KV, hd) holds the
+    matched prefix's cached rows (RoPE already applied at their
+    positions when they were first written).  The tail runs at
+    positions ``m..m+S_p-1`` attending over prefix + tail — the exact
+    computation a full-prompt prefill performs for those rows, minus
+    every FLOP the matched positions would have cost — and the seeded
+    plan is built over the concatenated keys, so it is bit-identical
+    to the plan a full-prompt prefill would have seeded.
+
     Attention runs the exact dense reference (``attn._attend``, the
     same top-k mask decode uses) rather than ``attention_apply``'s
     kernel routing: prompt lengths need not tile ``sata_block``, and
@@ -227,40 +313,56 @@ def prefill_prompt(params: Params, cfg: ModelConfig, tokens: jax.Array,
             f"token through serve_step")
     from repro.core.decode_plan import plan_from_prefill
     b, sp = tokens.shape
-    # strictly less: the first decode step writes at pos == sp, and a
-    # clamped scatter at max_len would silently corrupt the last prompt
-    # row instead of erroring
-    assert sp < max_len, (sp, max_len)
+    m = 0 if prefix_kv is None else int(prefix_kv["k"].shape[2])
+    # strictly less: the first decode step writes at pos == m + sp, and
+    # a clamped scatter at max_len would silently corrupt the last
+    # prompt row instead of erroring
+    assert m + sp < max_len, (m, sp, max_len)
     dt = _dtype(cfg)
     kvh, hd = cfg.n_kv_heads, cfg.hd
     g = cfg.n_heads // kvh
     seed_plan = attn.sata_decode_on(cfg, max_len)
     blk = attn.decode_block_size(cfg, max_len)
-    positions = jnp.arange(sp)
+    positions = jnp.arange(sp) + m                # tail positions
+    k_positions = jnp.arange(m + sp)              # prefix + tail keys
     x = constrain(embed_apply(params["embed"], tokens).astype(dt), "act")
 
-    def body(h, p):
+    def body(h, inp):
+        p = inp if prefix_kv is None else inp[0]
         hn = apply_norm(p["ln1"], cfg, h)
         q, k, v = attn._project_qkv(p["attn"], cfg, hn)
         q = attn.apply_rope(q, positions, cfg.rope_theta)
         k = attn.apply_rope(k, positions, cfg.rope_theta)
-        out = attn._attend(q, k, v, cfg, positions, positions, causal=True)
+        kc, vc = k.astype(dt), v.astype(dt)
+        if prefix_kv is None:
+            k_all, v_all = k, v
+        else:
+            # cached prefix rows are bitwise the rows the skipped
+            # positions would have produced (same tokens, positions,
+            # params), so attending over the concat is the full
+            # prefill's math for the tail rows
+            k_all = jnp.concatenate([inp[1], kc], axis=1)
+            v_all = jnp.concatenate([inp[2], vc], axis=1)
+        out = attn._attend(q, k_all, v_all, cfg, positions, k_positions,
+                           causal=True)
         y = out.reshape(b, sp, cfg.n_heads * hd) @ p["attn"]["wo"]
         h = _dec_mlp(p, cfg, h + y)
-        kc, vc = k.astype(dt), v.astype(dt)
         if not seed_plan:
             return h, (kc, vc)
         # seed the handoff from the WRITTEN keys (cache dtype), padded
         # to the logical cache length the decode plan is sized for
-        k_pad = jnp.zeros((b, max_len, kvh, hd), dt).at[:, :sp].set(kc)
+        k_pad = jnp.zeros((b, max_len, kvh, hd), dt).at[:, :m + sp].set(
+            k_all.astype(dt))
         qg = q[:, -1].reshape(b, kvh, g, hd)
         seed = plan_from_prefill(
-            k_pad, qg, jnp.full((b,), sp - 1, jnp.int32),
+            k_pad, qg, jnp.full((b,), m + sp - 1, jnp.int32),
             topk_k=cfg.topk_k, k_block=blk,
             plan_blocks=getattr(cfg, "sata_decode_blocks", None))
         return h, (kc, vc, seed)
 
-    x, ys = maybe_scan(cfg, body, x, params["layers"])
+    xs = (params["layers"] if prefix_kv is None else
+          (params["layers"], prefix_kv["k"], prefix_kv["v"]))
+    x, ys = maybe_scan(cfg, body, x, xs)
     x = apply_norm(params["final_ln"], cfg, x[:, -1:])
     logits = constrain(unembed_apply(params["embed"], cfg, x), "logits")
     state = {"k": ys[0], "v": ys[1]}
@@ -270,44 +372,73 @@ def prefill_prompt(params: Params, cfg: ModelConfig, tokens: jax.Array,
 
 
 def install_prefill(cfg: ModelConfig, cache: Dict, slot: int,
-                    state: Dict[str, Any], phys_pages=None) -> Dict:
+                    state: Dict[str, Any], phys_pages=None, *,
+                    prefix_len: int = 0) -> Dict:
     """Place one prefilled request (``prefill_prompt`` output, B=1)
     into serving slot ``slot``: the prompt K/V rows into the slot's
-    contiguous region — or, paged, into the driver-allocated
-    ``phys_pages`` (ascending logical order; the tail page's unwritten
-    rows stay garbage, masked by position on every read) — and the
-    seeded plan rows into the slot's plan state.  The plan's global
-    ``step`` is bumped to at least the seed's (off the re-plan beat):
-    on a fresh cache this is what makes decode step 0 planned rather
-    than a cold full re-plan."""
+    contiguous region — or, paged, row-scattered through the
+    driver-provided ``phys_pages`` (the slot's mapped pages in
+    ascending logical order; rows past the written extent stay
+    garbage, masked by position on every read) — and the seeded plan
+    rows into the slot's plan state with its ``step`` off the re-plan
+    beat, which is what makes decode step 0 planned rather than a cold
+    full re-plan.
+
+    ``prefix_len > 0`` is the shared-prefix install (paged only):
+    ``state`` came from a continuation prefill over the unmatched
+    tail, positions ``prefix_len..prefix_len+S_p-1``, and the matched
+    pages are already mapped in ``phys_pages`` — only the tail rows
+    are written (the matched pages' contents are exactly the rows a
+    full prefill would have rewritten, and shared pages are immutable
+    anyway).  When the cache carries the per-physical-page summary
+    arrays (``page_k_min``/``page_k_max``), the plan summaries of
+    fully-matched blocks are seeded FROM the summary cache — min/max
+    associativity makes that bit-identical to the seed's recompute,
+    and a test pins it — and every full prompt page's summary is
+    (re)registered for future hits."""
     ks, vs = state["k"], state["v"]          # (L, 1, S_p, KV, hd)
     sp = ks.shape[2]
+    total = prefix_len + sp
     kv = dict(cache["kv"])
+    seed = dict(state["plan"]) if "plan" in state else None
     if "k_pages" in kv:
         assert phys_pages is not None, "paged install needs the pages"
         page = kv["k_pages"].shape[2]
-        phys = jnp.asarray(np.asarray(phys_pages), jnp.int32)
-        n_p = phys.shape[0]
-        assert n_p * page >= sp, (n_p, page, sp)
-        pad = n_p * page - sp
-
-        def place(pool, rows):
-            rows = jnp.pad(rows[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
-            rows = rows.reshape(rows.shape[0], n_p, page, *rows.shape[2:])
-            return pool.at[:, phys].set(rows.astype(pool.dtype))
-
-        kv["k_pages"] = place(kv["k_pages"], ks)
-        kv["v_pages"] = place(kv["v_pages"], vs)
+        row = np.asarray(phys_pages).reshape(-1)
+        assert row.shape[0] * page >= total, (row.shape[0], page, total)
+        tok = np.arange(prefix_len, total)
+        phys_w = jnp.asarray(row[tok // page], jnp.int32)     # (S_p,)
+        off_w = jnp.asarray(tok % page, jnp.int32)
+        kv["k_pages"] = kv["k_pages"].at[:, phys_w, off_w].set(
+            ks[:, 0].astype(kv["k_pages"].dtype))
+        kv["v_pages"] = kv["v_pages"].at[:, phys_w, off_w].set(
+            vs[:, 0].astype(kv["v_pages"].dtype))
+        if seed is not None and "page_k_min" in kv:
+            n_shared = prefix_len // page        # fully-matched blocks
+            n_full = total // page               # full prompt pages
+            if n_shared:
+                cached_min = kv["page_k_min"][:, row[:n_shared]]
+                cached_max = kv["page_k_max"][:, row[:n_shared]]
+                seed["k_min"] = seed["k_min"].at[:, 0, :, :n_shared].set(
+                    cached_min.transpose(0, 2, 1, 3))
+                seed["k_max"] = seed["k_max"].at[:, 0, :, :n_shared].set(
+                    cached_max.transpose(0, 2, 1, 3))
+            if n_full:
+                kv["page_k_min"] = kv["page_k_min"].at[:, row[:n_full]].set(
+                    seed["k_min"][:, 0, :, :n_full].transpose(0, 2, 1, 3))
+                kv["page_k_max"] = kv["page_k_max"].at[:, row[:n_full]].set(
+                    seed["k_max"][:, 0, :, :n_full].transpose(0, 2, 1, 3))
     else:
+        assert prefix_len == 0, "shared-prefix install is paged-only"
         kv["k"] = kv["k"].at[:, slot, :sp].set(
             ks[:, 0].astype(kv["k"].dtype))
         kv["v"] = kv["v"].at[:, slot, :sp].set(
             vs[:, 0].astype(kv["v"].dtype))
-    if "plan" in state and "plan" in kv:
-        seed, plan = state["plan"], dict(kv["plan"])
-        for name in ("k_min", "k_max", "kv_indices", "kv_counts"):
+    if seed is not None and "plan" in kv:
+        plan = dict(kv["plan"])
+        for name in ("k_min", "k_max", "kv_indices", "kv_counts",
+                     "step", "churn"):
             plan[name] = plan[name].at[:, slot].set(seed[name][:, 0])
-        plan["step"] = jnp.maximum(plan["step"], seed["step"])
         kv["plan"] = plan
     return {**cache, "kv": kv}
 

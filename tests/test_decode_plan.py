@@ -333,7 +333,7 @@ def test_sata_decode_incremental_route_runs():
     assert bool(jnp.isfinite(lg).all())
     plan = cache["kv"]["plan"]
     assert int(jnp.max(plan["kv_counts"])) <= 2
-    assert int(plan["step"][0]) == 7
+    assert int(plan["step"][0, 0]) == 7          # (L, B) per-slot steps
 
 
 def test_sata_decode_routing():

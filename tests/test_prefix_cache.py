@@ -1,0 +1,507 @@
+"""Shared-prefix page cache: trie match/register/evict semantics,
+refcounted copy-on-write, the paged write path's shared-page
+write-protection, summary-cache bit-identity on the install path, and
+the two system properties the cache must uphold over arbitrary
+interleaved claim/prefill/append/free sequences with overlapping
+prompts — (a) a shared physical page is never written while its
+refcount exceeds one, and (b) every request's decoded output is
+bitwise equal to a run with the prefix cache disabled."""
+import dataclasses
+import sys
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+from repro.configs.archs import SMOKE
+from repro.core.decode_plan import reset_plan_slot
+from repro.core.paging import (OVERFLOW_PAGE, PageAllocator, PrefixCache,
+                               logical_kv_view)
+from repro.models import attention as attn
+from repro.models import decode as dec
+from repro.models import model as mdl
+
+
+def _cfg(**kw):
+    base = dict(topk_impl="bisect", sata_decode="on", sata_decode_block=8,
+                sata_decode_replan=1, kv_cache_layout="paged",
+                kv_prefix_cache=True)
+    base.update(kw)
+    return dataclasses.replace(SMOKE["qwen3-4b"], **base)
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Trie: match / register / evict
+# ---------------------------------------------------------------------------
+
+def _pool(n_pages=16, slots=4, max_pages=8, page=4):
+    a = PageAllocator(n_pages, slots, max_pages, page)
+    return a, PrefixCache(a)
+
+
+def test_trie_register_then_match_full_and_partial():
+    a, pc = _pool(page=4)
+    toks = np.array([1, 2, 3, 4, 5, 6, 7, 8, 9, 10])   # 2 full + 2 partial
+    assert a.ensure(0, 9)
+    row = a.table[0].copy()
+    assert pc.register(toks, row) == 3                 # 2 full + 1 partial
+    assert a.ref[row[0]] == 2 and a.ref[row[2]] == 2   # slot + trie
+    # identical prompt (last token withheld, as the driver matches)
+    m, phys, part = pc.match(toks[:-1])
+    assert m == 9 and phys == [row[0], row[1], row[2]] and part == 1
+    # longer prompt sharing both full pages, diverging in page 2
+    m2, phys2, _ = pc.match(np.array([1, 2, 3, 4, 5, 6, 7, 8, 99, 100]))
+    assert m2 == 8 and phys2 == [row[0], row[1]]
+    # shares only half of page 0: longest-common-prefix partial match
+    m3, phys3, part3 = pc.match(np.array([1, 2, 42, 43]))
+    assert m3 == 2 and phys3 == [row[0]] and part3 == 2
+    # nothing shared
+    m4, phys4, _ = pc.match(np.array([9, 9, 9]))
+    assert m4 == 0 and phys4 == []
+
+
+def test_trie_chain_digest_is_depth_dependent():
+    """The same page content at a different prefix depth must not
+    match: page keys chain the parent digest."""
+    a, pc = _pool(page=2)
+    assert a.ensure(0, 5)
+    pc.register(np.array([7, 7, 7, 7, 7, 7]), a.table[0].copy())
+    # [7, 7] as the FIRST page matches; as a continuation of [5, 5] not
+    m, _, _ = pc.match(np.array([5, 5, 7, 7]))
+    assert m == 0
+
+
+def test_trie_free_slot_keeps_cached_pages():
+    a, pc = _pool()
+    toks = np.arange(8)
+    assert a.ensure(0, 7)
+    row = a.table[0].copy()
+    pc.register(toks, row)
+    in_use = a.pages_in_use
+    a.free_slot(0)                        # request completes
+    assert a.pages_in_use == in_use       # trie retention survives
+    assert all(a.ref[p] == 1 for p in row[:2])
+    m, phys, _ = pc.match(toks)           # still matchable
+    assert m == 8 and phys == [row[0], row[1]]
+
+
+def test_trie_evict_frees_lru_leaves_only():
+    a, pc = _pool(n_pages=16, page=4)
+    assert a.ensure(0, 7)
+    row_a = a.table[0].copy()
+    pc.register(np.array([1, 2, 3, 4, 5, 6, 7, 8]), row_a)   # chain A
+    assert a.ensure(1, 7)
+    row_b = a.table[1].copy()
+    pc.register(np.array([1, 2, 3, 4, 9, 9, 9, 9]), row_b)   # shares page 0
+    a.free_slot(0)
+    a.free_slot(1)
+    # everything trie-retained now; drain the pool and evict
+    target = len(a.free) + 3
+    freed = pc.evict(target)
+    assert freed == 3                     # both leaves + one parent round
+    # root page (the shared [1,2,3,4] node) evicts only after children
+    m, _, _ = pc.match(np.array([1, 2, 3, 4]))
+    assert m == 0 or m == 4               # depends on LRU order reached
+
+
+def test_trie_evict_skips_pages_slots_still_map():
+    a, pc = _pool()
+    toks = np.arange(8)
+    assert a.ensure(0, 7)
+    pc.register(toks, a.table[0].copy())  # slot 0 still running: ref 2
+    assert pc.evict(len(a.free) + 1) == 0
+    assert pc.cached_pages == 2           # nothing destroyed either
+
+
+# ---------------------------------------------------------------------------
+# Allocator: refcounts + copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_map_shared_and_cow_lifecycle():
+    a, pc = _pool(n_pages=8, page=4)
+    assert a.ensure(0, 6)                 # owner writes 2 pages
+    row = a.table[0].copy()
+    pc.register(np.arange(7), row)        # page 1 partial (3 rows)
+    # a second slot maps the shared prefix
+    a.map_shared(1, [int(row[0]), int(row[1])])
+    assert a.ref[row[0]] == 3 and a.ref[row[1]] == 3
+    assert a.shared_pages == 2
+    # slot 1 appends at pos 3 — inside shared page 0 → CoW
+    ok, cp = a.ensure_writable(1, 3)
+    assert ok and cp is not None
+    src, dst = cp
+    assert src == row[0] and dst != row[0]
+    assert a.table[1, 0] == dst and a.ref[dst] == 1 and a.ref[src] == 2
+    # exclusive page: no copy
+    ok, cp = a.ensure_writable(1, 3)
+    assert ok and cp is None
+    # unmapped logical page: ensure() maps it, no CoW involved
+    ok, cp = a.ensure_writable(1, 8)
+    assert ok and cp is None
+
+
+def test_cow_stalls_when_pool_dry():
+    a, pc = _pool(n_pages=4, page=4)      # 3 usable pages
+    assert a.ensure(0, 7)                 # 2 pages
+    pc.register(np.arange(8), a.table[0].copy())
+    a.map_shared(1, [int(a.table[0, 0])])
+    assert a.ensure(1, 7)                 # last free page
+    ok, cp = a.ensure_writable(1, 0)      # CoW wants a page: dry
+    assert not ok and cp is None
+    a.free_slot(0)                        # owner completes …
+    ok, cp = a.ensure_writable(1, 0)      # … but the trie still holds
+    assert not ok                         # both pages: still dry
+    assert pc.evict(1) == 1               # reclaim the unmapped leaf
+    ok, cp = a.ensure_writable(1, 0)      # now it can copy
+    assert ok and cp is not None
+
+
+def test_free_slot_never_frees_shared_pages():
+    """Preemption calls free_slot: pages another slot or the trie
+    still references must survive with their contents reachable."""
+    a, pc = _pool(n_pages=8, page=4)
+    assert a.ensure(0, 3)
+    row = a.table[0].copy()
+    pc.register(np.arange(4), row)
+    a.map_shared(1, [int(row[0])])
+    a.free_slot(1)                        # preempt the sharer
+    assert a.ref[row[0]] == 2             # owner + trie intact
+    a.free_slot(0)                        # preempt the owner too
+    assert a.ref[row[0]] == 1             # trie retention remains
+    assert int(row[0]) not in a.free
+
+
+# ---------------------------------------------------------------------------
+# Device side: CoW copy + shared-page write-protection
+# ---------------------------------------------------------------------------
+
+def test_copy_phys_pages_copies_kv_and_summaries():
+    cfg = _cfg()
+    cache = dec.init_cache(cfg, 2, 32)
+    kv = dict(cache["kv"])
+    kv["k_pages"] = kv["k_pages"].at[:, 3].set(1.25)
+    kv["v_pages"] = kv["v_pages"].at[:, 3].set(-2.5)
+    kv["page_k_min"] = kv["page_k_min"].at[:, 3].set(0.5)
+    cache = {**cache, "kv": kv}
+    out = dec.copy_phys_pages(cache, [(3, 5)])["kv"]
+    np.testing.assert_array_equal(np.asarray(out["k_pages"][:, 5]),
+                                  np.asarray(out["k_pages"][:, 3]))
+    np.testing.assert_array_equal(np.asarray(out["v_pages"][:, 5]),
+                                  np.asarray(out["v_pages"][:, 3]))
+    np.testing.assert_array_equal(np.asarray(out["page_k_min"][:, 5]),
+                                  np.asarray(out["page_k_min"][:, 3]))
+
+
+def test_paged_write_protect_reroutes_shared_page_writes():
+    """Defense in depth: even if the driver forgot to CoW, a decode
+    append aimed at a shared page (refcount > 1) must land in the
+    overflow page, never mutate the shared contents."""
+    cfg = _cfg(sata_decode="off")         # dense paged decode suffices
+    b, max_len = 2, 32
+    params = attn.attention_init(jax.random.PRNGKey(0), cfg)
+    cache = attn.init_kv_cache(cfg, b, max_len, jnp.float32)
+    page = int(cache["k_pages"].shape[1])
+    tbl = np.full((b, max_len // page), OVERFLOW_PAGE, np.int32)
+    tbl[0, 0] = 2                         # slot 0 writes into page 2
+    ref = np.zeros(cache["k_pages"].shape[0], np.int32)
+    ref[2] = 2                            # ... which is SHARED
+    cache["page_table"] = jnp.asarray(tbl)
+    cache["page_ref"] = jnp.asarray(ref)
+    before = np.asarray(cache["k_pages"][2])
+    x = _rand(jax.random.PRNGKey(1), (b, 1, cfg.d_model))
+    _, cache2 = attn.attention_decode(params, cfg, x, cache,
+                                      jnp.zeros((b,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(cache2["k_pages"][2]), before)
+    # the same write with refcount 1 does mutate the page
+    cache["page_ref"] = jnp.asarray(np.where(ref == 2, 1, ref))
+    _, cache3 = attn.attention_decode(params, cfg, x, cache,
+                                      jnp.zeros((b,), jnp.int32))
+    assert np.abs(np.asarray(cache3["k_pages"][2]) - before).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# Install path: summary-cache bit-identity
+# ---------------------------------------------------------------------------
+
+def test_hit_install_is_bitwise_identical_to_miss_install():
+    """The handoff under sharing: a cache-hit install (tail-only
+    prefill + matched pages + per-physical-page summary cache) must
+    leave the slot's MATCHED region — logical K/V rows and the plan
+    summaries of fully-matched blocks — bitwise identical to the miss
+    install (the pages literally are the same bytes, and min/max
+    associativity makes the summary-cache seed exact), the plan's
+    selected blocks identical, and the tail's fresh rows equal to the
+    full prefill's at fp accumulation tolerance (different GEMM
+    shapes reduce in different orders; selection never sits within
+    that noise of a threshold)."""
+    cfg = _cfg(sata_decode_replan=4)
+    max_len, b = 32, 2
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+    toks = np.random.default_rng(3).integers(0, cfg.vocab_size, (1, 11))
+    cache = dec.init_cache(cfg, b, max_len)
+    page = int(cache["kv"]["k_pages"].shape[2])
+    alloc = PageAllocator(int(cache["kv"]["k_pages"].shape[1]), b,
+                          max_len // page, page)
+    pc = PrefixCache(alloc)
+
+    # request A: miss → full prefill into slot 0, register
+    assert alloc.ensure(0, 10)
+    lgA, stateA = dec.prefill_prompt(params, cfg, jnp.asarray(toks), max_len)
+    cache = dec.set_page_table(cfg, cache, alloc.table, alloc.ref)
+    cache = dec.install_prefill(cfg, cache, 0, stateA,
+                                alloc.table[0, :alloc.pages_for(11)])
+    pc.register(toks[0], alloc.table[0])
+
+    # request B: identical prompt → hit, tail prefill into slot 1
+    m, phys, _ = pc.match(toks[0, :-1])
+    assert m == 10
+    alloc.map_shared(1, phys)
+    ok, cp = alloc.ensure_writable(1, m)
+    assert ok
+    if cp is not None:
+        cache = dec.copy_phys_pages(cache, [cp])
+    assert alloc.ensure(1, 10)
+    cache = dec.set_page_table(cfg, cache, alloc.table, alloc.ref)
+    prefix = dec.gather_prefix_kv(cache, alloc.table[1], m)
+    lgB, stateB = dec.prefill_prompt(params, cfg,
+                                     jnp.asarray(toks[:, m:]), max_len,
+                                     prefix_kv=prefix)
+    cache = dec.install_prefill(cfg, cache, 1, stateB,
+                                alloc.table[1, :alloc.pages_for(11)],
+                                prefix_len=m)
+
+    # same greedy continuation; logits agree to accumulation tolerance
+    assert int(jnp.argmax(lgA)) == int(jnp.argmax(lgB))
+    np.testing.assert_allclose(np.asarray(lgA), np.asarray(lgB),
+                               rtol=1e-4, atol=1e-4)
+    kv = cache["kv"]
+    view_k = logical_kv_view(kv["k_pages"][0], kv["page_table"][0])
+    # matched region (shared page + its CoW copy): the same bytes
+    np.testing.assert_array_equal(np.asarray(view_k[0, :m]),
+                                  np.asarray(view_k[1, :m]))
+    # the tail row is freshly computed in a different-shape program
+    np.testing.assert_allclose(np.asarray(view_k[0, m:11]),
+                               np.asarray(view_k[1, m:11]),
+                               rtol=1e-4, atol=1e-5)
+    plan = kv["plan"]
+    n_shared = m // page                   # fully-matched blocks
+    for name in ("k_min", "k_max"):        # summary-cache seed: bitwise
+        np.testing.assert_array_equal(
+            np.asarray(plan[name][:, 0, :, :n_shared]),
+            np.asarray(plan[name][:, 1, :, :n_shared]), err_msg=name)
+        np.testing.assert_allclose(       # tail blocks: fresh compute
+            np.asarray(plan[name][:, 0]), np.asarray(plan[name][:, 1]),
+            rtol=1e-4, atol=1e-5, err_msg=name)
+    for name in ("kv_indices", "kv_counts", "step"):
+        np.testing.assert_array_equal(np.asarray(plan[name][:, 0]),
+                                      np.asarray(plan[name][:, 1]),
+                                      err_msg=name)
+    # and the summary cache entries ARE the per-page min/max recompute
+    full_pages = 11 // page
+    for lp in range(full_pages):
+        ph = int(alloc.table[0, lp])
+        ref_min = jnp.min(kv["k_pages"][:, ph].astype(jnp.float32), axis=1)
+        np.testing.assert_array_equal(np.asarray(kv["page_k_min"][:, ph]),
+                                      np.asarray(ref_min))
+
+
+# ---------------------------------------------------------------------------
+# Property (a): shared pages are never written while refcount > 1
+# ---------------------------------------------------------------------------
+
+def _drive_shared(seed, n_ops, replan):
+    """Interleave claim / lockstep-append / register / free at the
+    attention-layer level against the REAL paged cache (one layer, the
+    exact decode write path serving scans), with overlapping prompts.
+    After every device step, assert no shared page's contents moved —
+    including steps where a slot is CoW-STALLED (pool dry) and its
+    write must re-route to the overflow page via the in-graph
+    write-protection, exactly like the serving loop's stall re-feed."""
+    cfg = _cfg(sata_decode_block=4, sata_decode_replan=replan)
+    b, max_len, page = 2, 16, 4
+    params = attn.attention_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    vocab = 50
+    # two prompt families sharing 6 of 7 tokens → full page-0 sharing
+    # plus a partial-page overlap in page 1
+    base = rng.integers(0, vocab, 7)
+    prompts = [base.copy(), base.copy()]
+    prompts[1][-1] = (prompts[1][-1] + 1) % vocab
+
+    kvc = dict(attn.init_kv_cache(cfg, b, max_len, jnp.float32))
+    alloc = PageAllocator(int(kvc["k_pages"].shape[0]), b,
+                          max_len // page, page)
+    pc = PrefixCache(alloc)
+    pos = np.zeros(b, np.int32)
+    live = [False, False]
+    hist = [[], []]             # tokens whose rows occupy positions < pos
+    feed = [[], []]             # tokens still to append
+    r = np.random.default_rng(seed + 1)
+
+    def _snapshot():
+        kp = np.asarray(kvc["k_pages"])
+        return {int(p): kp[p].copy() for p in np.nonzero(alloc.ref > 1)[0]}
+
+    for _ in range(n_ops):
+        op = int(r.integers(0, 4))
+        slot = int(r.integers(b))
+        if op == 0 and not live[slot]:                       # claim
+            toks = prompts[int(r.integers(2))]
+            m, phys, _ = pc.match(toks[:-1])
+            if m:
+                alloc.map_shared(slot, phys)
+            if "plan" in kvc:
+                kvc["plan"] = reset_plan_slot(kvc["plan"], slot)
+            live[slot] = True
+            pos[slot] = m
+            hist[slot] = list(toks[:m])
+            feed[slot] = list(toks[m:]) + [int(x) for x in
+                                           r.integers(0, vocab, 4)]
+        elif op == 1 and any(live):          # one lockstep decode step
+            advance = []
+            copies = []
+            for i in range(b):
+                if not live[i]:
+                    continue
+                ok, cp = alloc.ensure_writable(i, int(pos[i]))
+                if ok and cp is not None:
+                    copies.append(cp)
+                if ok and alloc.ensure(i, int(pos[i])) \
+                        and pos[i] < max_len - 1:
+                    advance.append(i)        # else: stalled, token re-fed
+            for src, dst in copies:          # driver-side CoW (1 layer)
+                for f in ("k_pages", "v_pages"):
+                    kvc[f] = kvc[f].at[dst].set(kvc[f][src])
+            kvc["page_table"] = jnp.asarray(alloc.table)
+            if "page_ref" in kvc:
+                kvc["page_ref"] = jnp.asarray(alloc.ref, jnp.int32)
+            before = _snapshot()
+            x = np.zeros((b, 1, cfg.d_model), np.float32)
+            for i in range(b):
+                if live[i]:                  # stalled slots write too —
+                    tok = feed[i][0] if feed[i] else 1    # like serving
+                    x[i, 0] = np.asarray(_rand(jax.random.PRNGKey(tok),
+                                               (cfg.d_model,)))
+            _, kvc = attn.attention_decode(params, cfg, jnp.asarray(x),
+                                           kvc, jnp.asarray(pos))
+            kvc = dict(kvc)
+            after = np.asarray(kvc["k_pages"])
+            for p, old in before.items():    # property (a), device truth
+                np.testing.assert_array_equal(after[p], old)
+            for i in advance:
+                hist[i].append(feed[i].pop(0) if feed[i] else 1)
+                pos[i] += 1
+        elif op == 2 and live[slot] and pos[slot] > 0:       # register
+            pc.register(np.asarray(hist[slot][:int(pos[slot])]),
+                        alloc.table[slot])
+        elif op == 3 and live[slot]:                         # free
+            alloc.free_slot(slot)
+            live[slot] = False
+    # closing bookkeeping invariant: refcounts == table refs + trie refs
+    refs = np.zeros(alloc.n_pages, np.int64)
+    for i in range(b):
+        for lp in range(int(alloc.n_mapped[i])):
+            refs[alloc.table[i, lp]] += 1
+    stack = [pc.root]
+    while stack:
+        n = stack.pop()
+        for c in list(n.children.values()) + n.partials:
+            refs[c.phys] += 1
+            stack.append(c)
+    np.testing.assert_array_equal(refs[1:], np.asarray(alloc.ref[1:]))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(4, 14),
+           st.sampled_from([1, 3, "auto"]))
+    def test_property_shared_pages_immutable(seed, n_ops, replan):
+        _drive_shared(seed, n_ops, replan)
+else:                                                # pragma: no cover
+    def test_property_shared_pages_immutable():
+        _drive_shared(11, 12, 1)
+
+
+# ---------------------------------------------------------------------------
+# Property (b): outputs bitwise equal to the cache-disabled run
+# ---------------------------------------------------------------------------
+
+def _serve_pair(seed, n_requests, slots, prompt_len, shared_len, gen_len,
+                pool_pages, replan):
+    from repro.launch.serve import serve
+    base = _cfg(kv_prefix_cache=False, sata_decode_replan=replan,
+                kv_pool_pages=pool_pages)
+    kw = dict(smoke=True, n_requests=n_requests, batch_slots=slots,
+              gen_len=gen_len, max_len=64, prompt_len=prompt_len,
+              shared_prefix_len=shared_len, seed=seed)
+    off = serve("qwen3-4b", cfg=base, **kw)
+    on = serve("qwen3-4b",
+               cfg=dataclasses.replace(base, kv_prefix_cache=True), **kw)
+    return off, on
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(9, 20),
+           st.integers(2, 17), st.sampled_from([1, 3, "auto"]))
+    def test_property_outputs_bitwise_equal_cache_off(seed, prompt_len,
+                                                      shared_len, replan):
+        """System-level: arbitrary prompt/shared-prefix geometry and
+        re-plan mode, claim/prefill/append/free interleaved by the
+        serving loop itself — the prefix cache must be output-invisible
+        bit for bit."""
+        off, on = _serve_pair(seed, 4, 2, prompt_len,
+                              min(shared_len, prompt_len - 1), 5, 0,
+                              replan)
+        assert on["outputs"] == off["outputs"]
+        assert on["prefix_cache"]["hits"] > 0
+else:                                                # pragma: no cover
+    def test_property_outputs_bitwise_equal_cache_off():
+        off, on = _serve_pair(0, 4, 2, 17, 12, 5, 0, 1)
+        assert on["outputs"] == off["outputs"]
+
+
+def test_serve_shared_prefix_reports_savings():
+    off, on = _serve_pair(0, 6, 3, 20, 16, 6, 0, 1)
+    assert on["outputs"] == off["outputs"]
+    p = on["prefix_cache"]
+    assert p["hit_rate"] > 0.5
+    assert p["prefill_tokens_saved"] >= 5 * 16
+    assert p["cow_copies"] > 0
+    assert p["shared_pages_peak"] > 0
+    occ = on["page_occupancy"]
+    assert occ["shared_pages_peak"] > 0
+
+
+def test_serve_prefix_cache_under_pool_pressure():
+    """A pool too small to retain everything forces evictions and
+    backpressure — outputs must still be bitwise equal and complete."""
+    off, on = _serve_pair(1, 5, 2, 16, 8, 8, 7, 1)
+    assert on["outputs"] == off["outputs"]
+    assert all(len(v) == 8 for v in on["outputs"].values())
+    occ = on["page_occupancy"]
+    assert (occ["stalled_steps"] + occ["deferred_claims"]
+            + occ["preemptions"] + on["prefix_cache"]["evictions"]) > 0
+
+
+def test_serve_preemption_preserves_shared_pages():
+    """Preempting a sharer must not free trie-retained pages: later
+    requests still hit, and outputs stay equal."""
+    off, on = _serve_pair(2, 4, 3, 16, 12, 12, 9, 1)
+    assert on["outputs"] == off["outputs"]
+    assert on["prefix_cache"]["hits"] > 0
+
+
+def test_prefix_cache_requires_paged_layout():
+    with pytest.raises(ValueError, match="paged"):
+        attn.prefix_cache_on(dataclasses.replace(
+            _cfg(), kv_cache_layout="contiguous"))
