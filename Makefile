@@ -24,9 +24,10 @@ bench-select:
 	python -m benchmarks.run select --json-dir results/bench
 
 # BENCH_decode.json: dense decode vs the SATA decode plan + gather
-# kernel (tok/s, fetch bytes, replan-interval traffic tradeoff,
-# paged-vs-contiguous parity + HBM, prefill handoff) — the serving
-# row of the perf trajectory.
+# kernel (tok/s, fetch bytes, replan-interval traffic tradeoff —
+# including the summary-backend × re-plan-mode rows pricing int8
+# summaries and the sketch re-plan — paged-vs-contiguous parity + HBM,
+# prefill handoff) — the serving row of the perf trajectory.
 bench-decode:
 	python -m benchmarks.run decode --json-dir results/bench
 
@@ -39,6 +40,7 @@ bench-decode:
 # cache-disabled run.
 serve-smoke:
 	python examples/serve_topk.py --paged
+	python examples/serve_topk.py --summary int8 --replan-mode sketch
 	python examples/serve_topk.py --shared-prefix
 
 roofline-kernel:

@@ -267,7 +267,11 @@ def _bench_replan_traffic() -> List[Row]:
     """Amortized per-step selection+kernel bytes across re-plan
     intervals: interval 1 is exact but streams all cached K every step;
     longer intervals amortize the full re-plan over cheap incremental
-    steps (summaries + planned keys)."""
+    steps (summaries + planned keys).  The backend × mode rows price
+    the summary-traffic knobs: int8 summaries shrink every ranking
+    read ~4x, and the sketch re-plan replaces the all-cached-K stream
+    with summaries + C·F candidate blocks — selection traffic
+    sub-linear in cached K even at interval 1."""
     import numpy as np
     from repro.kernels.ops import decode_fetch_stats
 
@@ -286,6 +290,32 @@ def _bench_replan_traffic() -> List[Row]:
                      f"{st['step_bytes_dense_route']} B dense ("
                      f"{st['step_bytes_dense_route'] / st['step_bytes_plan_route']:.2f}x, "
                      f"plan side {st['plan_fetch_bytes_step']} B, {tag})"))
+    # summary backend × re-plan mode (fp32+exact above is the baseline)
+    plan_side = {}
+    for summary, rmode in (("int8", "exact"), ("fp32", "sketch"),
+                           ("int8", "sketch")):
+        for interval in (1, 4):
+            st = decode_fetch_stats(cnt, pos, k_block=blk, d=d,
+                                    replan=1.0 / interval, nkb=nkb,
+                                    summary=summary, replan_mode=rmode,
+                                    sketch_factor=4, plan_blocks=sel)
+            plan_side[(summary, rmode, interval)] = \
+                st["plan_fetch_bytes_step"]
+            rows.append((
+                f"decode/replan_traffic/S{s}_iv{interval}_{summary}_{rmode}",
+                0.0,
+                f"step {st['step_bytes_plan_route']} B plan-route vs "
+                f"{st['step_bytes_dense_route']} B dense ("
+                f"{st['step_bytes_dense_route'] / st['step_bytes_plan_route']:.2f}x, "
+                f"plan side {st['plan_fetch_bytes_step']} B, "
+                f"{summary}+{rmode})"))
+    fp_exact = decode_fetch_stats(cnt, pos, k_block=blk, d=d, replan=1.0,
+                                  nkb=nkb)["plan_fetch_bytes_step"]
+    i8_sk = plan_side[("int8", "sketch", 1)]
+    rows.append((f"decode/replan_traffic/S{s}_reduction", 0.0,
+                 f"int8+sketch plan-side {i8_sk} B vs {fp_exact} B "
+                 f"fp32-exact at iv1 "
+                 f"({fp_exact / i8_sk:.2f}x selection-traffic reduction)"))
     return rows
 
 

@@ -56,6 +56,7 @@ EXACT_PATTERNS = [
     ("used_bytes", r"used (\d+) B"),
     ("step_plan_bytes", r"step (\d+) B plan-route"),
     ("step_dense_bytes", r"vs (\d+) B dense"),
+    ("plan_side_bytes", r"plan side (\d+) B"),
     ("full_replans", r"(\d+) full re-plans"),
     ("tokens_saved", r"saved (\d+)/"),
     ("hits", r"\((\d+)/\d+ hits\)"),

@@ -6,7 +6,8 @@ plan banks against dense decode over the whole prefix, and (with
 reservation, identical outputs, pool exhaustion absorbed as
 backpressure instead of a shape error.
 
-Run:  PYTHONPATH=src python examples/serve_topk.py [--paged]
+Run:  PYTHONPATH=src python examples/serve_topk.py
+          [--paged] [--summary int8] [--replan-mode sketch]
 """
 import argparse
 import dataclasses
@@ -24,6 +25,21 @@ def main():
                     help="shared-prefix scenario: requests share a "
                          "prompt prefix and the prefix cache maps its "
                          "pages instead of re-prefilling them")
+    ap.add_argument("--summary", choices=("fp32", "int8"), default="fp32",
+                    help="block-summary backend: int8 stores "
+                         "conservatively-quantized bounds (~4x less "
+                         "summary traffic; summaries only RANK blocks "
+                         "— the exact token threshold still runs over "
+                         "the planned blocks' fp32 keys)")
+    ap.add_argument("--replan-mode", choices=("exact", "sketch"),
+                    default="exact",
+                    help="periodic re-plan: 'exact' streams all cached "
+                         "K; 'sketch' ranks super-block sketches first "
+                         "and reads only surviving candidate blocks "
+                         "(sub-linear in cached K; approximate — safe "
+                         "when the plan tolerates a missed block until "
+                         "the next re-plan, NOT for bitwise-exact "
+                         "serving)")
     args = ap.parse_args()
     cfg = dataclasses.replace(
         SMOKE["qwen3-4b"],
@@ -31,6 +47,8 @@ def main():
         sata_decode="on",           # route decode through the plan + kernel
         sata_decode_block=8,        # k-block edge over the 64-token cache
         sata_decode_replan=1,       # full re-plan every step (exact top-k)
+        sata_summary=args.summary,
+        sata_replan_mode=args.replan_mode,
     )
     if args.shared_prefix:
         return shared_prefix_demo(cfg)
@@ -57,7 +75,8 @@ def main():
     print(f"[serve_topk] attention-kernel KV fetch: "
           f"{f['kv_fetch_bytes_plan']} B vs {f['kv_fetch_bytes_dense']} B "
           f"dense ({f['fetch_reduction']:.2f}x reduction; "
-          f"{f['true_reduction']:.2f}x counting plan traffic)")
+          f"{f['true_reduction']:.2f}x counting plan traffic, "
+          f"summary={f['summary_backend']}, replan={f['replan_mode']})")
     if args.paged:
         o = out["page_occupancy"]
         print(f"[serve_topk] paged pool: peak {o['pages_in_use_peak']}/"

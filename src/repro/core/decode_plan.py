@@ -6,13 +6,29 @@ per generated token — serving cost must scale with the *selected*
 blocks, not the prefix.  This module maintains, per batch slot and KV
 head, a persistent plan over the KV cache:
 
-  k_min / k_max  (B, KV, nkb, D) fp32 — elementwise key bounds per
-                 k-block, updated **incrementally** as the cache grows
-                 (a block's bounds only ever absorb the tokens appended
-                 to it, and completed blocks never change).  min/max is
-                 associative, so the incrementally-maintained summaries
-                 are *bit-identical* to recomputing them from the cache
-                 — the property ``summaries_from_cache`` pins.
+  k_min / k_max  (B, KV, nkb, D) — elementwise key bounds per k-block,
+                 updated **incrementally** as the cache grows (a block's
+                 bounds only ever absorb the tokens appended to it, and
+                 completed blocks never change).  Two storage backends
+                 (``summary=`` on init):
+
+                 * ``"fp32"`` (default): exact bounds.  min/max is
+                   associative, so the incrementally-maintained
+                   summaries are *bit-identical* to recomputing them
+                   from the cache — the property
+                   ``summaries_from_cache`` pins.
+                 * ``"int8"``: quantized codes plus per-block fp32
+                   ``k_scale`` / ``k_zero`` (B, KV, nkb) — ~4× less
+                   summary read traffic per ranking pass.  Rounding is
+                   **conservative**: the dequantized bounds always
+                   CONTAIN the exact fp32 bounds (absorb = dequantize ∪
+                   new key, requantize outward — containment telescopes
+                   by induction), so the Quest upper bound ranked from
+                   them never under-estimates a block.  Quantized
+                   summaries only *rank*; the exact token threshold
+                   still runs over the planned blocks' full-precision
+                   keys, and block selection stays a superset-safe
+                   heuristic exactly as in the fp32 incremental path.
   kv_indices     (B, KV, P) int32 — ascending selected k-block indices
                  (``compact_kv_plan`` layout: the decode kernel's
                  scalar-prefetch schedule).
@@ -29,7 +45,14 @@ Two plan refresh modes, blended by ``replan_interval``:
   threshold with the SAME predicate the prefill path counts with
   (``core.blockmap.bisect_select``), and keep every block holding a
   selected token.  ``replan_interval=1`` makes every step exact: the
-  kernel output equals dense top-k (bisect) decode bitwise.
+  kernel output equals dense top-k (bisect) decode bitwise.  With
+  ``replan_mode="sketch"`` the periodic re-plan runs ``sketch_replan``
+  instead: coarse super-block sketches (unions of F adjacent block
+  summaries) rank candidate regions first, and the exact threshold
+  bisection reads only the surviving ``ceil(P/F)·F`` candidate blocks'
+  keys — re-plan traffic sub-linear in cached K bytes, approximate by
+  design (opt-in; the exact threshold still applies over whatever the
+  sketch admits).
 * **incremental** (in between): rank blocks by the Quest-style upper
   bound ``sum_d max(q_d·k_min_d, q_d·k_max_d)`` from the summaries —
   O(nkb·D) instead of O(S·D) — keep the top ``P`` (new blocks *enter*,
@@ -85,20 +108,106 @@ from repro.core.selection import NEG_INF, kth_largest_bisect
 
 PlanState = Dict[str, jax.Array]
 
+SUMMARY_BACKENDS = ("fp32", "int8")
+
+# int8 code range: block range endpoints land on ±126 so the ±1
+# conservative-rounding margin below never clips anti-conservatively
+_INT8_LEVELS = 252.0
+
+
+def summary_bytes(nkb: int, d: int, summary: str = "fp32") -> int:
+    """Block-summary bytes per (slot, kv head) — what one incremental
+    ranking pass reads.  fp32: 2·nkb·D·4.  int8: 2·nkb·D codes plus the
+    per-block fp32 (scale, zero) pairs."""
+    assert summary in SUMMARY_BACKENDS, summary
+    if summary == "int8":
+        return 2 * nkb * d + nkb * 2 * 4
+    return 2 * nkb * d * 4
+
+
+def quantize_summaries(k_min: jax.Array, k_max: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array]:
+    """fp32 per-block bounds (..., D) → int8 codes plus per-block fp32
+    (scale, zero) (...,).  CONSERVATIVE: ``dequantize_summaries`` of
+    the result always contains the inputs elementwise (quantized lo ≤
+    lo, quantized hi ≥ hi) — floor−1 / ceil+1 rounding leaves a whole
+    quantization step of margin, which dominates every fp32 rounding
+    error in the round trip (the scale floor keeps that step above a
+    few ulps of ``zero`` even for near-constant blocks).  Empty blocks
+    (±inf bounds, the init state) get the ``scale = -1`` sentinel and
+    dequantize back to ±inf."""
+    empty = ~jnp.isfinite(k_min[..., 0])
+    lo = jnp.where(empty[..., None], 0.0, k_min.astype(jnp.float32))
+    hi = jnp.where(empty[..., None], 0.0, k_max.astype(jnp.float32))
+    rlo = lo.min(axis=-1)
+    rhi = hi.max(axis=-1)
+    zero = 0.5 * (rlo + rhi)
+    rng = jnp.maximum(rhi - rlo,
+                      jnp.maximum(1e-30, 1e-4 * jnp.abs(zero)))
+    scale = rng / _INT8_LEVELS
+    q_lo = jnp.clip(jnp.floor((lo - zero[..., None]) / scale[..., None])
+                    - 1, -128, 127).astype(jnp.int8)
+    q_hi = jnp.clip(jnp.ceil((hi - zero[..., None]) / scale[..., None])
+                    + 1, -128, 127).astype(jnp.int8)
+    return (q_lo, q_hi,
+            jnp.where(empty, -1.0, scale).astype(jnp.float32),
+            jnp.where(empty, 0.0, zero).astype(jnp.float32))
+
+
+def dequantize_summaries(q_lo: jax.Array, q_hi: jax.Array,
+                         scale: jax.Array, zero: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Inverse of ``quantize_summaries``: int8 codes (..., D) + fp32
+    (scale, zero) (...,) → fp32 bounds.  ``scale < 0`` marks empty
+    blocks, which come back as the ±inf init state."""
+    lo = zero[..., None] + q_lo.astype(jnp.float32) * scale[..., None]
+    hi = zero[..., None] + q_hi.astype(jnp.float32) * scale[..., None]
+    valid = (scale >= 0.0)[..., None]
+    return (jnp.where(valid, lo, jnp.inf),
+            jnp.where(valid, hi, -jnp.inf))
+
+
+def plan_summary_bounds(plan: PlanState) -> Tuple[jax.Array, jax.Array]:
+    """The plan's block bounds as fp32 (±inf marks empty blocks),
+    whatever backend stores them.  The backend is carried by the state
+    itself (``k_scale`` present ⇔ int8), so jitted consumers stay
+    signature-stable across backends."""
+    if "k_scale" in plan:
+        return dequantize_summaries(plan["k_min"], plan["k_max"],
+                                    plan["k_scale"], plan["k_zero"])
+    return plan["k_min"], plan["k_max"]
+
 
 def init_decode_plan(batch: int, n_kv_heads: int, max_len: int, d: int,
-                     k_block: int, plan_blocks: Optional[int] = None
-                     ) -> PlanState:
+                     k_block: int, plan_blocks: Optional[int] = None,
+                     summary: str = "fp32") -> PlanState:
     """Empty plan over a ``max_len`` cache.  ``plan_blocks`` (P) is the
     static plan width; ``None`` keeps the full ``nkb`` (exact — no block
-    a re-plan selects is ever dropped)."""
+    a re-plan selects is ever dropped).  ``summary`` picks the bounds
+    storage backend (module docstring)."""
     assert max_len % k_block == 0, (max_len, k_block)
+    assert summary in SUMMARY_BACKENDS, summary
     nkb = max_len // k_block
     p = nkb if plan_blocks is None else min(int(plan_blocks), nkb)
     assert p >= 1, p
+    if summary == "int8":
+        bounds = {
+            "k_min": jnp.zeros((batch, n_kv_heads, nkb, d), jnp.int8),
+            "k_max": jnp.zeros((batch, n_kv_heads, nkb, d), jnp.int8),
+            "k_scale": jnp.full((batch, n_kv_heads, nkb), -1.0,
+                                jnp.float32),
+            "k_zero": jnp.zeros((batch, n_kv_heads, nkb), jnp.float32),
+        }
+    else:
+        bounds = {
+            "k_min": jnp.full((batch, n_kv_heads, nkb, d), jnp.inf,
+                              jnp.float32),
+            "k_max": jnp.full((batch, n_kv_heads, nkb, d), -jnp.inf,
+                              jnp.float32),
+        }
     return {
-        "k_min": jnp.full((batch, n_kv_heads, nkb, d), jnp.inf, jnp.float32),
-        "k_max": jnp.full((batch, n_kv_heads, nkb, d), -jnp.inf, jnp.float32),
+        **bounds,
         "kv_indices": jnp.zeros((batch, n_kv_heads, p), jnp.int32),
         "kv_counts": jnp.zeros((batch, n_kv_heads), jnp.int32),
         "step": jnp.zeros((batch,), jnp.int32),
@@ -130,10 +239,21 @@ def reset_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
     update must run the full re-plan); ``replans`` stays — it is the
     cumulative traffic counter serving reads by delta."""
     ix = (slice(None),) * batch_axis + (slot,)
+    if "k_scale" in plan:            # int8 backend: sentinel = empty
+        bounds = {
+            "k_min": plan["k_min"].at[ix].set(0),
+            "k_max": plan["k_max"].at[ix].set(0),
+            "k_scale": plan["k_scale"].at[ix].set(-1.0),
+            "k_zero": plan["k_zero"].at[ix].set(0.0),
+        }
+    else:
+        bounds = {
+            "k_min": plan["k_min"].at[ix].set(jnp.inf),
+            "k_max": plan["k_max"].at[ix].set(-jnp.inf),
+        }
     return {
         **plan,                      # replans is cumulative accounting
-        "k_min": plan["k_min"].at[ix].set(jnp.inf),
-        "k_max": plan["k_max"].at[ix].set(-jnp.inf),
+        **bounds,
         "kv_indices": plan["kv_indices"].at[ix].set(0),
         "kv_counts": plan["kv_counts"].at[ix].set(0),
         "step": plan["step"].at[ix].set(0),
@@ -166,10 +286,30 @@ def update_block_summaries(plan: PlanState, k_new: jax.Array,
     blk = (pos // k_block).astype(jnp.int32)                 # (B,)
     bi = jnp.arange(b)[:, None]
     ki = jnp.arange(kn.shape[1])[None, :]
+    bx = blk[:, None]
+    if "k_scale" not in plan:
+        return {
+            **plan,
+            "k_min": plan["k_min"].at[bi, ki, bx].min(kn),
+            "k_max": plan["k_max"].at[bi, ki, bx].max(kn),
+        }
+    # int8 backend: dequantize only the touched block's bounds, absorb
+    # the key, requantize outward.  The carried codes already contain
+    # the block's true bounds, so the union contains (true ∪ new) and
+    # conservative requantization keeps it that way — containment
+    # telescopes across any append sequence.
+    lo, hi = dequantize_summaries(plan["k_min"][bi, ki, bx],
+                                  plan["k_max"][bi, ki, bx],
+                                  plan["k_scale"][bi, ki, bx],
+                                  plan["k_zero"][bi, ki, bx])
+    q_lo, q_hi, sc, zp = quantize_summaries(jnp.minimum(lo, kn),
+                                            jnp.maximum(hi, kn))
     return {
         **plan,
-        "k_min": plan["k_min"].at[bi, ki, blk[:, None]].min(kn),
-        "k_max": plan["k_max"].at[bi, ki, blk[:, None]].max(kn),
+        "k_min": plan["k_min"].at[bi, ki, bx].set(q_lo),
+        "k_max": plan["k_max"].at[bi, ki, bx].set(q_hi),
+        "k_scale": plan["k_scale"].at[bi, ki, bx].set(sc),
+        "k_zero": plan["k_zero"].at[bi, ki, bx].set(zp),
     }
 
 
@@ -297,9 +437,10 @@ def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     sm_scale = 1.0 / np.sqrt(d)
     valid_blk = (jnp.arange(nkb) * k_block <= pos[:, None])   # (B, nkb)
     vb = valid_blk[:, None, :, None]
+    k_min, k_max = plan_summary_bounds(plan)   # fp32 either backend
     ub = block_upper_bounds(q.astype(jnp.float32),
-                            jnp.where(vb, plan["k_min"], 0.0),
-                            jnp.where(vb, plan["k_max"], 0.0),
+                            jnp.where(vb, k_min, 0.0),
+                            jnp.where(vb, k_max, 0.0),
                             sm_scale=sm_scale)                # (B,KV,G,nkb)
     ub_row = jnp.where(valid_blk[:, None, :], ub.max(axis=2), NEG_INF)
     # top-P blocks per (slot, kv head) — the same bisect predicate as the
@@ -318,6 +459,91 @@ def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     live = live & (tok <= pos[:, None, None])
     sc = jnp.where(live[:, :, None, :], sc, NEG_INF)
     thr = kth_largest_bisect(sc, topk_k)                      # (B, KV, G, 1)
+    return kv_indices, kv_counts, thr
+
+
+def sketch_geometry(nkb: int, plan_blocks: int, sketch_factor: int
+                    ) -> Tuple[int, int, int, int]:
+    """Static shape arithmetic shared by ``sketch_replan`` and the
+    plan-traffic accounting (``kernels.ops.decode_fetch_stats``).
+    Returns ``(F, nsb, C, C·F)``: the super-block factor F (largest
+    divisor of ``nkb`` ≤ ``sketch_factor``), the super-block count,
+    the surviving super-block budget ``C = ceil(P / F)`` and the
+    candidate block count the exact threshold pass then reads."""
+    f = max(1, min(int(sketch_factor), nkb))
+    while nkb % f:
+        f -= 1
+    nsb = nkb // f
+    c = min(max(1, -(-int(plan_blocks) // f)), nsb)
+    return f, nsb, c, c * f
+
+
+def sketch_replan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
+                  pos: jax.Array, *, topk_k: int, k_block: int,
+                  sketch_factor: int = 4,
+                  page_table: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Hierarchical two-level re-plan: the sub-linear replacement for
+    ``full_replan``'s all-cached-K stream.
+
+    Level 1 unions each run of F adjacent block summaries into a
+    super-block sketch and ranks the sketches by the same Quest upper
+    bound the incremental path uses (a super-block's bound is a bound
+    on every key inside it, so the ranking never under-estimates a
+    region — sketches only *rank*).  The top ``C = ceil(P/F)``
+    super-blocks survive.  Level 2 gathers only the survivors'
+    ``C·F`` candidate blocks and bisects the exact per-row token
+    threshold over them, keeping every candidate block holding a
+    selected token — exactly ``full_replan``'s tail, restricted to the
+    candidate set.  Re-plan reads drop from O(S·D) to
+    O(nkb·D + C·F·k_block·D).
+
+    Approximate by design (a high-scoring key inside a region whose
+    *sketch* ranks below the top C is missed until a later re-plan) —
+    opt-in via ``replan_mode="sketch"``.  When ``C·F ≥ nkb`` every
+    valid block is a candidate and the result equals ``full_replan``
+    bitwise (the bisection threshold depends only on the live score
+    multiset).  Shapes as ``full_replan``; with ``page_table`` set,
+    ``k_cache`` is the physical page pool."""
+    b, kv, gq, d = q.shape
+    k_min, k_max = plan_summary_bounds(plan)
+    nkb = k_min.shape[2]
+    p = plan["kv_indices"].shape[-1]
+    f, nsb, c, _ = sketch_geometry(nkb, p, sketch_factor)
+    sm_scale = 1.0 / np.sqrt(d)
+    valid_blk = (jnp.arange(nkb) * k_block <= pos[:, None])   # (B, nkb)
+    vb = valid_blk[:, None, :, None]
+    lo = jnp.where(vb, k_min, 0.0)
+    hi = jnp.where(vb, k_max, 0.0)
+    slo = lo.reshape(b, kv, nsb, f, d).min(axis=3)            # sketch =
+    shi = hi.reshape(b, kv, nsb, f, d).max(axis=3)            # bound union
+    ub = block_upper_bounds(q.astype(jnp.float32), slo, shi,
+                            sm_scale=sm_scale)                # (B,KV,G,nsb)
+    valid_sb = valid_blk.reshape(b, nsb, f).any(axis=-1)
+    ub_row = jnp.where(valid_sb[:, None, :], ub.max(axis=2), NEG_INF)
+    thr_sb = kth_largest_bisect(ub_row, c)                    # (B, KV, 1)
+    occ_sb = bisect_select(ub_row, thr_sb) & valid_sb[:, None, :]
+    sb_idx, sb_cnt = _compact_rows(occ_sb, c)                 # (B, KV, C)
+    cand = (sb_idx[..., None] * f +
+            jnp.arange(f)[None, None, None, :]).reshape(b, kv, c * f)
+    # exact token threshold, restricted to the candidate blocks
+    kg, tok = gather_planned_keys(k_cache, cand, k_block=k_block,
+                                  page_table=page_table)
+    sc = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32),
+                    kg.astype(jnp.float32),
+                    preferred_element_type=jnp.float32) * sm_scale
+    sb_slot = jnp.arange(c * f * k_block) // (f * k_block)    # (C·F·kb,)
+    live = sb_slot[None, None, :] < sb_cnt[..., None]         # no dup pads
+    live = live & (tok <= pos[:, None, None])
+    sc = jnp.where(live[:, :, None, :], sc, NEG_INF)
+    thr = kth_largest_bisect(sc, topk_k)                      # (B, KV, G, 1)
+    sel = bisect_select(jnp.where(live[:, :, None, :], sc, -jnp.inf),
+                        thr) & live[:, :, None, :]
+    sel_blk = sel.reshape(b, kv, gq, c * f, k_block).any(axis=(2, 4))
+    occ = jnp.zeros((b, kv, nkb), bool).at[
+        jnp.arange(b)[:, None, None],
+        jnp.arange(kv)[None, :, None], cand].max(sel_blk)
+    kv_indices, kv_counts = _compact_rows(occ, p)
     return kv_indices, kv_counts, thr
 
 
@@ -349,7 +575,9 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
                        pos: jax.Array, *, topk_k: int, k_block: int,
                        replan_interval: int = 1,
                        churn_budget: Optional[float] = None,
-                       page_table: Optional[jax.Array] = None
+                       page_table: Optional[jax.Array] = None,
+                       replan_mode: str = "exact",
+                       sketch_factor: int = 4
                        ) -> Tuple[PlanState, jax.Array]:
     """One decode step of plan maintenance (summaries must already hold
     the step's appended key — call ``update_block_summaries`` first).
@@ -364,14 +592,26 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
     ``replan_interval``-th step of the slot re-plans and intermediate
     steps use the incremental summary-ranked plan, bit-compatible with
     the fixed-interval state machine (``replan_interval=1`` = exact
-    top-k every step).  A step mixing triggered and untriggered slots
-    evaluates both branches and selects per slot; steps where the
-    whole batch agrees keep the single-branch fast path.  With
-    ``page_table`` set, ``k_cache`` is the physical page pool of the
-    paged serving layout."""
+    top-k every step).  ``replan_mode="sketch"`` swaps the periodic
+    re-plan for the two-level ``sketch_replan`` (traffic sub-linear in
+    cached K; approximate — see its docstring).
+
+    A step mixing triggered and untriggered slots runs the **partial
+    re-plan**: ``lax.map`` over slots with a real ``lax.cond`` per
+    slot, so only the triggering slots' caches are streamed — plan
+    traffic proportional to the triggering subset, not the batch
+    (steps where the whole batch agrees keep the batched
+    single-branch fast path).  With ``page_table`` set, ``k_cache`` is
+    the physical page pool of the paged serving layout."""
+    assert replan_mode in ("exact", "sketch"), replan_mode
     p = plan["kv_indices"].shape[-1]
 
     def _full(_):
+        if replan_mode == "sketch":
+            return sketch_replan(q, k_cache, plan, pos, topk_k=topk_k,
+                                 k_block=k_block,
+                                 sketch_factor=sketch_factor,
+                                 page_table=page_table)
         kc = k_cache if page_table is None else \
             logical_kv_view(k_cache, page_table)
         return full_replan(q, kc, pos, topk_k=topk_k,
@@ -398,12 +638,42 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
         kv_indices, kv_counts, thr = _full(None)
     else:
         def _mixed(_):
-            fi, fc, ft = _full(None)
-            ii, ic, it = _incr(None)
-            sel = do_full
-            return (jnp.where(sel[:, None, None], fi, ii),
-                    jnp.where(sel[:, None], fc, ic),
-                    jnp.where(sel[:, None, None, None], ft, it))
+            # partial re-plan: per-slot cond under a sequential map —
+            # a genuine runtime branch (NOT a batched select of both),
+            # so untriggered slots never stream their cache
+            sub = {k: plan[k] for k in
+                   ("k_min", "k_max", "k_scale", "k_zero", "kv_indices")
+                   if k in plan}
+            xs = (do_full, q, pos, sub,
+                  k_cache if page_table is None else page_table)
+
+            def _one(args):
+                do_f, qb, posb, subb, kb = args
+                qb, posb = qb[None], posb[None]
+                subb = {k: v[None] for k, v in subb.items()}
+                kc = kb[None] if page_table is None else k_cache
+                tb = None if page_table is None else kb[None]
+
+                def _full_one(_):
+                    if replan_mode == "sketch":
+                        return sketch_replan(
+                            qb, kc, subb, posb, topk_k=topk_k,
+                            k_block=k_block, sketch_factor=sketch_factor,
+                            page_table=tb)
+                    kf = kc if tb is None else logical_kv_view(kc, tb)
+                    return full_replan(qb, kf, posb, topk_k=topk_k,
+                                       k_block=k_block, plan_blocks=p)
+
+                def _incr_one(_):
+                    return incremental_plan(
+                        qb, kc, subb, posb, topk_k=topk_k,
+                        k_block=k_block, page_table=tb)
+
+                fi, fc, ft = jax.lax.cond(do_f, _full_one, _incr_one,
+                                          None)
+                return fi[0], fc[0], ft[0]
+
+            return jax.lax.map(_one, xs)
 
         branch = jnp.where(do_full.all(), 2,
                            jnp.where(do_full.any(), 1, 0))
@@ -421,7 +691,8 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
 
 def plan_from_prefill(k_cache: jax.Array, q_tail: jax.Array,
                       pos: jax.Array, *, topk_k: int, k_block: int,
-                      plan_blocks: Optional[int] = None) -> PlanState:
+                      plan_blocks: Optional[int] = None,
+                      summary: str = "fp32") -> PlanState:
     """Seed a decode-plan state from prefill outputs — the prefill→
     decode handoff.  Instead of claiming a slot cold (empty summaries,
     forcing the first decode step through a full re-plan that streams
@@ -446,12 +717,22 @@ def plan_from_prefill(k_cache: jax.Array, q_tail: jax.Array,
     last prompt position's grouped queries; pos: (B,) last written
     positions.  Returns a fresh PlanState for these B slots."""
     b, s, kv, d = k_cache.shape
-    plan = init_decode_plan(b, kv, s, d, k_block, plan_blocks)
+    plan = init_decode_plan(b, kv, s, d, k_block, plan_blocks,
+                            summary=summary)
     k_min, k_max = summaries_from_cache(k_cache, pos, k_block=k_block)
     p = plan["kv_indices"].shape[-1]
     kv_indices, kv_counts, _ = full_replan(q_tail, k_cache, pos,
                                            topk_k=topk_k, k_block=k_block,
                                            plan_blocks=p)
-    return {**plan, "k_min": k_min, "k_max": k_max,
-            "kv_indices": kv_indices, "kv_counts": kv_counts,
-            "step": jnp.ones((b,), jnp.int32)}
+    out = {**plan, "kv_indices": kv_indices, "kv_counts": kv_counts,
+           "step": jnp.ones((b,), jnp.int32)}
+    if summary == "int8":
+        # one-shot quantization of the from-scratch bounds: any future
+        # install of the same pages quantizes the same fp32 input, so
+        # copying cached page-summary rows stays bit-identical to
+        # recomputation (the prefix-cache seeding contract)
+        q_lo, q_hi, sc, zp = quantize_summaries(k_min, k_max)
+        out.update(k_min=q_lo, k_max=q_hi, k_scale=sc, k_zero=zp)
+    else:
+        out.update(k_min=k_min, k_max=k_max)
+    return out

@@ -82,6 +82,47 @@ def logical_kv_view(pages: jnp.ndarray, page_table: jnp.ndarray
     return g.reshape(b, mp * g.shape[2], *pages.shape[2:])
 
 
+# --- per-physical-page SATA block-summary cache -------------------------
+# Shared-prefix installs copy a cached page's summary row instead of
+# recomputing it from the page's keys (PR 5).  The rows mirror the plan
+# state's block-summary backend (``core/decode_plan.py``): fp32 stores
+# exact elementwise bounds; int8 stores conservative quantized codes
+# plus per-page fp32 (scale, zero).  Since a given page's summary row
+# is always produced by quantizing the SAME from-scratch fp32 bounds,
+# copying a cached row is bit-identical to recomputation under either
+# backend.
+
+def page_summary_fields(summary: str = "fp32") -> Tuple[str, ...]:
+    """Cache-dict field names of the page-summary arrays — the rows
+    ``copy_phys_pages`` must move together on copy-on-write (a CoW'd
+    page starts as an exact copy, so its summary row does too)."""
+    if summary == "int8":
+        return ("page_k_min", "page_k_max", "page_k_scale", "page_k_zero")
+    return ("page_k_min", "page_k_max")
+
+
+def init_page_summaries(n_pages: int, n_kv_heads: int, d: int,
+                        summary: str = "fp32") -> Dict[str, jnp.ndarray]:
+    """Empty per-physical-page summary arrays for the serving cache
+    dict: bounds are (n_pages, KV, D); the int8 backend adds
+    (n_pages, KV) scale/zero with the ``scale = -1`` empty sentinel
+    (matches ``decode_plan.dequantize_summaries``)."""
+    if summary == "int8":
+        return {
+            "page_k_min": jnp.zeros((n_pages, n_kv_heads, d), jnp.int8),
+            "page_k_max": jnp.zeros((n_pages, n_kv_heads, d), jnp.int8),
+            "page_k_scale": jnp.full((n_pages, n_kv_heads), -1.0,
+                                     jnp.float32),
+            "page_k_zero": jnp.zeros((n_pages, n_kv_heads), jnp.float32),
+        }
+    return {
+        "page_k_min": jnp.full((n_pages, n_kv_heads, d), jnp.inf,
+                               jnp.float32),
+        "page_k_max": jnp.full((n_pages, n_kv_heads, d), -jnp.inf,
+                               jnp.float32),
+    }
+
+
 class PageAllocator:
     """Host-side free-list allocator for the paged pool.
 

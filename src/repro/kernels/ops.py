@@ -285,27 +285,41 @@ def sata_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
                        n_kv_heads: Optional[int] = None,
                        dtype_bytes: int = 4,
-                       replan: Optional[float] = None,
-                       nkb: Optional[int] = None) -> Dict:
+                       replan=None,
+                       nkb: Optional[int] = None,
+                       summary: str = "fp32",
+                       replan_mode: str = "exact",
+                       sketch_factor: int = 4,
+                       plan_blocks: Optional[int] = None) -> Dict:
     """Per-step K/V fetch accounting for the decode route.  kv_counts:
-    (B, KV) [or any (..., KV)] int; pos: (B,) int per-slot positions.
+    (B, KV) [or (L, B, KV) — any (..., B, KV)] int; pos: (B,) int
+    per-slot positions.
 
     Kernel side (always reported): dense decode streams every valid
     block of the prefix per (slot, kv head); the planned kernel fetches
     ``kv_counts`` tiles.
 
     Plan side (``replan`` given — the fraction of this step's layer
-    plans that ran the full re-plan; a plain bool works):
-    the selection machinery reads keys too, and pretending otherwise
-    overstates the win.  A full re-plan streams ALL valid cached K (one
-    K-only pass — so at ``sata_decode_replan=1`` selection traffic
-    still scales with the prefix); an incremental step reads the
-    2×(nkb·D) fp32 summaries (``nkb`` — pass it, it is a property of
-    the cache, not of the counts) plus the planned blocks' keys for the
-    in-plan threshold.  ``step_bytes_plan_route`` then totals kernel +
-    plan traffic for the step, the honest number to compare against
-    ``step_bytes_dense_route`` (dense decode plans nothing).
+    plans that ran the full re-plan; a plain bool works, and a (B,)
+    vector charges each slot its own fraction — the partial re-plan's
+    gather-based branch streams only the triggering slots' caches, and
+    linearity makes a broadcast scalar reproduce the blended total
+    exactly): the selection machinery reads keys too, and pretending
+    otherwise overstates the win.  An exact full re-plan streams ALL
+    valid cached K (one K-only pass — so at ``sata_decode_replan=1``
+    selection traffic still scales with the prefix); a *sketch*
+    re-plan (``replan_mode="sketch"``) reads the summaries plus only
+    the ``ceil(P/F)·F`` surviving candidate blocks' keys
+    (``decode_plan.sketch_geometry`` — pass ``plan_blocks`` for P); an
+    incremental step reads the block summaries (``summary`` sizes them
+    — fp32 bounds or int8 codes + per-block scale/zero, see
+    ``decode_plan.summary_bytes``; ``nkb`` — pass it, it is a property
+    of the cache, not of the counts) plus the planned blocks' keys for
+    the in-plan threshold.  ``step_bytes_plan_route`` then totals
+    kernel + plan traffic for the step, the honest number to compare
+    against ``step_bytes_dense_route`` (dense decode plans nothing).
     """
+    from repro.core.decode_plan import sketch_geometry, summary_bytes
     cnt = np.asarray(kv_counts)
     pos = np.asarray(pos).reshape(-1)
     b = pos.shape[0]
@@ -323,18 +337,34 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
     }
     if replan is not None:
         k_tile_bytes = k_block * d * dtype_bytes               # K only
-        full_b = dense_tiles * k_tile_bytes
         layers = cnt.size // (b * kv)
-        summaries_b = (0 if nkb is None
-                       else 2 * nkb * d * 4 * b * kv * layers)  # fp32
+        sum_head = 0 if nkb is None else summary_bytes(nkb, d, summary)
+        summaries_b = sum_head * b * kv * layers
+        if replan_mode == "sketch" and nkb is not None:
+            pb = nkb if plan_blocks is None else min(int(plan_blocks),
+                                                     nkb)
+            _, _, _, cand = sketch_geometry(nkb, pb, sketch_factor)
+            cand_slot = np.minimum(valid_blocks, cand)         # (B,)
+            full_slot = (cand_slot * kv * layers * k_tile_bytes
+                         + sum_head * kv * layers)
+        else:
+            full_slot = valid_blocks * kv * layers * k_tile_bytes
+        full_b = int(full_slot.sum())
         incr_b = summaries_b + plan_tiles * k_tile_bytes
-        # ``replan`` may be a bool (this step) or a fraction (layers of
-        # a churn-adaptive stack can trigger independently)
-        frac = float(replan)
+        rep = np.asarray(replan, np.float64).reshape(-1)
+        if rep.size == 1:
+            step_b = int(round(float(rep[0]) * full_b
+                               + (1.0 - float(rep[0])) * incr_b))
+        else:
+            assert rep.size == b, (rep.size, b)
+            cnt_slot = cnt.reshape(-1, b, kv).sum(axis=(0, 2))  # (B,)
+            incr_slot = (sum_head * kv * layers
+                         + cnt_slot * k_tile_bytes)
+            step_b = int(round(float(
+                (rep * full_slot + (1.0 - rep) * incr_slot).sum())))
         out["plan_fetch_bytes_full"] = full_b
         out["plan_fetch_bytes_incremental"] = incr_b
-        out["plan_fetch_bytes_step"] = int(round(
-            frac * full_b + (1.0 - frac) * incr_b))
+        out["plan_fetch_bytes_step"] = step_b
         out["step_bytes_plan_route"] = (out["kv_fetch_bytes_plan"]
                                         + out["plan_fetch_bytes_step"])
         out["step_bytes_dense_route"] = out["kv_fetch_bytes_dense"]

@@ -41,6 +41,13 @@ shared with prefill) AND ``token <= pos``.  With a full re-plan every
 step the output is bitwise equal to dense top-k (bisect) decode: a tile
 whose every entry is masked contributes ``p = 0`` and leaves the online
 softmax state untouched, so skipping it is exact.
+
+The kernel is **summary-backend agnostic**: it consumes only the plan's
+``kv_indices``/``kv_counts``/thresholds, never the block summaries, so
+the fp32 and int8 summary backends (and the exact vs sketch re-plan
+modes) change which blocks get planned — not how a planned block is
+attended.  The plan-side traffic those backends save is accounted in
+``kernels.ops.decode_fetch_stats`` (dtype- and mode-aware), not here.
 """
 from __future__ import annotations
 

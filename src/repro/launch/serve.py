@@ -366,11 +366,14 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         if rep is not None:
             # per-(layer, slot) delta, attributed to LIVE slots only —
             # released slots never fire, and an idle slot's counter
-            # must not dilute or inflate the live traffic blend
+            # must not dilute or inflate the live traffic blend.
+            # Kept per slot (mean over layers): the partial re-plan
+            # streams only the triggering slots' caches, so each live
+            # slot is charged its own full/incremental blend
             delta = np.clip(rep - last_rep, 0.0, 1.0)
             last_rep = rep
             if live:
-                frac = float(delta[:, live].mean())
+                frac = delta[:, live].mean(axis=0)           # (B_live,)
         if counts is not None and live:
             # count only slots holding live requests — idle slots still
             # run through the lockstep batch but serve nobody
@@ -378,7 +381,15 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                                     k_block=blk, d=cfg.hd, replan=frac,
                                     nkb=max_len // blk,
                                     dtype_bytes=jnp.dtype(
-                                        _dtype(cfg)).itemsize)
+                                        _dtype(cfg)).itemsize,
+                                    summary=getattr(cfg, "sata_summary",
+                                                    "fp32"),
+                                    replan_mode=getattr(
+                                        cfg, "sata_replan_mode", "exact"),
+                                    sketch_factor=getattr(
+                                        cfg, "sata_sketch_factor", 4),
+                                    plan_blocks=getattr(
+                                        cfg, "sata_decode_blocks", None))
             fetch_tiles_plan += st["kv_fetch_tiles_plan"]
             fetch_tiles_dense += st["kv_fetch_tiles_dense"]
             plan_bytes += st["plan_fetch_bytes_step"]
@@ -416,9 +427,15 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             "kv_fetch_bytes_plan": fetch_tiles_plan * tile_bytes,
             "kv_fetch_bytes_dense": fetch_tiles_dense * tile_bytes,
             "fetch_reduction": fetch_tiles_dense / max(fetch_tiles_plan, 1),
-            # plan-side (selection) traffic — full re-plans stream all
-            # cached K, incremental steps read summaries + planned keys
+            # plan-side (selection) traffic — exact full re-plans
+            # stream all cached K, sketch re-plans only the surviving
+            # candidate blocks, incremental steps read the summaries
+            # (fp32 bounds or int8 codes+scale/zero) + planned keys;
+            # true_reduction is per-backend honest because the summary
+            # bytes above are sized by the configured backend
             "plan_fetch_bytes": plan_bytes,
+            "summary_backend": getattr(cfg, "sata_summary", "fp32"),
+            "replan_mode": getattr(cfg, "sata_replan_mode", "exact"),
             "step_bytes_plan_route": kernel_bytes_plan + plan_bytes,
             "step_bytes_dense_route": kernel_bytes_dense,
             "true_reduction": kernel_bytes_dense

@@ -581,14 +581,16 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
             cache["page_ref"] = jnp.zeros((n_pages,), jnp.int32)
             if sata:
                 # per-physical-page K summaries: registered prompt
-                # pages keep their elementwise min/max here, so a
-                # cache-hit install seeds the decode plan's matched
-                # blocks without re-reading their keys (bit-identical
-                # to a from-scratch recompute by min/max associativity)
-                cache["page_k_min"] = jnp.full(
-                    (n_pages, cfg.n_kv_heads, hd), jnp.inf, jnp.float32)
-                cache["page_k_max"] = jnp.full(
-                    (n_pages, cfg.n_kv_heads, hd), -jnp.inf, jnp.float32)
+                # pages keep their block bounds here, so a cache-hit
+                # install seeds the decode plan's matched blocks
+                # without re-reading their keys (bit-identical to a
+                # from-scratch recompute under either backend — fp32
+                # by min/max associativity, int8 because identical
+                # fp32 bounds quantize identically)
+                from repro.core.paging import init_page_summaries
+                cache.update(init_page_summaries(
+                    n_pages, cfg.n_kv_heads, hd,
+                    getattr(cfg, "sata_summary", "fp32")))
         if sata:
             blk = decode_block_size(cfg, max_len)
             if blk != page:
@@ -605,7 +607,8 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
         cache["plan"] = init_decode_plan(
             batch, cfg.n_kv_heads, max_len, hd,
             decode_block_size(cfg, max_len),
-            getattr(cfg, "sata_decode_blocks", None))
+            getattr(cfg, "sata_decode_blocks", None),
+            summary=getattr(cfg, "sata_summary", "fp32"))
     return cache
 
 
@@ -666,7 +669,9 @@ def _attend_sata_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     plan, thr = decode_plan_update(
         plan, qg, k, pos, topk_k=cfg.topk_k, k_block=k_block,
         replan_interval=interval, churn_budget=churn_budget,
-        page_table=page_table)
+        page_table=page_table,
+        replan_mode=getattr(cfg, "sata_replan_mode", "exact"),
+        sketch_factor=getattr(cfg, "sata_sketch_factor", 4))
     out = sata_decode_attention(qg, k, v, plan["kv_indices"],
                                 plan["kv_counts"], thr, pos,
                                 k_block=k_block, page_table=page_table)

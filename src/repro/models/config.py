@@ -71,6 +71,26 @@ class ModelConfig:
                                               # per (slot, head) reaches
                                               # this fraction of the plan
                                               # width P
+    sata_summary: str = "fp32"                # fp32 | int8 — decode
+                                              # block-summary backend;
+                                              # int8 stores conservative
+                                              # quantized bounds (+ per-
+                                              # block scale/zero), ~4×
+                                              # less plan-side summary
+                                              # traffic; summaries only
+                                              # RANK — the exact token
+                                              # threshold is unaffected
+    sata_replan_mode: str = "exact"           # exact | sketch — periodic
+                                              # re-plan flavor; sketch
+                                              # ranks super-block
+                                              # sketches first and runs
+                                              # exact bisection only on
+                                              # surviving candidates
+                                              # (sub-linear re-plan
+                                              # traffic, approximate)
+    sata_sketch_factor: int = 4               # blocks per super-block
+                                              # sketch (largest divisor
+                                              # of nkb is used)
 
     # --- serving KV-cache layout ---
     kv_cache_layout: str = "contiguous"       # contiguous | paged — paged

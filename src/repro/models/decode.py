@@ -235,7 +235,8 @@ def copy_phys_pages(cache: Dict, pairs) -> Dict:
         kvc = cache.get(name)
         if isinstance(kvc, dict) and "k_pages" in kvc:
             kvc = dict(kvc)
-            for f in ("k_pages", "v_pages", "page_k_min", "page_k_max"):
+            for f in ("k_pages", "v_pages", "page_k_min", "page_k_max",
+                      "page_k_scale", "page_k_zero"):
                 if f in kvc:
                     kvc[f] = kvc[f].at[:, dst].set(kvc[f][:, src])
             cache[name] = kvc
@@ -357,7 +358,8 @@ def prefill_prompt(params: Params, cfg: ModelConfig, tokens: jax.Array,
         seed = plan_from_prefill(
             k_pad, qg, jnp.full((b,), m + sp - 1, jnp.int32),
             topk_k=cfg.topk_k, k_block=blk,
-            plan_blocks=getattr(cfg, "sata_decode_blocks", None))
+            plan_blocks=getattr(cfg, "sata_decode_blocks", None),
+            summary=getattr(cfg, "sata_summary", "fp32"))
         return h, (kc, vc, seed)
 
     xs = (params["layers"] if prefix_kv is None else
@@ -391,11 +393,12 @@ def install_prefill(cfg: ModelConfig, cache: Dict, slot: int,
     are written (the matched pages' contents are exactly the rows a
     full prefill would have rewritten, and shared pages are immutable
     anyway).  When the cache carries the per-physical-page summary
-    arrays (``page_k_min``/``page_k_max``), the plan summaries of
-    fully-matched blocks are seeded FROM the summary cache — min/max
-    associativity makes that bit-identical to the seed's recompute,
-    and a test pins it — and every full prompt page's summary is
-    (re)registered for future hits."""
+    arrays (``page_k_min``/``page_k_max``, plus scale/zero rows under
+    the int8 backend), the plan summaries of fully-matched blocks are
+    seeded FROM the summary cache — bit-identical to the seed's
+    recompute (fp32: min/max associativity; int8: identical fp32
+    bounds quantize identically), and a test pins it — and every full
+    prompt page's summary is (re)registered for future hits."""
     ks, vs = state["k"], state["v"]          # (L, 1, S_p, KV, hd)
     sp = ks.shape[2]
     total = prefix_len + sp
@@ -423,11 +426,29 @@ def install_prefill(cfg: ModelConfig, cache: Dict, slot: int,
                     cached_min.transpose(0, 2, 1, 3))
                 seed["k_max"] = seed["k_max"].at[:, 0, :, :n_shared].set(
                     cached_max.transpose(0, 2, 1, 3))
+                if "page_k_scale" in kv:     # int8 summary backend
+                    cached_sc = kv["page_k_scale"][:, row[:n_shared]]
+                    cached_zp = kv["page_k_zero"][:, row[:n_shared]]
+                    seed["k_scale"] = seed["k_scale"] \
+                        .at[:, 0, :, :n_shared].set(
+                            cached_sc.transpose(0, 2, 1))
+                    seed["k_zero"] = seed["k_zero"] \
+                        .at[:, 0, :, :n_shared].set(
+                            cached_zp.transpose(0, 2, 1))
             if n_full:
                 kv["page_k_min"] = kv["page_k_min"].at[:, row[:n_full]].set(
                     seed["k_min"][:, 0, :, :n_full].transpose(0, 2, 1, 3))
                 kv["page_k_max"] = kv["page_k_max"].at[:, row[:n_full]].set(
                     seed["k_max"][:, 0, :, :n_full].transpose(0, 2, 1, 3))
+                if "page_k_scale" in kv:
+                    kv["page_k_scale"] = kv["page_k_scale"] \
+                        .at[:, row[:n_full]].set(
+                            seed["k_scale"][:, 0, :, :n_full]
+                            .transpose(0, 2, 1))
+                    kv["page_k_zero"] = kv["page_k_zero"] \
+                        .at[:, row[:n_full]].set(
+                            seed["k_zero"][:, 0, :, :n_full]
+                            .transpose(0, 2, 1))
     else:
         assert prefix_len == 0, "shared-prefix install is paged-only"
         kv["k"] = kv["k"].at[:, slot, :sp].set(
@@ -436,9 +457,10 @@ def install_prefill(cfg: ModelConfig, cache: Dict, slot: int,
             vs[:, 0].astype(kv["v"].dtype))
     if seed is not None and "plan" in kv:
         plan = dict(kv["plan"])
-        for name in ("k_min", "k_max", "kv_indices", "kv_counts",
-                     "step", "churn"):
-            plan[name] = plan[name].at[:, slot].set(seed[name][:, 0])
+        for name in ("k_min", "k_max", "k_scale", "k_zero",
+                     "kv_indices", "kv_counts", "step", "churn"):
+            if name in plan:
+                plan[name] = plan[name].at[:, slot].set(seed[name][:, 0])
         kv["plan"] = plan
     return {**cache, "kv": kv}
 

@@ -1,0 +1,452 @@
+"""Block-summary backends + hierarchical sketch re-plan: int8
+conservativeness (quantized bounds always CONTAIN the fp32 bounds, so
+upper-bound ranking never under-estimates a block), fp32 bitwise
+invariance at replan=1, paged==contiguous parity under int8, sketch
+degeneracy to the exact full re-plan, the gather-based mixed-step
+partial re-plan, and the dtype-/mode-aware fetch accounting."""
+import dataclasses
+import sys
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+from repro.configs.archs import SMOKE
+from repro.core.decode_plan import (decode_plan_update, dequantize_summaries,
+                                    full_replan, incremental_plan,
+                                    init_decode_plan, plan_from_prefill,
+                                    plan_summary_bounds, quantize_summaries,
+                                    reset_plan_slot, sketch_geometry,
+                                    sketch_replan, summaries_from_cache,
+                                    summary_bytes, update_block_summaries)
+from repro.kernels.ops import decode_fetch_stats
+from repro.models import decode as dec
+from repro.models import model as mdl
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _grow(summary, keys, s, blk, resets=()):
+    """Drive a backend through the serving append lifecycle.  keys:
+    (B, T, KV, D) appended at per-slot positions 0, 1, ... over a
+    length-``s`` cache; ``resets`` maps step -> slot to re-claim (cache
+    zeroed, plan slot reset, position restarted).  Returns
+    (plan, cache, final per-slot pos)."""
+    b, t_total, kv, d = keys.shape
+    assert t_total <= s
+    plan = init_decode_plan(b, kv, s, d, blk, summary=summary)
+    cache = jnp.zeros((b, s, kv, d), jnp.float32)
+    upd = jax.vmap(lambda c, n, p:
+                   jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
+    pos = np.zeros(b, np.int32)
+    resets = dict(resets)
+    for t in range(t_total):
+        if t in resets:
+            slot = resets[t]
+            cache = cache.at[slot].set(0.0)
+            plan = reset_plan_slot(plan, slot)
+            pos[slot] = 0
+        k_new = keys[:, t:t + 1]
+        posj = jnp.asarray(pos)
+        cache = upd(cache, k_new, posj)
+        plan = update_block_summaries(plan, k_new, posj, k_block=blk)
+        last = pos.copy()
+        pos = pos + 1
+    return plan, cache, jnp.asarray(last)
+
+
+# ---------------------------------------------------------------------------
+# int8 backend: conservativeness
+# ---------------------------------------------------------------------------
+
+def _assert_contains(plan8, ref_min, ref_max):
+    lo8, hi8 = plan_summary_bounds(plan8)
+    assert bool((lo8 <= ref_min).all()), "int8 k_min must be <= fp32 k_min"
+    assert bool((hi8 >= ref_max).all()), "int8 k_max must be >= fp32 k_max"
+
+
+def test_int8_bounds_contain_fp32_with_midstream_reset():
+    """Incremental int8 maintenance over the serving lifecycle (ragged
+    growth, one slot reset and re-claimed) stays conservative vs the
+    exact from-scratch bounds."""
+    b, kv, s, d, blk = 2, 2, 32, 8, 8
+    keys = _rand(jax.random.PRNGKey(0), (b, 24, kv, d)) * 3.0
+    plan8, cache, pos = _grow("int8", keys, s, blk, resets={13: 1})
+    ref_min, ref_max = summaries_from_cache(cache, pos, k_block=blk)
+    _assert_contains(plan8, ref_min, ref_max)
+    # ...and the fp32 backend over the same sequence stays exact
+    planf, cache_f, pos_f = _grow("fp32", keys, s, blk, resets={13: 1})
+    ref_f, _ = summaries_from_cache(cache_f, pos_f, k_block=blk)
+    np.testing.assert_array_equal(np.asarray(planf["k_min"]),
+                                  np.asarray(ref_f))
+
+
+def test_int8_conservative_across_magnitudes():
+    """Per-block scale adapts to the block's own range: wildly mixed
+    magnitudes (1e-3 .. 1e3) must all stay contained."""
+    b, kv, s, d, blk = 1, 2, 32, 4, 8
+    rng = np.random.default_rng(7)
+    mags = 10.0 ** rng.uniform(-3, 3, size=(1, s, 1, 1))
+    keys = jnp.asarray(rng.standard_normal((b, s, kv, d)) * mags,
+                       jnp.float32)
+    plan8, cache, pos = _grow("int8", keys, s, blk)
+    ref_min, ref_max = summaries_from_cache(cache, pos, k_block=blk)
+    _assert_contains(plan8, ref_min, ref_max)
+
+
+def test_int8_constant_and_offset_blocks_conservative():
+    """Degenerate ranges: a block of identical keys (range 0 -> the
+    scale floor) and a tiny range far from zero (scale floored by
+    |zero| so dequantization rounding cannot flip containment)."""
+    for base, jitter in ((3.7, 0.0), (1.0e4, 1e-3), (-512.0, 1e-5)):
+        k = jnp.full((1, 8, 2, 4), base, jnp.float32)
+        if jitter:
+            k = k + jitter * _rand(jax.random.PRNGKey(1), k.shape)
+        plan8, cache, pos = _grow("int8", k, 8, 8)
+        ref_min, ref_max = summaries_from_cache(cache, pos, k_block=8)
+        _assert_contains(plan8, ref_min, ref_max)
+
+
+def test_quantize_dequantize_roundtrip_contains():
+    """One-shot quantization (the prefill-handoff / page-summary path)
+    is conservative, and empty blocks round-trip to the ±inf init."""
+    rng = np.random.default_rng(3)
+    lo = jnp.asarray(rng.standard_normal((2, 3, 4, 8)), jnp.float32)
+    hi = lo + jnp.asarray(rng.uniform(0, 2, (2, 3, 4, 8)), jnp.float32)
+    q_lo, q_hi, sc, zp = quantize_summaries(lo, hi)
+    dlo, dhi = dequantize_summaries(q_lo, q_hi, sc, zp)
+    assert bool((dlo <= lo).all()) and bool((dhi >= hi).all())
+    # empty sentinel
+    e_lo = jnp.full((1, 1, 8), jnp.inf)
+    e_hi = jnp.full((1, 1, 8), -jnp.inf)
+    q_lo, q_hi, sc, zp = quantize_summaries(e_lo, e_hi)
+    assert float(sc[0, 0]) == -1.0
+    dlo, dhi = dequantize_summaries(q_lo, q_hi, sc, zp)
+    assert bool(jnp.isposinf(dlo).all()) and bool(jnp.isneginf(dhi).all())
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 28), st.integers(0, 2 ** 31 - 1),
+           st.integers(-1, 27), st.floats(-2.0, 2.0))
+    def test_property_int8_conservative(n_steps, seed, reset_at, log_mag):
+        """Over ANY append / re-plan / reset sequence the quantized
+        bounds contain the exact fp32 bounds elementwise — the invariant
+        that makes upper-bound ranking superset-safe."""
+        b, kv, s, d, blk = 2, 2, 32, 4, 8
+        rng = np.random.default_rng(seed)
+        keys = jnp.asarray(
+            rng.standard_normal((b, n_steps, kv, d)) * 10.0 ** log_mag,
+            jnp.float32)
+        resets = {reset_at: 1} if 0 <= reset_at < n_steps else {}
+        plan8, cache, pos = _grow("int8", keys, s, blk, resets=resets)
+        ref_min, ref_max = summaries_from_cache(cache, pos, k_block=blk)
+        _assert_contains(plan8, ref_min, ref_max)
+
+
+# ---------------------------------------------------------------------------
+# fp32 backend: bitwise invariance; int8 at replan=1
+# ---------------------------------------------------------------------------
+
+def test_fp32_backend_replan1_bitwise_unchanged():
+    """The default backend at ``replan_interval=1`` is exactly the
+    pre-backend state machine: the plan dict carries no quantization
+    keys and ``decode_plan_update`` IS ``full_replan``."""
+    b, kv, s, d, blk = 2, 2, 32, 8, 8
+    keys = _rand(jax.random.PRNGKey(2), (b, 20, kv, d))
+    plan, cache, pos = _grow("fp32", keys, s, blk)
+    assert "k_scale" not in plan and plan["k_min"].dtype == jnp.float32
+    q = _rand(jax.random.PRNGKey(3), (b, kv, 2, d))
+    new, thr = decode_plan_update(plan, q, cache, pos, topk_k=8,
+                                  k_block=blk, replan_interval=1)
+    fi, fc, ft = full_replan(q, cache, pos, topk_k=8, k_block=blk,
+                             plan_blocks=s // blk)
+    np.testing.assert_array_equal(np.asarray(new["kv_indices"]),
+                                  np.asarray(fi))
+    np.testing.assert_array_equal(np.asarray(new["kv_counts"]),
+                                  np.asarray(fc))
+    np.testing.assert_array_equal(np.asarray(thr), np.asarray(ft))
+
+
+def test_int8_exact_replan1_matches_fp32():
+    """The exact full re-plan never reads the summaries, so at
+    ``replan_interval=1`` the int8 backend's plans and thresholds are
+    bitwise the fp32 backend's."""
+    b, kv, s, d, blk = 2, 2, 32, 8, 8
+    keys = _rand(jax.random.PRNGKey(4), (b, 20, kv, d))
+    plan8, cache, pos = _grow("int8", keys, s, blk)
+    planf, _, _ = _grow("fp32", keys, s, blk)
+    q = _rand(jax.random.PRNGKey(5), (b, kv, 2, d))
+    n8, t8 = decode_plan_update(plan8, q, cache, pos, topk_k=8,
+                                k_block=blk, replan_interval=1)
+    nf, tf = decode_plan_update(planf, q, cache, pos, topk_k=8,
+                                k_block=blk, replan_interval=1)
+    np.testing.assert_array_equal(np.asarray(n8["kv_indices"]),
+                                  np.asarray(nf["kv_indices"]))
+    np.testing.assert_array_equal(np.asarray(n8["kv_counts"]),
+                                  np.asarray(nf["kv_counts"]))
+    np.testing.assert_array_equal(np.asarray(t8), np.asarray(tf))
+
+
+def test_reset_plan_slot_int8_restores_init():
+    b, kv, s, d, blk = 2, 2, 16, 4, 8
+    keys = _rand(jax.random.PRNGKey(6), (b, 10, kv, d))
+    plan, _, _ = _grow("int8", keys, s, blk)
+    plan = reset_plan_slot(plan, 0)
+    ref = init_decode_plan(b, kv, s, d, blk, summary="int8")
+    for name in ("k_min", "k_max", "k_scale", "k_zero"):
+        np.testing.assert_array_equal(np.asarray(plan[name][0]),
+                                      np.asarray(ref[name][0]),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Paged == contiguous parity under int8
+# ---------------------------------------------------------------------------
+
+def _paged_from_contiguous(cache, blk):
+    """Scatter a contiguous (B, S, KV, D) cache into a page pool +
+    per-slot table (page == blk; physical page 0 left reserved)."""
+    b, s, kv, d = cache.shape
+    nkb = s // blk
+    pool = jnp.zeros((b * nkb + 1, blk, kv, d), cache.dtype)
+    table = np.zeros((b, nkb), np.int32)
+    for i in range(b):
+        for lp in range(nkb):
+            ph = 1 + i * nkb + lp
+            pool = pool.at[ph].set(cache[i, lp * blk:(lp + 1) * blk])
+            table[i, lp] = ph
+    return pool, jnp.asarray(table)
+
+
+def test_paged_matches_contiguous_int8():
+    """The int8 plan is layout-independent (summaries absorb appended
+    keys, not cache addresses): incremental and sketch planning over
+    the paged pool equal the contiguous run bitwise."""
+    b, kv, s, d, blk = 2, 2, 64, 8, 16
+    keys = _rand(jax.random.PRNGKey(8), (b, 40, kv, d))
+    plan, cache, pos = _grow("int8", keys, s, blk)
+    pool, table = _paged_from_contiguous(cache, blk)
+    q = _rand(jax.random.PRNGKey(9), (b, kv, 2, d))
+    for fn, kw in ((incremental_plan, {}),
+                   (sketch_replan, dict(sketch_factor=2))):
+        ci, cc, ct = fn(q, cache, plan, pos, topk_k=8, k_block=blk, **kw)
+        pi, pc, pt = fn(q, pool, plan, pos, topk_k=8, k_block=blk,
+                        page_table=table, **kw)
+        np.testing.assert_array_equal(np.asarray(ci), np.asarray(pi))
+        np.testing.assert_array_equal(np.asarray(cc), np.asarray(pc))
+        np.testing.assert_array_equal(np.asarray(ct), np.asarray(pt))
+
+
+# ---------------------------------------------------------------------------
+# Sketch re-plan
+# ---------------------------------------------------------------------------
+
+def test_sketch_equals_full_when_candidates_cover_all_blocks():
+    """With the plan width at full nkb, ``C·F >= nkb`` makes every
+    valid block a candidate and the two-level pass degenerates to the
+    exact re-plan bitwise (the bisection threshold is a function of
+    the live score multiset only)."""
+    b, kv, s, d, blk = 2, 2, 64, 8, 16
+    keys = _rand(jax.random.PRNGKey(10), (b, 50, kv, d))
+    for summary in ("fp32", "int8"):
+        plan, cache, pos = _grow(summary, keys, s, blk)
+        q = _rand(jax.random.PRNGKey(11), (b, kv, 2, d))
+        fi, fc, ft = full_replan(q, cache, pos, topk_k=8, k_block=blk,
+                                 plan_blocks=s // blk)
+        si, sc_, st_ = sketch_replan(q, cache, plan, pos, topk_k=8,
+                                     k_block=blk, sketch_factor=2)
+        np.testing.assert_array_equal(np.asarray(fi), np.asarray(si))
+        np.testing.assert_array_equal(np.asarray(fc), np.asarray(sc_))
+        np.testing.assert_array_equal(np.asarray(ft), np.asarray(st_))
+
+
+def test_sketch_respects_plan_width_and_validity():
+    """A narrow plan (P < nkb): the sketch pass keeps counts within P
+    and never selects a block past a slot's valid prefix — including a
+    freshly re-claimed (shorter) slot."""
+    b, kv, s, d, blk, p = 2, 2, 128, 8, 16, 3
+    keys = _rand(jax.random.PRNGKey(12), (b, 100, kv, d))
+    plan, cache, pos = _grow("int8", keys, s, blk, resets={60: 1})
+    q = _rand(jax.random.PRNGKey(13), (b, kv, 2, d))
+    plan = {**plan, "kv_indices": plan["kv_indices"][..., :p]}
+    si, sc_, st_ = sketch_replan(q, cache, plan, pos, topk_k=8,
+                                 k_block=blk, sketch_factor=4)
+    assert si.shape == (b, kv, p)
+    assert bool((sc_ <= p).all()) and bool((sc_ >= 1).all())
+    nvalid = (np.asarray(pos) // blk) + 1                     # (B,)
+    live = np.arange(p)[None, None, :] < np.asarray(sc_)[..., None]
+    assert bool((np.asarray(si) < nvalid[:, None, None])[live].all())
+    assert bool(jnp.isfinite(st_).all())
+
+
+def test_sketch_geometry_static_arithmetic():
+    assert sketch_geometry(32, 8, 4) == (4, 8, 2, 8)
+    assert sketch_geometry(32, 32, 4) == (4, 8, 8, 32)   # full coverage
+    assert sketch_geometry(30, 8, 4) == (3, 10, 3, 9)    # divisor fallback
+    assert sketch_geometry(8, 3, 16) == (8, 1, 1, 8)     # factor clamped
+
+
+# ---------------------------------------------------------------------------
+# Mixed-step partial re-plan (gather-based, per-slot cond)
+# ---------------------------------------------------------------------------
+
+def test_mixed_step_matches_per_slot_reference():
+    """A step mixing triggered and untriggered slots must equal running
+    each slot's own branch in isolation — the gather-based partial
+    re-plan semantics the serving scan relies on."""
+    b, kv, s, d, blk = 3, 2, 64, 8, 16
+    keys = _rand(jax.random.PRNGKey(14), (b, 40, kv, d))
+    plan, cache, pos = _grow("fp32", keys, s, blk)
+    plan = {**plan, "step": jnp.asarray([0, 1, 2], jnp.int32)}
+    q = _rand(jax.random.PRNGKey(15), (b, kv, 2, d))
+    new, thr = jax.jit(
+        lambda pl, qq: decode_plan_update(pl, qq, cache, pos, topk_k=8,
+                                          k_block=blk, replan_interval=2)
+    )(plan, q)
+    for i in range(b):
+        one = lambda a: a[i:i + 1]
+        if i % 2 == 0:       # steps 0 and 2 are on the re-plan beat
+            ri, rc, rt = full_replan(one(q), one(cache), one(pos),
+                                     topk_k=8, k_block=blk,
+                                     plan_blocks=s // blk)
+        else:
+            sub = {k: one(v) for k, v in plan.items()}
+            ri, rc, rt = incremental_plan(one(q), one(cache), sub,
+                                          one(pos), topk_k=8, k_block=blk)
+        np.testing.assert_array_equal(np.asarray(new["kv_indices"][i]),
+                                      np.asarray(ri[0]),
+                                      err_msg=f"slot {i}")
+        np.testing.assert_array_equal(np.asarray(new["kv_counts"][i]),
+                                      np.asarray(rc[0]))
+        np.testing.assert_array_equal(np.asarray(thr[i]),
+                                      np.asarray(rt[0]))
+
+
+def test_fetch_stats_per_slot_replan_vector():
+    """The fetch-byte pin for the partial re-plan: a (B,) replan vector
+    charges full-replan bytes only to triggering slots, a broadcast
+    scalar reproduces the blended total exactly, and the mixed step
+    sits strictly between all-incremental and all-full."""
+    cnt = np.array([[2, 3], [1, 1]])
+    pos = np.array([63, 63])
+    kw = dict(k_block=16, d=8, nkb=4)
+    full = decode_fetch_stats(cnt, pos, replan=1.0, **kw)
+    incr = decode_fetch_stats(cnt, pos, replan=0.0, **kw)
+    mixed = decode_fetch_stats(cnt, pos, replan=np.array([1.0, 0.0]), **kw)
+    k_tile = 16 * 8 * 4
+    sum_head = summary_bytes(4, 8)
+    full_slot0 = 4 * 2 * k_tile                         # 4 valid blocks
+    incr_slot1 = sum_head * 2 + (1 + 1) * k_tile
+    assert mixed["plan_fetch_bytes_step"] == full_slot0 + incr_slot1
+    assert (incr["plan_fetch_bytes_step"]
+            < mixed["plan_fetch_bytes_step"]
+            < full["plan_fetch_bytes_step"])
+    half_v = decode_fetch_stats(cnt, pos, replan=np.array([0.5, 0.5]), **kw)
+    half_s = decode_fetch_stats(cnt, pos, replan=0.5, **kw)
+    assert (half_v["plan_fetch_bytes_step"]
+            == half_s["plan_fetch_bytes_step"])
+
+
+# ---------------------------------------------------------------------------
+# Dtype-/mode-aware fetch accounting
+# ---------------------------------------------------------------------------
+
+def test_fetch_stats_summary_dtype_and_sketch_bytes():
+    """The ISSUE's headline shape (S=4096, blk=128, d=64, b=kv=2, P=8):
+    fp32/exact reproduces the committed bench baseline 4194304 B;
+    int8+sketch cuts plan-side bytes >= 3x at interval 1."""
+    cnt = np.full((2, 2), 8)
+    pos = np.full(2, 4095)
+    kw = dict(k_block=128, d=64, nkb=32)
+    fp = decode_fetch_stats(cnt, pos, replan=1.0, **kw)
+    assert fp["plan_fetch_bytes_step"] == 4194304
+    i8s = decode_fetch_stats(cnt, pos, replan=1.0, summary="int8",
+                             replan_mode="sketch", plan_blocks=8, **kw)
+    assert i8s["plan_fetch_bytes_step"] == \
+        summary_bytes(32, 64, "int8") * 4 + 4 * 8 * 128 * 64 * 4
+    assert fp["plan_fetch_bytes_step"] / i8s["plan_fetch_bytes_step"] >= 3.0
+    # incremental summary reads shrink by the dtype ratio
+    fpi = decode_fetch_stats(cnt, pos, replan=0.0, **kw)
+    i8i = decode_fetch_stats(cnt, pos, replan=0.0, summary="int8", **kw)
+    assert (fpi["plan_fetch_bytes_incremental"]
+            - i8i["plan_fetch_bytes_incremental"]
+            == (summary_bytes(32, 64) - summary_bytes(32, 64, "int8")) * 4)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end model routing
+# ---------------------------------------------------------------------------
+
+def _greedy_logits(cfg, params, toks, max_len):
+    cache = dec.init_cache(cfg, batch=toks.shape[0], max_len=max_len)
+    outs = []
+    for t in range(toks.shape[1]):
+        lg, cache = dec.serve_step(params, cfg, cache, toks[:, t:t + 1],
+                                   jnp.int32(t))
+        outs.append(lg[:, 0])
+    return jnp.stack(outs, axis=1), cache
+
+
+def test_sata_decode_int8_replan1_matches_dense():
+    """int8 backend + exact replan=1 end-to-end: the full re-plan never
+    consults the summaries, so the route stays dense-top-k exact."""
+    base = dataclasses.replace(SMOKE["qwen3-4b"], topk_impl="bisect")
+    cfg_d = dataclasses.replace(base, sata_decode="off")
+    cfg_s = dataclasses.replace(base, sata_decode="on",
+                                sata_decode_block=8, sata_decode_replan=1,
+                                sata_summary="int8")
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg_d)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, base.vocab_size, (2, 6)), jnp.int32)
+    ld, _ = _greedy_logits(cfg_d, params, toks, max_len=16)
+    ls, cache = _greedy_logits(cfg_s, params, toks, max_len=16)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(ls),
+                               rtol=2e-5, atol=2e-5)
+    plan = cache["kv"]["plan"]
+    assert plan["k_min"].dtype == jnp.int8 and "k_scale" in plan
+
+
+def test_sata_decode_int8_sketch_route_runs():
+    """The approximate stack end-to-end (int8 summaries + sketch
+    re-plan + incremental steps): finite logits, plan width respected,
+    per-slot step counters advancing."""
+    cfg = dataclasses.replace(SMOKE["qwen3-4b"], topk_impl="bisect",
+                              sata_decode="on", sata_decode_block=8,
+                              sata_decode_blocks=2, sata_decode_replan=3,
+                              sata_summary="int8",
+                              sata_replan_mode="sketch",
+                              sata_sketch_factor=2)
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 7)), jnp.int32)
+    lg, cache = _greedy_logits(cfg, params, toks, max_len=16)
+    assert bool(jnp.isfinite(lg).all())
+    plan = cache["kv"]["plan"]
+    assert int(jnp.max(plan["kv_counts"])) <= 2
+    assert int(plan["step"][0, 0]) == 7          # (L, B) per-slot steps
+
+
+def test_prefill_handoff_seeds_int8_summaries():
+    """``plan_from_prefill(summary="int8")`` quantizes the from-scratch
+    bounds one-shot: conservative vs the fp32 seed, and the plan rows
+    (which come from the exact tail re-plan) are bitwise unchanged."""
+    b, kv, s, d, blk = 2, 2, 32, 8, 8
+    keys = _rand(jax.random.PRNGKey(16), (b, s, kv, d))
+    pos = jnp.asarray([20, 11], jnp.int32)
+    q = _rand(jax.random.PRNGKey(17), (b, kv, 2, d))
+    sf = plan_from_prefill(keys, q, pos, topk_k=8, k_block=blk)
+    s8 = plan_from_prefill(keys, q, pos, topk_k=8, k_block=blk,
+                           summary="int8")
+    np.testing.assert_array_equal(np.asarray(sf["kv_indices"]),
+                                  np.asarray(s8["kv_indices"]))
+    np.testing.assert_array_equal(np.asarray(sf["kv_counts"]),
+                                  np.asarray(s8["kv_counts"]))
+    _assert_contains(s8, sf["k_min"], sf["k_max"])
+    assert int(s8["step"][0]) == 1
