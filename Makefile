@@ -4,7 +4,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test dev-deps bench bench-select bench-decode serve-smoke \
-	roofline-kernel check-regression
+	serve-smoke-faults roofline-kernel check-regression
 
 dev-deps:
 	-pip install -r requirements-dev.txt
@@ -42,6 +42,14 @@ serve-smoke:
 	python examples/serve_topk.py --paged
 	python examples/serve_topk.py --summary int8 --replan-mode sketch
 	python examples/serve_topk.py --shared-prefix
+
+# Fault-injection smoke: seeded squeeze/preempt/defer schedule plus a
+# hard pool squeeze (forces >=2 host-swap preemptions) and a mid-serve
+# crash, with the allocator invariant audit on throughout.  Asserts the
+# restored outputs are bitwise equal to the fault-free run with zero
+# re-prefilled tokens and zero cold re-plans.
+serve-smoke-faults:
+	python examples/serve_topk.py --faults 0
 
 roofline-kernel:
 	python -m repro.launch.roofline --kernel

@@ -185,6 +185,7 @@ def bench_decode() -> List[Row]:
     rows += _bench_replan_traffic()
     rows += _bench_handoff()
     rows += _bench_shared_prefix()
+    rows += _bench_fault_swap()
     return rows
 
 
@@ -428,4 +429,53 @@ def _bench_shared_prefix() -> List[Row]:
         ("decode/shared_prefix/serve_wall", 0.0,
          f"cache-on {us_on:.0f}us vs cache-off {us_off:.0f}us serve "
          f"wall (jit-inclusive, informational)"),
+    ]
+
+
+def _bench_fault_swap() -> List[Row]:
+    """Preemption policy on the reduced serving model: a deterministic
+    pool squeeze forces preemptions, served once with host-swap (pages
+    + plan state round-trip through host memory, zero re-prefill) and
+    once with the legacy requeue fallback (host budget = 0: outputs
+    discarded, prompt re-prefilled).  Both must stay bitwise equal to
+    the fault-free run — the gate pins the salvage/discard counters and
+    equality flags exactly; restore wall is informational."""
+    import dataclasses
+
+    from repro.configs.archs import SMOKE
+    from repro.launch.faults import FaultPlan
+    from repro.launch.serve import serve
+
+    cfg = dataclasses.replace(
+        SMOKE["qwen3-4b"], topk_impl="bisect", sata_decode="on",
+        sata_decode_block=8, sata_decode_replan=4,
+        kv_cache_layout="paged", kv_pool_pages=6)
+    kw = dict(smoke=True, n_requests=4, batch_slots=2, gen_len=12,
+              max_len=32, prompt_len=6)
+    base = serve("qwen3-4b", cfg=cfg, **kw)
+    faults = FaultPlan().pool_squeeze(2, 3).pool_restore(14)
+    swap = serve("qwen3-4b", cfg=cfg, faults=faults, **kw)
+    requeue = serve("qwen3-4b", cfg=cfg, faults=faults,
+                    host_swap_bytes=0, **kw)
+    s, r = swap["page_occupancy"], requeue["page_occupancy"]
+    eq_s = swap["outputs"] == base["outputs"]
+    eq_r = requeue["outputs"] == base["outputs"]
+    restore_us = s["swap_restore_wall_s"] * 1e6 \
+        / max(s["swap_restores"], 1)
+    return [
+        ("decode/fault_swap/salvage", 0.0,
+         f"{s['tokens_salvaged']} tokens salvaged over "
+         f"{s['host_swaps']} host-swaps ({s['swap_restores']} restores, "
+         f"re_prefill_tokens={s['re_prefill_tokens']}, "
+         f"cold_replans={s['swap_cold_replans']}), "
+         f"outputs_equal={eq_s}"),
+        ("decode/fault_swap/requeue_baseline", 0.0,
+         f"requeue discarded {r['requeue_tokens_discarded']} tokens "
+         f"over {r['requeue_preemptions']} preemptions, "
+         f"re_prefill_tokens={r['re_prefill_tokens']}, "
+         f"outputs_equal={eq_r}"),
+        ("decode/fault_swap/restore_latency", 0.0,
+         f"swap-in restore {restore_us:.0f}us/restore mean, host-swap "
+         f"peak {s['host_swap_bytes_peak']} B "
+         f"(jit-inclusive, informational)"),
     ]

@@ -61,6 +61,11 @@ EXACT_PATTERNS = [
     ("tokens_saved", r"saved (\d+)/"),
     ("hits", r"\((\d+)/\d+ hits\)"),
     ("cow_copies", r"(\d+) CoW copies"),
+    ("tokens_salvaged", r"(\d+) tokens salvaged"),
+    ("host_swaps", r"over (\d+) host-swaps"),
+    ("re_prefill_tokens", r"re_prefill_tokens=(\d+)"),
+    ("cold_replans", r"cold_replans=(\d+)"),
+    ("requeue_discarded", r"requeue discarded (\d+) tokens"),
     ("quad_buffer", r"quad_SxS_buffer=(True|False)"),
     ("outputs_equal", r"outputs_equal=(True|False)"),
 ]

@@ -6,13 +6,21 @@ plan banks against dense decode over the whole prefix, and (with
 reservation, identical outputs, pool exhaustion absorbed as
 backpressure instead of a shape error.
 
+With ``--faults SEED`` the demo turns adversarial: a deterministic
+squeeze/crash schedule forces host-swap preemptions and a mid-serve
+crash, the allocator's invariant audit stays on throughout, and the
+demo asserts the restored outputs are bitwise equal to the fault-free
+run with zero re-prefilled tokens and zero cold re-plans.
+
 Run:  PYTHONPATH=src python examples/serve_topk.py
           [--paged] [--summary int8] [--replan-mode sketch]
+          [--faults SEED]
 """
 import argparse
 import dataclasses
 
 from repro.configs.archs import SMOKE
+from repro.launch.faults import FaultPlan
 from repro.launch.serve import serve
 
 
@@ -40,6 +48,11 @@ def main():
                          "when the plan tolerates a missed block until "
                          "the next re-plan, NOT for bitwise-exact "
                          "serving)")
+    ap.add_argument("--faults", type=int, default=None, metavar="SEED",
+                    help="fault-injection scenario: a deterministic "
+                         "squeeze + crash schedule forces host-swap "
+                         "preemptions; asserts bitwise-equal restored "
+                         "outputs with the invariant audit on")
     args = ap.parse_args()
     cfg = dataclasses.replace(
         SMOKE["qwen3-4b"],
@@ -50,6 +63,8 @@ def main():
         sata_summary=args.summary,
         sata_replan_mode=args.replan_mode,
     )
+    if args.faults is not None:
+        return faults_demo(cfg, args.faults)
     if args.shared_prefix:
         return shared_prefix_demo(cfg)
     if args.paged:
@@ -89,6 +104,42 @@ def main():
     print(f"[serve_topk] request {first} tokens: {out['outputs'][first]}")
     assert all(len(v) == 48 for v in out["outputs"].values())
     assert f["kv_fetch_tiles_plan"] < f["kv_fetch_tiles_dense"]
+
+
+def faults_demo(cfg, seed):
+    """Adversarial serving: a deterministic fault schedule — a hard
+    pool squeeze (forces host-swap preemptions), seeded deferrals and
+    forced preemptions, and a mid-serve crash — against a fault-free
+    reference.  Host-swap restores must reproduce the reference
+    bitwise with ZERO re-prefilled tokens and zero cold re-plans, and
+    the allocator invariant audit runs after every mutation."""
+    cfg = dataclasses.replace(cfg, sata_decode_replan=4,
+                              kv_cache_layout="paged", kv_pool_pages=6)
+    kw = dict(smoke=True, n_requests=4, batch_slots=2, gen_len=12,
+              max_len=32, prompt_len=6)
+    base = serve("qwen3-4b", cfg=cfg, **kw)
+    faults = (FaultPlan.seeded(seed, steps=24, n_events=3,
+                               max_squeeze=2, slots=2)
+              .pool_squeeze(2, 3).pool_restore(14)   # forces ≥2 swaps
+              .crash_step(20))
+    print(f"[serve_topk] fault schedule (seed {seed}):")
+    print(faults.describe())
+    out = serve("qwen3-4b", cfg=cfg, faults=faults, audit_pages=True,
+                **kw)
+    o = out["page_occupancy"]
+    print(f"[serve_topk] {o['host_swaps']} host-swaps "
+          f"({o['tokens_salvaged']} tokens salvaged, {o['swap_restores']} "
+          f"restores, re_prefill_tokens={o['re_prefill_tokens']}, "
+          f"cold_replans={o['swap_cold_replans']}), "
+          f"{o['requeue_preemptions']} requeues, {o['crashes']} crash "
+          f"recovered, {o['audits_run']} invariant audits")
+    equal = out["outputs"] == base["outputs"]
+    print(f"[serve_topk] outputs bitwise equal to fault-free run: {equal}")
+    assert equal, "fault recovery changed outputs"
+    assert o["host_swaps"] >= 2, "schedule failed to force 2 preemptions"
+    assert o["re_prefill_tokens"] == 0 and o["swap_cold_replans"] == 0
+    assert o["crashes"] == 1 and o["audits_run"] > 0
+    assert all(len(v) == 12 for v in out["outputs"].values())
 
 
 def shared_prefix_demo(cfg):

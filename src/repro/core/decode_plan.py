@@ -272,6 +272,41 @@ def release_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
     return {**plan, "active": plan["active"].at[ix].set(False)}
 
 
+# every per-slot plan field, in one place: host-swap preemption must
+# move the COMPLETE per-slot state (summaries whatever the backend,
+# selected blocks, beat phase, churn trigger, cumulative re-plan
+# counter, liveness) or the restored slot's decode diverges from the
+# never-preempted run
+PLAN_SLOT_FIELDS = ("k_min", "k_max", "k_scale", "k_zero", "kv_indices",
+                    "kv_counts", "step", "churn", "replans", "active")
+
+
+def capture_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
+                      ) -> Dict[str, np.ndarray]:
+    """Host (numpy) snapshot of one slot's complete plan state, for
+    host-swap preemption.  Works on layer-stacked states like
+    ``reset_plan_slot``; the dict round-trips bitwise through
+    ``install_plan_slot`` (fp32/int8/int32/bool all copy exactly)."""
+    ix = (slice(None),) * batch_axis + (slot,)
+    return {name: np.asarray(plan[name][ix])
+            for name in PLAN_SLOT_FIELDS if name in plan}
+
+
+def install_plan_slot(plan: PlanState, slot, saved: Dict[str, np.ndarray],
+                      *, batch_axis: int = 0) -> PlanState:
+    """Reset-free reinstall of a captured slot snapshot: every saved
+    field lands bitwise at ``slot``, including ``step`` (the re-plan
+    beat phase — restoring it is what makes the first post-restore
+    step incremental instead of a cold full re-plan) and ``active``
+    (captured live, so the slot resumes aging immediately)."""
+    ix = (slice(None),) * batch_axis + (slot,)
+    out = dict(plan)
+    for name, val in saved.items():
+        out[name] = plan[name].at[ix].set(
+            jnp.asarray(val, plan[name].dtype))
+    return out
+
+
 def update_block_summaries(plan: PlanState, k_new: jax.Array,
                            pos: jax.Array, *, k_block: int) -> PlanState:
     """Absorb one appended key per slot into its block's min/max bounds.

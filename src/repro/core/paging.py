@@ -60,12 +60,19 @@ to equal the page size (plan blocks ARE pages).
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 OVERFLOW_PAGE = 0
+
+# Host-swap payload gather/scatter callbacks: the allocator decides
+# WHICH physical pages move (host-side policy), the serving driver owns
+# HOW their device rows move (``models.decode.gather_phys_pages`` /
+# ``scatter_phys_pages``).  Payloads are opaque to the allocator.
+GatherFn = Callable[[List[int]], Any]
+ScatterFn = Callable[[List[int], Any], None]
 
 
 def logical_kv_view(pages: jnp.ndarray, page_table: jnp.ndarray
@@ -132,7 +139,7 @@ class PageAllocator:
     device page table (unmapped = OVERFLOW_PAGE)."""
 
     def __init__(self, n_pages: int, batch_slots: int, max_pages: int,
-                 page: int):
+                 page: int, audit: bool = False):
         assert n_pages >= 2, "pool needs >= 1 usable page + overflow"
         self.n_pages = int(n_pages)
         self.page = int(page)
@@ -149,6 +156,23 @@ class PageAllocator:
         # therefore immutable (writes must CoW first).
         self.ref = np.zeros(n_pages, np.int64)
         self.shared_pages_peak = 0
+        # pages withheld by injected external pressure (fault
+        # injection's ``pool_squeeze``) — out of the free list but
+        # referenced by nobody
+        self.squeezed: List[int] = []
+        # outstanding host-swap handles: each resident (shared) page a
+        # handle pins holds one reference until ``swap_in`` releases it
+        self.swapped: List[Dict[str, Any]] = []
+        # invariant audit (``check_invariants``) after every mutation —
+        # the debug flag tests and serve-smoke keep on by default
+        self.audit = bool(audit)
+        self.audit_trie: Optional["PrefixCache"] = None
+        self.audits_run = 0
+
+    def _audit(self) -> None:
+        if self.audit:
+            self.check_invariants()
+            self.audits_run += 1
 
     @property
     def free_pages(self) -> int:
@@ -156,7 +180,7 @@ class PageAllocator:
 
     @property
     def pages_in_use(self) -> int:
-        return (self.n_pages - 1) - len(self.free)
+        return (self.n_pages - 1) - len(self.free) - len(self.squeezed)
 
     @property
     def shared_pages(self) -> int:
@@ -180,6 +204,7 @@ class PageAllocator:
         need = pos // self.page + 1
         while self.n_mapped[slot] < need:
             if not self.free:
+                self._audit()
                 return False
             phys = self.free.pop()
             self.ref[phys] = 1
@@ -187,6 +212,7 @@ class PageAllocator:
             self.n_mapped[slot] += 1
         self.pages_in_use_peak = max(self.pages_in_use_peak,
                                      self.pages_in_use)
+        self._audit()
         return True
 
     def map_shared(self, slot: int, phys_pages: List[int]) -> None:
@@ -202,13 +228,22 @@ class PageAllocator:
         self.n_mapped[slot] = len(phys_pages)
         self.shared_pages_peak = max(self.shared_pages_peak,
                                      self.shared_pages)
+        self._audit()
 
-    def deref(self, phys: int) -> None:
-        """Drop one reference; the page recycles at zero."""
+    def _deref(self, phys: int) -> None:
+        """Reference drop without the audit hook — for multi-page
+        mutations (``free_slot``, ``swap_out``) whose intermediate
+        states are legitimately inconsistent; they audit once at the
+        end."""
         assert phys != OVERFLOW_PAGE and self.ref[phys] > 0, phys
         self.ref[phys] -= 1
         if self.ref[phys] == 0:
             self.free.append(int(phys))
+
+    def deref(self, phys: int) -> None:
+        """Drop one reference; the page recycles at zero."""
+        self._deref(phys)
+        self._audit()
 
     def ensure_writable(self, slot: int, pos: int
                         ) -> Tuple[bool, Optional[Tuple[int, int]]]:
@@ -233,6 +268,7 @@ class PageAllocator:
         self.ref[src] -= 1                       # shared pages never hit 0
         self.pages_in_use_peak = max(self.pages_in_use_peak,
                                      self.pages_in_use)
+        self._audit()
         return True, (src, dst)
 
     def free_slot(self, slot: int) -> int:
@@ -244,11 +280,194 @@ class PageAllocator:
         but a recycled physical page must not stay visible through an
         old slot's table row)."""
         n = int(self.n_mapped[slot])
-        for lp in range(n):
-            self.deref(int(self.table[slot, lp]))
+        phys = [int(self.table[slot, lp]) for lp in range(n)]
         self.table[slot, :] = OVERFLOW_PAGE
         self.n_mapped[slot] = 0
+        for p in phys:
+            self._deref(p)
+        self._audit()
         return n
+
+    # --- fault injection: external pool pressure ----------------------
+
+    def squeeze(self, n: int) -> int:
+        """Withhold up to ``n`` free pages (injected external memory
+        pressure): they leave the free list unreferenced, so the pool
+        looks that much smaller to admission, CoW, and append until
+        ``unsqueeze`` returns them.  Returns pages actually taken."""
+        taken = 0
+        while taken < n and self.free:
+            self.squeezed.append(self.free.pop())
+            taken += 1
+        self._audit()
+        return taken
+
+    def unsqueeze(self, n: Optional[int] = None) -> int:
+        """Return squeezed pages to the free list (all by default)."""
+        back = 0
+        while self.squeezed and (n is None or back < n):
+            self.free.append(self.squeezed.pop())
+            back += 1
+        self._audit()
+        return back
+
+    # --- host-swap preemption -----------------------------------------
+
+    def swap_out(self, slot: int, gather: GatherFn) -> Dict[str, Any]:
+        """Detach ``slot``'s pages for host-swap preemption and return
+        the swap handle that ``swap_in`` re-admits from.
+
+        Private pages (``ref == 1``) have their device rows gathered to
+        host through ``gather(phys_list)`` (the payload is opaque to
+        the allocator) and drop back to the free pool; **shared pages
+        are not swapped** — the trie's or other slots' refcounts keep
+        them resident, and the handle pins one reference per shared
+        page so eviction can never recycle a page a swapped request
+        still needs.  The slot's table row resets; re-admission is
+        ``swap_in``."""
+        n = int(self.n_mapped[slot])
+        assert n > 0, "swap_out on a slot with no mapped pages"
+        phys = [int(self.table[slot, lp]) for lp in range(n)]
+        resident = np.full(n, -1, np.int64)
+        priv_lp: List[int] = []
+        priv_phys: List[int] = []
+        for lp, p in enumerate(phys):
+            if self.ref[p] > 1:
+                resident[lp] = p     # slot's ref transfers to the handle
+            else:
+                priv_lp.append(lp)
+                priv_phys.append(p)
+        chunks = [(priv_lp, gather(priv_phys))] if priv_phys else []
+        self.table[slot, :] = OVERFLOW_PAGE
+        self.n_mapped[slot] = 0
+        for p in priv_phys:
+            self._deref(p)
+        handle = {"n_pages": n, "resident": resident, "chunks": chunks}
+        self.swapped.append(handle)
+        self._audit()
+        return handle
+
+    def swap_to_full(self, handle: Dict[str, Any], gather: GatherFn
+                     ) -> None:
+        """Convert a handle's resident (shared) pages into host payload
+        too — the crash path: the device pool is about to be lost, so
+        refcount residency can no longer keep those pages alive.  After
+        this the handle restores entirely from host memory (``swap_in``
+        against a fresh allocator)."""
+        resident = handle["resident"]
+        res_lp = [lp for lp in range(handle["n_pages"]) if resident[lp] >= 0]
+        if not res_lp:
+            return
+        res_phys = [int(resident[lp]) for lp in res_lp]
+        handle["chunks"].append((res_lp, gather(res_phys)))
+        resident[:] = -1
+        for p in res_phys:
+            self._deref(p)
+        self._audit()
+
+    def swap_pages_needed(self, handle: Dict[str, Any]) -> int:
+        """Free pages ``swap_in`` must allocate for this handle (its
+        payload-backed logical pages; resident pages just remap)."""
+        return sum(len(lps) for lps, _ in handle["chunks"])
+
+    def swap_in(self, slot: int, handle: Dict[str, Any],
+                scatter: ScatterFn) -> bool:
+        """Re-admit a swapped request into (empty) ``slot``: resident
+        shared pages remap at their logical positions (the handle's
+        pinned reference transfers back to the slot's table), payload
+        pages land in freshly allocated physical pages via
+        ``scatter(new_phys, payload)``.  Returns False — nothing
+        mutated — when the pool cannot back the payload pages yet (the
+        driver defers re-admission, exactly like a deferred claim)."""
+        assert any(h is handle for h in self.swapped), \
+            "unknown or already-restored handle"
+        if len(self.free) < self.swap_pages_needed(handle):
+            return False
+        assert self.n_mapped[slot] == 0, "swap_in needs an empty slot"
+        resident = handle["resident"]
+        for lp in range(handle["n_pages"]):
+            if resident[lp] >= 0:
+                self.table[slot, lp] = int(resident[lp])
+        for lps, payload in handle["chunks"]:
+            fresh = []
+            for lp in lps:
+                q = self.free.pop()
+                self.ref[q] = 1
+                self.table[slot, lp] = q
+                fresh.append(q)
+            scatter(fresh, payload)
+        self.n_mapped[slot] = handle["n_pages"]
+        self.swapped = [h for h in self.swapped if h is not handle]
+        self.pages_in_use_peak = max(self.pages_in_use_peak,
+                                     self.pages_in_use)
+        self._audit()
+        return True
+
+    # --- invariant audit ----------------------------------------------
+
+    def check_invariants(self, trie: Optional["PrefixCache"] = None
+                         ) -> None:
+        """Allocator-state audit — raises ``AssertionError`` on the
+        first violated invariant:
+
+        * the overflow page is never referenced, never free, never
+          squeezed, and never appears in a mapped table region;
+        * free / squeezed lists are duplicate-free and disjoint, and a
+          page sits on one of them iff its refcount is zero;
+        * every page's refcount equals exactly the references the
+          bookkeeping can name: slot table entries in mapped regions
+          + swap handles' resident pins + the prefix trie's retention
+          (in particular no writable ``ref == 1`` page can be mapped
+          by two slots — a double mapping forces ``ref >= 2``, i.e.
+          shared and write-protected, or fails here);
+        * table entries beyond ``n_mapped`` are exactly the overflow
+          page (no stale mapping survives a free/swap);
+        * every trie node's page is live (``ref > 0``).
+
+        ``trie`` defaults to ``audit_trie`` (auto-wired by
+        ``PrefixCache``)."""
+        trie = trie if trie is not None else self.audit_trie
+        assert self.ref[OVERFLOW_PAGE] == 0, \
+            "overflow page acquired a reference"
+        free_set = set(self.free)
+        assert len(free_set) == len(self.free), "free list has duplicates"
+        sq_set = set(self.squeezed)
+        assert len(sq_set) == len(self.squeezed), \
+            "squeezed list has duplicates"
+        assert not (free_set & sq_set), "page both free and squeezed"
+        assert OVERFLOW_PAGE not in free_set | sq_set, \
+            "overflow page entered the free/squeezed lists"
+        expected = np.zeros(self.n_pages, np.int64)
+        for slot in range(self.table.shape[0]):
+            m = int(self.n_mapped[slot])
+            for lp in range(self.max_pages):
+                p = int(self.table[slot, lp])
+                if lp < m:
+                    assert p != OVERFLOW_PAGE, \
+                        f"slot {slot} maps overflow at logical page {lp}"
+                    expected[p] += 1
+                else:
+                    assert p == OVERFLOW_PAGE, \
+                        f"stale table entry {p} at slot {slot} lp {lp}"
+        for h in self.swapped:
+            for p in h["resident"]:
+                if p >= 0:
+                    expected[int(p)] += 1
+        if trie is not None:
+            for p in trie.retained_pages():
+                assert self.ref[p] > 0, f"trie retains dead page {p}"
+                expected[p] += 1
+        bad = np.nonzero(expected != self.ref)[0]
+        assert bad.size == 0, (
+            f"refcount mismatch at pages {bad.tolist()}: counted "
+            f"{expected[bad].tolist()} references, ref say "
+            f"{self.ref[bad].tolist()}")
+        for p in range(1, self.n_pages):
+            idle = self.ref[p] == 0
+            assert (p in free_set or p in sq_set) == idle, (
+                f"page {p}: ref {int(self.ref[p])} but "
+                f"{'on' if not idle else 'missing from'} the "
+                f"free/squeezed lists")
 
     def stats(self, *, row_bytes: int, layers: int = 1) -> Dict[str, int]:
         """Pool occupancy in bytes.  ``row_bytes`` = bytes of ONE token
@@ -332,18 +551,28 @@ class PrefixCache:
         self.misses = 0
         self.tokens_saved = 0
         self.evictions = 0
+        # the allocator's invariant audit counts trie retention —
+        # wire this cache in so every audit sees the full refcount story
+        alloc.audit_trie = self
 
     @property
     def cached_pages(self) -> int:
-        n = 0
+        return len(self.retained_pages())
+
+    def retained_pages(self) -> List[int]:
+        """Physical pages the trie holds one retention reference on —
+        one entry per node (a page can back several nodes only if it
+        was registered at different chain depths, which the chained
+        digest prevents; each node pinned exactly one ref)."""
+        out: List[int] = []
         stack = [self.root]
         while stack:
             node = stack.pop()
             if node is not self.root:
-                n += 1
+                out.append(node.phys)
             stack.extend(node.children.values())
             stack.extend(node.partials)
-        return n
+        return out
 
     def _touch(self, node: _TrieNode) -> None:
         self._clock += 1
@@ -440,6 +669,7 @@ class PrefixCache:
         self._touch(node)
         self.alloc.shared_pages_peak = max(self.alloc.shared_pages_peak,
                                            self.alloc.shared_pages)
+        self.alloc._audit()
         return added
 
     def evict(self, need_pages: int) -> int:

@@ -1,0 +1,124 @@
+"""Deterministic fault injection for the paged serving loop.
+
+A ``FaultPlan`` is a seeded, fully explicit schedule of adverse events
+keyed on the serving loop's step counter, so every backpressure branch
+in ``launch.serve`` — boundary stall, CoW stall, admission deferral,
+preemption (host-swap or requeue), mid-serve crash + restart from
+swapped host state — is *drivable from tests* instead of hoped-for
+emergent behavior.  The events:
+
+  pool_squeeze(step, pages)   withhold free pages (external memory
+                              pressure) — ``PageAllocator.squeeze``
+  pool_restore(step, pages)   return squeezed pages (None = all)
+  preempt(step, slot)         force-preempt a slot (None = the loop's
+                              own victim policy picks)
+  defer_admission(step)       skip the claim loop for one iteration
+  crash_step(step)            drop the device cache + allocator; the
+                              loop swaps all live state to host first
+                              and restores from the swap handles
+
+Determinism is the point: the schedule is data, the serving loop
+replays it identically every run, and the headline property — serve
+outputs bitwise equal to the fault-free run — is assertable.
+``FaultPlan.seeded`` derives a schedule from a PRNG seed for
+property-style coverage; the schedule it builds is still fully
+deterministic given the seed.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+Event = Tuple[str, Optional[int]]
+
+
+class FaultPlan:
+    """Builder for a step-keyed fault schedule.  All mutators return
+    ``self`` so schedules chain:
+
+        FaultPlan().pool_squeeze(4, pages=6).pool_restore(12).crash_step(20)
+    """
+
+    def __init__(self) -> None:
+        self._events: Dict[int, List[Event]] = {}
+
+    def _add(self, step: int, kind: str, arg: Optional[int]) -> "FaultPlan":
+        assert step >= 0, step
+        self._events.setdefault(int(step), []).append((kind, arg))
+        return self
+
+    def pool_squeeze(self, step: int, pages: int) -> "FaultPlan":
+        return self._add(step, "pool_squeeze", int(pages))
+
+    def pool_restore(self, step: int,
+                     pages: Optional[int] = None) -> "FaultPlan":
+        return self._add(step, "pool_restore",
+                         None if pages is None else int(pages))
+
+    def preempt(self, step: int, slot: Optional[int] = None) -> "FaultPlan":
+        return self._add(step, "preempt",
+                         None if slot is None else int(slot))
+
+    def defer_admission(self, step: int) -> "FaultPlan":
+        return self._add(step, "defer_admission", None)
+
+    def crash_step(self, step: int) -> "FaultPlan":
+        return self._add(step, "crash_step", None)
+
+    def at(self, step: int) -> List[Event]:
+        """Events scheduled for this loop step (empty list if none)."""
+        return self._events.get(int(step), [])
+
+    @property
+    def empty(self) -> bool:
+        return not self._events
+
+    @property
+    def has_crash(self) -> bool:
+        return any(kind == "crash_step"
+                   for evs in self._events.values() for kind, _ in evs)
+
+    @property
+    def last_step(self) -> int:
+        return max(self._events, default=-1)
+
+    def describe(self) -> str:
+        lines = []
+        for step in sorted(self._events):
+            for kind, arg in self._events[step]:
+                lines.append(f"step {step:4d}: {kind}"
+                             + (f"({arg})" if arg is not None else ""))
+        return "\n".join(lines) if lines else "(no faults)"
+
+    @classmethod
+    def seeded(cls, seed: int, *, steps: int, n_events: int = 6,
+               max_squeeze: int = 8, slots: Optional[int] = None,
+               allow_crash: bool = False) -> "FaultPlan":
+        """Random-but-reproducible schedule over ``steps`` loop steps:
+        squeeze/restore pairs, forced preemptions, admission deferrals,
+        and (``allow_crash``) at most one crash.  Every draw comes from
+        the seeded generator, so the same seed always yields the same
+        schedule — suitable for property tests and the seeded
+        serve-smoke."""
+        rng = np.random.default_rng(seed)
+        plan = cls()
+        crash_used = False
+        kinds = ["squeeze", "preempt", "defer"]
+        for _ in range(n_events):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            step = int(rng.integers(1, max(steps - 2, 2)))
+            if kind == "squeeze":
+                pages = int(rng.integers(1, max_squeeze + 1))
+                plan.pool_squeeze(step, pages)
+                plan.pool_restore(min(step + int(rng.integers(2, 8)),
+                                      steps - 1))
+            elif kind == "preempt":
+                slot = (None if slots is None
+                        else int(rng.integers(slots)))
+                plan.preempt(step, slot)
+            else:
+                plan.defer_admission(step)
+        if allow_crash and not crash_used:
+            plan.crash_step(int(rng.integers(2, max(steps - 2, 3))))
+        return plan

@@ -50,6 +50,31 @@ and the driver accumulates both kernel-side and *plan-side* traffic
 (full re-plans stream all cached K; the plan state's ``replans``
 counter makes the split exact even under ``sata_decode_replan="auto"``).
 
+**Fault tolerance** (paged): preemption prefers **host-swap** over
+requeue on the dense/moe families — the victim's private pages (K/V
+rows + per-page summary rows), page-table row, position, and complete
+decode-plan state move to host numpy (``PageAllocator.swap_out`` +
+``models.decode.gather_phys_pages`` / ``capture_plan_state``); shared
+trie pages stay resident under their refcounts.  Re-admission scatters
+the payload back into fresh pages and reinstalls the plan reset-free,
+so decode resumes at the exact position — **zero re-prefill, zero cold
+re-plans, bitwise equal to a never-preempted run** (the plan indexes
+*logical* blocks and carries its beat phase, so physical page identity
+never enters the math).  ``host_swap_bytes`` bounds the host-side
+budget (``0`` disables swap; a dry budget falls back to today's
+requeue-and-regenerate).  A ``FaultPlan`` (``launch/faults.py``)
+passed as ``serve(faults=...)`` drives every backpressure branch
+deterministically: pool squeezes/restores, forced preemptions,
+admission deferrals, and a mid-serve ``crash_step`` that swaps ALL
+live state to host, drops the device cache + allocator, and restores
+every in-flight request from its swap handle.
+``max_steps_per_request`` retires runaway slots gracefully as
+``timed_out``; a request preempted ``preempt_retry_limit`` times
+re-admits under a reserved-page guarantee (and is excluded from victim
+selection), so repeated-victim livelock is impossible.
+``audit_pages`` (default on) runs ``PageAllocator.check_invariants``
+after every allocator mutation.
+
 Usage (CPU, reduced arch):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
       --requests 8 --gen-len 16
@@ -66,6 +91,7 @@ import numpy as np
 
 from repro.configs.archs import ARCHS, SMOKE
 from repro.core.paging import PageAllocator, PrefixCache
+from repro.launch.faults import FaultPlan
 from repro.launch.mesh import make_local_mesh
 from repro.models import attention as attn
 from repro.models import decode as dec
@@ -98,15 +124,45 @@ def _plan_replans(cache: Dict) -> Optional[np.ndarray]:
         r.astype(np.float64).reshape(-1, r.shape[-1])
 
 
+def _pick_victim(stalled: List[int], slots: List[Optional[int]],
+                 outputs: Dict[int, List[int]], admit_seq: Dict[int, int],
+                 protected=()) -> int:
+    """Preemption victim policy: the stalled slot with the least
+    decoded progress loses the least salvageable work; ties break by
+    admission order — the YOUNGEST admission goes first (explicit,
+    where ``min`` over insertion order used to decide silently).
+    Slots holding protected requests (at the preemption retry limit)
+    are skipped unless every candidate is protected."""
+    cands = [i for i in stalled if slots[i] not in protected]
+    if not cands:
+        cands = list(stalled)
+    return min(cands, key=lambda i: (len(outputs[slots[i]]),
+                                     -admit_seq[slots[i]]))
+
+
 def serve(arch: str, smoke: bool = True, n_requests: int = 8,
           batch_slots: int = 4, gen_len: int = 16, max_len: int = 64,
           seed: int = 0, mesh=None, params=None,
           cfg=None, prompt_len: int = 1,
-          shared_prefix_len: int = 0) -> Dict[str, Any]:
+          shared_prefix_len: int = 0,
+          faults: Optional[FaultPlan] = None,
+          host_swap_bytes: Optional[int] = None,
+          max_steps_per_request: Optional[int] = None,
+          preempt_retry_limit: int = 3,
+          audit_pages: bool = True) -> Dict[str, Any]:
     """``shared_prefix_len``: the generated prompts share their first
     N tokens (a common system prompt) — the workload the prefix cache
     exists for.  Outputs stay a function of each request's own full
-    prompt, cache or no cache."""
+    prompt, cache or no cache.
+
+    Fault-tolerance knobs (see the module docstring): ``faults`` is a
+    deterministic ``FaultPlan`` keyed on the loop-step counter;
+    ``host_swap_bytes`` caps host-swap payload bytes held at once
+    (``None`` = unbounded, ``0`` = requeue-only); a request is retired
+    as ``timed_out`` after holding a slot ``max_steps_per_request``
+    steps; ``preempt_retry_limit`` preemptions of one request trigger
+    the reserved-page re-admission guarantee; ``audit_pages`` keeps
+    the allocator's invariant audit on."""
     cfg = cfg or (SMOKE if smoke else ARCHS)[arch]
     mesh = mesh or make_local_mesh()
     if params is None:
@@ -133,7 +189,8 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         page = attn.kv_page_size(cfg, max_len)
         pool = cache.get("kv", cache.get("shared_kv"))
         n_pages = int(pool["k_pages"].shape[1])
-        alloc = PageAllocator(n_pages, batch_slots, max_len // page, page)
+        alloc = PageAllocator(n_pages, batch_slots, max_len // page, page,
+                              audit=audit_pages)
         cache = dec.set_page_table(cfg, cache, alloc.table)
         # backpressure only helps when at least ONE request's worst-case
         # working set fits: otherwise the livelock handler preempts the
@@ -146,6 +203,27 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                 f"cannot hold one request's worst-case working set "
                 f"({need} pages of {page} tokens) — no schedule can make "
                 f"progress; grow the pool or shorten gen_len/max_len")
+
+    # host-swap preemption covers the families whose complete per-slot
+    # decode state is pages + plan (dense/moe); recurrent families
+    # (hybrid/ssm) carry per-slot mamba/rwkv state the page swap does
+    # not capture, so they keep the requeue-and-regenerate path
+    can_swap = (alloc is not None and cfg.family in ("dense", "moe")
+                and (host_swap_bytes is None or host_swap_bytes > 0))
+    if alloc is not None:
+        n_layers_kv = int(pool["k_pages"].shape[0])
+        swap_page_bytes = (2 * cfg.n_kv_heads * cfg.hd
+                           * jnp.dtype(_dtype(cfg)).itemsize
+                           * page * n_layers_kv)   # budget estimate/page
+    if faults is not None and not faults.empty:
+        if alloc is None:
+            raise ValueError(
+                "fault injection drives the paged allocator — set "
+                "kv_cache_layout='paged'")
+        if faults.has_crash and not (cfg.family in ("dense", "moe")):
+            raise ValueError(
+                "crash_step recovery restores every live slot from host "
+                "swap, which needs the dense/moe paged serving path")
 
     # --- prompt prefill (handoff) — dense/moe full-sequence path
     prompt_len = max(1, int(prompt_len))
@@ -213,6 +291,154 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     fetch_tiles_plan = fetch_tiles_dense = 0
     plan_bytes = kernel_bytes_plan = kernel_bytes_dense = 0
     noted: set = set()               # requests whose hit/miss is counted
+    # --- fault-tolerance state
+    swapped_recs: Dict[int, Dict[str, Any]] = {}  # request → swap record
+    preempt_count: Dict[int, int] = {}
+    admit_seq: Dict[int, int] = {}                # request → claim order
+    admit_clock = 0
+    req_steps: Dict[int, int] = {}                # watchdog: steps held
+    timed_out: set = set()
+    host_swaps = swap_restores = requeue_preemptions = 0
+    tokens_salvaged = requeue_tokens_discarded = re_prefill_tokens = 0
+    swap_cold_replans = crashes = protected_admissions = 0
+    host_swap_bytes_now = host_swap_bytes_peak = 0
+    restore_wall = 0.0
+    rep_offset = 0.0              # re-plan count carried across crashes
+
+    def _gather_pages(phys):
+        return dec.gather_phys_pages(cache, phys)
+
+    def _scatter_pages(fresh, payload):
+        nonlocal cache
+        cache = dec.scatter_phys_pages(cache, fresh, payload)
+
+    def _payload_bytes(rec) -> int:
+        b = sum(a.nbytes for _, payload in rec["handle"]["chunks"]
+                for a in payload.values())
+        return b + sum(np.asarray(v).nbytes
+                       for snap in rec["plan"].values()
+                       for v in snap.values())
+
+    def _protected() -> set:
+        return {r for r, c in preempt_count.items()
+                if c >= preempt_retry_limit}
+
+    def _reserve_need(exclude: Optional[int] = None) -> int:
+        """Pages admission must hold back for queued PROTECTED requests
+        (at the retry limit): their next re-admission is guaranteed, so
+        ordinary claims may not consume the last pages they need."""
+        n = 0
+        for r in queue:
+            if r == exclude or preempt_count.get(r, 0) < preempt_retry_limit:
+                continue
+            if r in swapped_recs:
+                n += alloc.swap_pages_needed(swapped_recs[r]["handle"])
+            else:
+                n += alloc.pages_for(max(prompt_len, 1))
+        return n
+
+    def _swap_out(victim: int) -> None:
+        """Host-swap the victim: plan snapshot first (the slot is still
+        live), then pages (gather-before-free inside ``swap_out``), then
+        release.  Decoded output and position are KEPT — restore
+        resumes, it does not regenerate."""
+        nonlocal cache, host_swaps, tokens_salvaged
+        nonlocal host_swap_bytes_now, host_swap_bytes_peak
+        r = slots[victim]
+        plan = dec.capture_plan_state(cfg, cache, victim)
+        handle = alloc.swap_out(victim, _gather_pages)
+        rec = {"handle": handle, "plan": plan,
+               "pos": int(pos_h[victim]), "token": int(tokens_h[victim, 0])}
+        rec["bytes"] = _payload_bytes(rec)
+        swapped_recs[r] = rec
+        tokens_salvaged += len(outputs[r])
+        queue.insert(0, r)
+        slots[victim] = None
+        cache = dec.release_slot(cfg, cache, victim)
+        host_swaps += 1
+        host_swap_bytes_now += rec["bytes"]
+        host_swap_bytes_peak = max(host_swap_bytes_peak,
+                                   host_swap_bytes_now)
+
+    def _preempt(victim: int) -> None:
+        """Evict the victim slot — host-swap when the family supports
+        it and the host budget holds the estimated payload, else the
+        requeue-and-regenerate fallback (deterministic regeneration
+        keeps the final outputs unchanged either way; swap just keeps
+        the progress)."""
+        nonlocal cache, produced, preemptions, requeue_preemptions
+        nonlocal requeue_tokens_discarded
+        r = slots[victim]
+        preempt_count[r] = preempt_count.get(r, 0) + 1
+        est = int(alloc.n_mapped[victim]) * swap_page_bytes
+        fits = (host_swap_bytes is None
+                or host_swap_bytes_now + est <= host_swap_bytes)
+        if can_swap and fits and alloc.n_mapped[victim] > 0:
+            _swap_out(victim)
+        else:
+            produced -= len(outputs[r])       # discarded, not served
+            requeue_tokens_discarded += len(outputs[r])
+            outputs[r] = []
+            queue.insert(0, r)
+            slots[victim] = None
+            cache = dec.release_slot(cfg, cache, victim)
+            alloc.free_slot(victim)
+            requeue_preemptions += 1
+        preemptions += 1
+
+    def _crash_restore() -> None:
+        """Mid-serve crash: every byte the device holds is about to be
+        lost, so (1) outstanding swap handles convert their resident
+        shared pages to host payload, (2) every live slot full-swaps to
+        host, then (3) the device cache, allocator, and (empty) prefix
+        trie rebuild from scratch and the claim loop re-admits each
+        request from its swap handle — positions, plan state, and
+        decoded output all survive."""
+        nonlocal cache, alloc, pcache, crashes, last_rep, rep_base
+        nonlocal rep_offset, host_swap_bytes_now, host_swap_bytes_peak
+        for rec in swapped_recs.values():
+            alloc.swap_to_full(rec["handle"], _gather_pages)
+            nb = _payload_bytes(rec)
+            host_swap_bytes_now += nb - rec["bytes"]
+            rec["bytes"] = nb
+        # reversed: each insert(0) lands the lowest slot at the queue
+        # head, so re-admission replays in slot order
+        for i in reversed(range(batch_slots)):
+            r = slots[i]
+            if r is not None:
+                _swap_out(i)                  # crash ignores the budget
+                rec = swapped_recs[r]
+                alloc.swap_to_full(rec["handle"], _gather_pages)
+                nb = _payload_bytes(rec)
+                host_swap_bytes_now += nb - rec["bytes"]
+                rec["bytes"] = nb
+        host_swap_bytes_peak = max(host_swap_bytes_peak,
+                                   host_swap_bytes_now)
+        handles = alloc.swapped
+        squeezed_n = len(alloc.squeezed)
+        # device teardown + rebuild (same shapes — the jitted step's
+        # trace still applies)
+        cache = dec.init_cache(cfg, batch_slots, max_len)
+        alloc = PageAllocator(n_pages, batch_slots, max_len // page, page,
+                              audit=audit_pages)
+        alloc.swapped = handles               # payload survives the crash
+        alloc.squeeze(squeezed_n)             # injected pressure persists
+        if pcache is not None:
+            old = pcache
+            pcache = PrefixCache(alloc)       # trie contents are lost...
+            pcache.hits, pcache.misses = old.hits, old.misses
+            pcache.tokens_saved = old.tokens_saved      # ...stats carry
+            pcache.evictions = old.evictions
+        for i in range(batch_slots):
+            cache = dec.release_slot(cfg, cache, i)
+        _push_tables()
+        # fold the pre-crash re-plan count into the offset; the fresh
+        # cache's counters restart the delta accounting
+        if last_rep is not None:
+            rep_offset += float((last_rep - rep_base).mean())
+            last_rep = _plan_replans(cache)
+            rep_base = last_rep.copy()
+        crashes += 1
     from repro.kernels.ops import decode_fetch_stats
     blk = attn.decode_block_size(cfg, max_len)
     tile_bytes = 2 * blk * cfg.hd * jnp.dtype(_dtype(cfg)).itemsize
@@ -228,101 +454,185 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                          jnp.asarray(pos_h))
     jax.block_until_ready(logits)
     last_rep = _plan_replans(cache)               # skip warm-up's re-plan
-    rep_base = last_rep
+    rep_base = None if last_rep is None else last_rep.copy()
     t0 = time.time()
     # paged backpressure can stall slots / defer claims / preempt-and-
     # restart, so budget extra lockstep steps beyond the contiguous-
     # layout worst case
     max_steps = 4 * (n_requests * gen_len + batch_slots + 1)
     while (queue or any(s is not None for s in slots)) and steps < max_steps:
+        defer_now = False
+        if faults is not None:                    # injected adversity
+            for kind, arg in faults.at(steps):
+                if kind == "pool_squeeze":
+                    alloc.squeeze(arg)
+                elif kind == "pool_restore":
+                    alloc.unsqueeze(arg)
+                elif kind == "defer_admission":
+                    defer_now = True
+                elif kind == "preempt":
+                    tgt = arg
+                    if tgt is None:
+                        held = [j for j in range(batch_slots)
+                                if slots[j] is not None]
+                        tgt = (_pick_victim(held, slots, outputs,
+                                            admit_seq, _protected())
+                               if held else None)
+                    if tgt is not None and slots[tgt] is not None:
+                        _preempt(tgt)
+                        _push_tables()
+                elif kind == "crash_step":
+                    _crash_restore()
         for i in range(batch_slots):              # claim free slots
-            if slots[i] is None and queue:
-                # prefix match BEFORE admission: a matched prefix maps
-                # cached pages, so it shrinks the claim's pool demand
-                # (match tokens[:-1] — the tail must stay non-empty so
-                # the prefill always produces last-token logits)
-                m, phys_m = 0, []
-                if pcache is not None and use_prefill:
-                    m, phys_m, _ = pcache.match(prompts[queue[0], :-1])
-                if alloc is not None:
-                    def _need():
-                        return max(alloc.pages_for(max(prompt_len, 1))
-                                   - len(phys_m) + (1 if m % page else 0),
-                                   0)
-                    if not alloc.can_admit(_need()):
-                        if pcache is not None:
-                            pcache.evict(_need())
-                            # eviction may have dropped matched pages —
-                            # re-walk before trusting the mapping
-                            m, phys_m, _ = pcache.match(
-                                prompts[queue[0], :-1])
-                        if not alloc.can_admit(_need()):
-                            deferred_claims += 1  # backpressure: wait
-                            break
-                r = queue.pop(0)
-                slots[i] = r
-                outputs[r] = []
-                t_claim[r] = time.time()          # claim → last token
-                cache = dec.reset_slot(cfg, cache, i)
-                if use_prefill:
-                    if pcache is not None and r not in noted:
-                        # once per REQUEST: a preempted request's
-                        # re-claim would otherwise double-count (its
-                        # own registered pages guarantee the re-claim
-                        # hits, inflating saved past total)
-                        noted.add(r)
-                        pcache.note(m)
-                    if m:
-                        alloc.map_shared(i, phys_m)
-                        if m % page:
-                            # the tail's first rows land inside the
-                            # last matched page: shared → CoW now
-                            ok, cp = alloc.ensure_writable(i, m)
-                            assert ok, "admission reserved the CoW page"
-                            if cp is not None:
-                                cache = dec.copy_phys_pages(cache, [cp])
-                                cow_copies += 1
-                    if alloc is not None:
-                        ok = alloc.ensure(i, prompt_len - 1)
-                        assert ok, "admission control reserved these pages"
-                        _push_tables()
-                    if m:
-                        prefix = dec.gather_prefix_kv(cache,
-                                                      alloc.table[i], m)
-                        lg0, state = prefill_tail(
-                            params,
-                            jnp.asarray(prompts[r:r + 1, m:], jnp.int32),
-                            prefix)
-                    else:
-                        lg0, state = prefill(params, jnp.asarray(
-                            prompts[r:r + 1], jnp.int32))
-                    phys = (alloc.table[i, :alloc.pages_for(prompt_len)]
-                            if alloc is not None else None)
-                    cache = dec.install_prefill(cfg, cache, i, state, phys,
-                                                prefix_len=m)
+            if slots[i] is not None or not queue or defer_now:
+                continue
+            r0 = queue[0]
+            r0_protected = preempt_count.get(r0, 0) >= preempt_retry_limit
+            # protected requests (at the retry limit) consume the
+            # reserve admission holds back for them; everyone else
+            # must leave it untouched
+            reserve = (0 if (alloc is None or r0_protected)
+                       else _reserve_need(exclude=r0))
+            if r0 in swapped_recs:
+                # --- re-admission from host swap: restore, not redo —
+                # pages scatter back, the plan reinstalls reset-free,
+                # and decode resumes at the swapped position with the
+                # swapped next-token (outputs so far were kept)
+                rec = swapped_recs[r0]
+                needed = alloc.swap_pages_needed(rec["handle"]) + reserve
+                if not alloc.can_admit(needed):
                     if pcache is not None:
-                        # retain the prompt's pages (full pages chain
-                        # the trie; the final partial page becomes a
-                        # terminal node, so the owner's own first
-                        # append below will copy-on-write it)
-                        pcache.register(prompts[r], alloc.table[i])
-                        _push_tables()
-                    pos_h[i] = prompt_len
-                    # the prefill's last-position argmax IS the first
-                    # generated token — record it, don't just feed it
-                    first = int(jnp.argmax(lg0[0]))
-                    outputs[r].append(first)
-                    produced += 1
-                    tokens_h[i, 0] = first
-                    if len(outputs[r]) >= gen_len or pos_h[i] >= max_len:
-                        latency[r] = time.time() - t_claim[r]
-                        slots[i] = None           # gen_len=1: done already
-                        cache = dec.release_slot(cfg, cache, i)
-                        if alloc is not None:
-                            alloc.free_slot(i)
+                        pcache.evict(needed)
+                    if not alloc.can_admit(needed):
+                        deferred_claims += 1      # backpressure: wait
+                        break
+                t_res = time.time()
+                ok = alloc.swap_in(i, rec["handle"], _scatter_pages)
+                assert ok, "can_admit reserved the payload pages"
+                cache = dec.restore_plan_state(cfg, cache, i, rec["plan"])
+                _push_tables()
+                queue.pop(0)
+                slots[i] = r0
+                admit_seq[r0] = admit_clock
+                admit_clock += 1
+                pos_h[i] = rec["pos"]
+                tokens_h[i, 0] = rec["token"]
+                snap = (rec["plan"].get("kv")
+                        or rec["plan"].get("shared_kv"))
+                if last_rep is not None:
+                    if rec["pos"] > 0 and (
+                            snap is None
+                            or not np.asarray(snap.get("active",
+                                                       True)).any()):
+                        swap_cold_replans += 1    # structurally 0 when
+                        #     capture/restore moved a live plan intact
+                    if snap is not None and "replans" in snap:
+                        # the device counter at slot i jumps to the
+                        # restored value — absorb the jump into the
+                        # baseline so it never counts as a re-plan
+                        col = snap["replans"].astype(
+                            np.float64).reshape(-1)
+                        rep_base[:, i] += col - last_rep[:, i]
+                        last_rep[:, i] = col
+                host_swap_bytes_now -= rec["bytes"]
+                del swapped_recs[r0]
+                swap_restores += 1
+                if r0_protected:
+                    protected_admissions += 1
+                restore_wall += time.time() - t_res
+                continue
+            # prefix match BEFORE admission: a matched prefix maps
+            # cached pages, so it shrinks the claim's pool demand
+            # (match tokens[:-1] — the tail must stay non-empty so
+            # the prefill always produces last-token logits)
+            m, phys_m = 0, []
+            if pcache is not None and use_prefill:
+                m, phys_m, _ = pcache.match(prompts[r0, :-1])
+            if alloc is not None:
+                def _need():
+                    return max(alloc.pages_for(max(prompt_len, 1))
+                               - len(phys_m) + (1 if m % page else 0),
+                               0)
+                if not alloc.can_admit(_need() + reserve):
+                    if pcache is not None:
+                        pcache.evict(_need() + reserve)
+                        # eviction may have dropped matched pages —
+                        # re-walk before trusting the mapping
+                        m, phys_m, _ = pcache.match(
+                            prompts[r0, :-1])
+                    if not alloc.can_admit(_need() + reserve):
+                        deferred_claims += 1  # backpressure: wait
+                        break
+            r = queue.pop(0)
+            slots[i] = r
+            admit_seq[r] = admit_clock
+            admit_clock += 1
+            if r0_protected:
+                protected_admissions += 1
+            if preempt_count.get(r, 0) and use_prefill:
+                re_prefill_tokens += prompt_len - m   # requeue redoes it
+            outputs[r] = []
+            t_claim[r] = time.time()          # claim → last token
+            cache = dec.reset_slot(cfg, cache, i)
+            if use_prefill:
+                if pcache is not None and r not in noted:
+                    # once per REQUEST: a preempted request's
+                    # re-claim would otherwise double-count (its
+                    # own registered pages guarantee the re-claim
+                    # hits, inflating saved past total)
+                    noted.add(r)
+                    pcache.note(m)
+                if m:
+                    alloc.map_shared(i, phys_m)
+                    if m % page:
+                        # the tail's first rows land inside the
+                        # last matched page: shared → CoW now
+                        ok, cp = alloc.ensure_writable(i, m)
+                        assert ok, "admission reserved the CoW page"
+                        if cp is not None:
+                            cache = dec.copy_phys_pages(cache, [cp])
+                            cow_copies += 1
+                if alloc is not None:
+                    ok = alloc.ensure(i, prompt_len - 1)
+                    assert ok, "admission control reserved these pages"
+                    _push_tables()
+                if m:
+                    prefix = dec.gather_prefix_kv(cache,
+                                                  alloc.table[i], m)
+                    lg0, state = prefill_tail(
+                        params,
+                        jnp.asarray(prompts[r:r + 1, m:], jnp.int32),
+                        prefix)
                 else:
-                    pos_h[i] = 0
-                    tokens_h[i, 0] = int(prompts[r, 0])
+                    lg0, state = prefill(params, jnp.asarray(
+                        prompts[r:r + 1], jnp.int32))
+                phys = (alloc.table[i, :alloc.pages_for(prompt_len)]
+                        if alloc is not None else None)
+                cache = dec.install_prefill(cfg, cache, i, state, phys,
+                                            prefix_len=m)
+                if pcache is not None:
+                    # retain the prompt's pages (full pages chain
+                    # the trie; the final partial page becomes a
+                    # terminal node, so the owner's own first
+                    # append below will copy-on-write it)
+                    pcache.register(prompts[r], alloc.table[i])
+                    _push_tables()
+                pos_h[i] = prompt_len
+                # the prefill's last-position argmax IS the first
+                # generated token — record it, don't just feed it
+                first = int(jnp.argmax(lg0[0]))
+                outputs[r].append(first)
+                produced += 1
+                tokens_h[i, 0] = first
+                if len(outputs[r]) >= gen_len or pos_h[i] >= max_len:
+                    latency[r] = time.time() - t_claim[r]
+                    slots[i] = None           # gen_len=1: done already
+                    cache = dec.release_slot(cfg, cache, i)
+                    if alloc is not None:
+                        alloc.free_slot(i)
+            else:
+                pos_h[i] = 0
+                tokens_h[i, 0] = int(prompts[r, 0])
         active = [i for i in range(batch_slots) if slots[i] is not None]
         stalled: List[int] = []
         if alloc is not None and active:
@@ -336,22 +646,18 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                 # every active slot is stalled: first reclaim pages only
                 # the prefix trie still holds, then — pages only free
                 # when a request completes — livelock.  Preempt the
-                # slot with the least progress: drop its references,
-                # requeue its request (regeneration is deterministic,
-                # so the final output is unchanged; shared pages it
-                # mapped survive through their other references), and
-                # let the others advance.
+                # least-progress victim (``_pick_victim``; admission
+                # order breaks ties, protected requests are spared):
+                # host-swap keeps its decoded progress when the family
+                # and host budget allow, requeue regenerates it —
+                # either way deterministic decode leaves the final
+                # outputs unchanged, and shared pages survive through
+                # their other references.
                 if pcache is not None and pcache.evict(1):
                     continue
-                victim = min(stalled, key=lambda i: len(outputs[slots[i]]))
-                r = slots[victim]
-                produced -= len(outputs[r])       # discarded, not served
-                outputs[r] = []
-                queue.insert(0, r)
-                slots[victim] = None
-                cache = dec.release_slot(cfg, cache, victim)
-                alloc.free_slot(victim)
-                preemptions += 1
+                victim = _pick_victim(stalled, slots, outputs, admit_seq,
+                                      _protected())
+                _preempt(victim)
             stalled_steps += len(stalled)
             _push_tables()
             # preemption may have freed slots out of the stale list
@@ -398,18 +704,30 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         now = time.time()
         for i in range(batch_slots):
             r = slots[i]
-            if r is None or i in stalled:
-                continue                          # stalled: re-fed as-is
-            outputs[r].append(int(nxt[i]))
-            produced += 1
-            pos_h[i] += 1
-            if len(outputs[r]) >= gen_len or pos_h[i] >= max_len:
+            if r is None:
+                continue
+            # watchdog clock: every step HOLDING the slot counts,
+            # stalled or not — a runaway request must not sit on pool
+            # pages forever just because it also stalls
+            req_steps[r] = req_steps.get(r, 0) + 1
+            if i not in stalled:                  # stalled: re-fed as-is
+                outputs[r].append(int(nxt[i]))
+                produced += 1
+                pos_h[i] += 1
+            done = len(outputs[r]) >= gen_len or pos_h[i] >= max_len
+            expired = (max_steps_per_request is not None and not done
+                       and req_steps[r] >= max_steps_per_request)
+            if done or expired:
                 latency[r] = now - t_claim[r]
+                if expired:
+                    # graceful retirement: partial output stands, pages
+                    # free, the request is NOT requeued
+                    timed_out.add(r)
                 slots[i] = None                   # finished → free slot
                 cache = dec.release_slot(cfg, cache, i)
                 if alloc is not None:
                     alloc.free_slot(i)            # … and its pages
-            else:
+            elif i not in stalled:
                 tokens_h[i, 0] = int(nxt[i])
         steps += 1
     dt = time.time() - t0
@@ -419,6 +737,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         "request_latency_s": latency,
         "latency_mean_s": float(np.mean(list(latency.values())))
         if latency else 0.0,
+        "timed_out": sorted(timed_out),
     }
     if fetch_tiles_dense:
         out["decode_fetch"] = {
@@ -440,7 +759,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             "step_bytes_dense_route": kernel_bytes_dense,
             "true_reduction": kernel_bytes_dense
             / max(kernel_bytes_plan + plan_bytes, 1),
-            "replans": float((last_rep - rep_base).mean()),
+            "replans": rep_offset + float((last_rep - rep_base).mean()),
         }
     if alloc is not None:
         layers = int(jax.tree_util.tree_leaves(
@@ -456,6 +775,21 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         occ["deferred_claims"] = deferred_claims
         occ["stalled_steps"] = stalled_steps
         occ["preemptions"] = preemptions
+        # fault-tolerance counters: swap preserves progress, requeue
+        # discards it; crash restores everything from host swap
+        occ["host_swaps"] = host_swaps
+        occ["swap_restores"] = swap_restores
+        occ["requeue_preemptions"] = requeue_preemptions
+        occ["tokens_salvaged"] = tokens_salvaged
+        occ["requeue_tokens_discarded"] = requeue_tokens_discarded
+        occ["re_prefill_tokens"] = re_prefill_tokens
+        occ["swap_cold_replans"] = swap_cold_replans
+        occ["host_swap_bytes_peak"] = host_swap_bytes_peak
+        occ["swap_restore_wall_s"] = restore_wall
+        occ["crashes"] = crashes
+        occ["preempt_retries_max"] = max(preempt_count.values(), default=0)
+        occ["protected_admissions"] = protected_admissions
+        occ["audits_run"] = alloc.audits_run
         out["page_occupancy"] = occ
     if pcache is not None:
         pstats = pcache.stats()
@@ -480,16 +814,30 @@ def main():
                     help="shared-prefix page cache (implies --paged)")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="prompts share their first N tokens")
+    ap.add_argument("--faults-seed", type=int, default=None,
+                    help="inject a seeded FaultPlan schedule "
+                         "(implies --paged)")
+    ap.add_argument("--max-steps-per-request", type=int, default=None,
+                    help="deadline watchdog: retire a slot as timed_out "
+                         "after N held steps")
     args = ap.parse_args()
     cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
-    if args.paged or args.prefix_cache:
+    if args.paged or args.prefix_cache or args.faults_seed is not None:
         import dataclasses
         cfg = dataclasses.replace(cfg, kv_cache_layout="paged",
                                   kv_prefix_cache=args.prefix_cache)
+    faults = None
+    if args.faults_seed is not None:
+        faults = FaultPlan.seeded(args.faults_seed,
+                                  steps=args.requests * args.gen_len,
+                                  slots=args.slots)
+        print(f"[serve] fault schedule (seed {args.faults_seed}):")
+        print(faults.describe())
     out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
                 batch_slots=args.slots, gen_len=args.gen_len,
                 prompt_len=args.prompt_len, cfg=cfg,
-                shared_prefix_len=args.shared_prefix_len)
+                shared_prefix_len=args.shared_prefix_len, faults=faults,
+                max_steps_per_request=args.max_steps_per_request)
     print(f"[serve] generated {out['tokens_generated']} tokens over "
           f"{len(out['outputs'])} requests "
           f"({out['tok_per_s']:.1f} tok/s on CPU, "
@@ -511,6 +859,16 @@ def main():
               f"({o['reserved_vs_contiguous']:.2f}x less reserved than "
               f"contiguous would need; {o['deferred_claims']} deferred "
               f"claims, {o['stalled_steps']} stalled steps)")
+        if o["preemptions"] or o["crashes"]:
+            print(f"[serve] fault tolerance: {o['host_swaps']} host-swaps "
+                  f"({o['tokens_salvaged']} tokens salvaged, "
+                  f"{o['swap_restores']} restores, re_prefill_tokens="
+                  f"{o['re_prefill_tokens']}, cold_replans="
+                  f"{o['swap_cold_replans']}), "
+                  f"{o['requeue_preemptions']} requeues "
+                  f"({o['requeue_tokens_discarded']} tokens discarded), "
+                  f"{o['crashes']} crashes recovered, "
+                  f"{o['audits_run']} invariant audits")
     if "prefix_cache" in out:
         p = out["prefix_cache"]
         print(f"[serve] prefix cache: hit-rate {p['hit_rate']:.2f} "

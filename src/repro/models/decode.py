@@ -243,6 +243,92 @@ def copy_phys_pages(cache: Dict, pairs) -> Dict:
     return cache
 
 
+# --- host-swap preemption: device↔host page payloads + plan state -------
+
+# Every per-physical-page array a page row lives in: K/V rows plus the
+# page-summary rows (fp32 bounds, and scale/zero under the int8
+# backend).  Swap must move them together — a restored page whose
+# summary row stayed behind would rank blocks from another request's
+# bounds.
+_PAGE_POOL_FIELDS = ("k_pages", "v_pages", "page_k_min", "page_k_max",
+                     "page_k_scale", "page_k_zero")
+
+
+def gather_phys_pages(cache: Dict, phys) -> Dict[str, np.ndarray]:
+    """Pull physical pages' device rows to host numpy — the
+    ``GatherFn`` payload for ``PageAllocator.swap_out``.  Keys are
+    ``"{cache_name}.{field}"``; each value is the field's rows at the
+    given physical pages, in order, as numpy (the device→host copy is
+    exact for every dtype involved: fp32/bf16 K/V, fp32 or int8
+    summaries).  ``scatter_phys_pages`` round-trips it bitwise."""
+    idx = jnp.asarray(np.asarray(phys, np.int32))
+    out: Dict[str, np.ndarray] = {}
+    for name in ("kv", "shared_kv"):
+        kvc = cache.get(name)
+        if isinstance(kvc, dict) and "k_pages" in kvc:
+            for f in _PAGE_POOL_FIELDS:
+                if f in kvc:
+                    out[f"{name}.{f}"] = np.asarray(kvc[f][:, idx])
+    return out
+
+
+def scatter_phys_pages(cache: Dict, phys, payload: Dict[str, np.ndarray]
+                       ) -> Dict:
+    """Land a gathered payload in (freshly allocated) physical pages —
+    the ``ScatterFn`` for ``PageAllocator.swap_in``.  ``phys`` need not
+    equal the pages the payload was gathered from: page contents are
+    physical-position-independent (the table provides the mapping, and
+    the decode plan indexes *logical* blocks), so restoring into any
+    free pages is exact."""
+    idx = jnp.asarray(np.asarray(phys, np.int32))
+    cache = dict(cache)
+    for name in ("kv", "shared_kv"):
+        kvc = cache.get(name)
+        if isinstance(kvc, dict) and "k_pages" in kvc:
+            kvc = dict(kvc)
+            for f in _PAGE_POOL_FIELDS:
+                key = f"{name}.{f}"
+                if f in kvc and key in payload:
+                    kvc[f] = kvc[f].at[:, idx].set(
+                        jnp.asarray(payload[key], kvc[f].dtype))
+            cache[name] = kvc
+    return cache
+
+
+def capture_plan_state(cfg: ModelConfig, cache: Dict, slot: int
+                       ) -> Dict[str, Dict[str, np.ndarray]]:
+    """Host snapshot of one serving slot's complete decode-plan state
+    across the cache's plan-bearing groups — the piece of a host-swap
+    besides the pages themselves.  Restoring it with
+    ``restore_plan_state`` is reset-free: summaries, selected blocks,
+    beat phase (``step``), churn, and the cumulative re-plan counter
+    all resume exactly where the victim left off."""
+    from repro.core.decode_plan import capture_plan_slot
+    out: Dict[str, Dict[str, np.ndarray]] = {}
+    for name in ("kv", "shared_kv"):
+        kvc = cache.get(name)
+        if isinstance(kvc, dict) and "plan" in kvc:
+            axis = 2 if (name == "kv" and cfg.family == "vlm") else 1
+            out[name] = capture_plan_slot(kvc["plan"], slot,
+                                          batch_axis=axis)
+    return out
+
+
+def restore_plan_state(cfg: ModelConfig, cache: Dict, slot: int,
+                       saved: Dict[str, Dict[str, np.ndarray]]) -> Dict:
+    """Reinstall a ``capture_plan_state`` snapshot into ``slot``
+    (bitwise — see ``decode_plan.install_plan_slot``)."""
+    from repro.core.decode_plan import install_plan_slot
+    cache = dict(cache)
+    for name, snap in saved.items():
+        kvc = dict(cache[name])
+        axis = 2 if (name == "kv" and cfg.family == "vlm") else 1
+        kvc["plan"] = install_plan_slot(kvc["plan"], slot, snap,
+                                        batch_axis=axis)
+        cache[name] = kvc
+    return cache
+
+
 def gather_prefix_kv(cache: Dict, table_row, prefix_len: int) -> Dict:
     """Gather a slot's first ``prefix_len`` cached K/V rows from the
     page pool into the logical layout — the matched shared prefix a

@@ -102,6 +102,35 @@ def test_grad_compression_error_feedback():
                                rtol=0.05, atol=1e-4)
 
 
+def test_mid_serve_crash_restores_from_host_swap():
+    """A crash_step fault mid-serve drops the device KV cache and the
+    page allocator; every in-flight request full-swaps to host first
+    and restores from its swap handle after the rebuild — final outputs
+    bitwise equal to the fault-free run, with zero re-prefilled tokens
+    and zero cold re-plans for the restored slots."""
+    import dataclasses
+    from repro.configs.archs import SMOKE
+    from repro.launch.faults import FaultPlan
+    from repro.launch.serve import serve
+    cfg = dataclasses.replace(
+        SMOKE["qwen3-4b"], topk_impl="bisect", sata_decode="on",
+        sata_decode_block=8, sata_decode_replan=4,
+        kv_cache_layout="paged", kv_pool_pages=8)
+    kw = dict(n_requests=4, batch_slots=2, gen_len=12, max_len=32,
+              prompt_len=6)
+    base = serve("qwen3-4b", cfg=cfg, **kw)
+    out = serve("qwen3-4b", cfg=cfg,
+                faults=FaultPlan().crash_step(5), **kw)
+    occ = out["page_occupancy"]
+    assert occ["crashes"] == 1
+    assert occ["host_swaps"] >= 1 and occ["swap_restores"] >= 1
+    assert occ["re_prefill_tokens"] == 0
+    assert occ["swap_cold_replans"] == 0
+    assert occ["audits_run"] > 0
+    assert out["outputs"] == base["outputs"]
+    assert all(len(v) == 12 for v in out["outputs"].values())
+
+
 def test_training_reduces_loss():
     """A 10-step curve's endpoint delta is noise-dominated (the old
     xfail); a 40-step run with 10-step head/tail averaging drops by

@@ -1,0 +1,330 @@
+"""Fault-tolerant paged serving: host-swap preemption bitwise equality
+(swap == never-preempted, requeue fallback too), deterministic fault
+injection driving every backpressure branch, allocator invariant
+auditing over random schedules (hypothesis), int8 summary-row swap
+round-trips, the deadline watchdog, bounded preemption retries, and the
+explicit victim tie-break."""
+import dataclasses
+import sys
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+from repro.configs.archs import SMOKE
+from repro.core.paging import OVERFLOW_PAGE, PageAllocator
+from repro.launch.faults import FaultPlan
+from repro.launch.serve import _pick_victim, serve
+from repro.models import decode as dec
+
+
+def _cfg(**kw):
+    base = dict(topk_impl="bisect", sata_decode="on",
+                sata_decode_block=8, sata_decode_replan=4,
+                kv_cache_layout="paged", kv_pool_pages=6)
+    base.update(kw)
+    return dataclasses.replace(SMOKE["qwen3-4b"], **base)
+
+
+_KW = dict(n_requests=4, batch_slots=2, gen_len=12, max_len=32,
+           prompt_len=6)
+_BASELINES = {}
+
+
+def _baseline(**cfg_kw):
+    """Fault-free reference run (memoized — several tests compare
+    against the same never-preempted outputs)."""
+    key = tuple(sorted(cfg_kw.items()))
+    if key not in _BASELINES:
+        _BASELINES[key] = serve("qwen3-4b", cfg=_cfg(**cfg_kw), **_KW)
+    return _BASELINES[key]
+
+
+# ---------------------------------------------------------------------------
+# Victim selection
+# ---------------------------------------------------------------------------
+
+def test_pick_victim_ties_break_by_admission_order():
+    """Equal-progress stalled slots used to tie nondeterministically
+    across schedule variants; the explicit rule is least progress, then
+    YOUNGEST admission."""
+    slots = [10, 11, 12]
+    outputs = {10: [1, 2], 11: [3, 4], 12: [5, 6, 7]}
+    admit_seq = {10: 0, 11: 5, 12: 2}
+    # 10 and 11 tie on progress; 11 admitted later → victim
+    assert _pick_victim([0, 1, 2], slots, outputs, admit_seq) == 1
+    # protection excludes 11 → 10 (next youngest among the tied)
+    assert _pick_victim([0, 1, 2], slots, outputs, admit_seq,
+                        protected={11}) == 0
+    # everyone protected → fall back to the unprotected rule
+    assert _pick_victim([0, 1, 2], slots, outputs, admit_seq,
+                        protected={10, 11, 12}) == 1
+
+
+# ---------------------------------------------------------------------------
+# Host-swap preemption: the headline bitwise property
+# ---------------------------------------------------------------------------
+
+def test_swap_preemption_bitwise_equal_zero_reprefill():
+    """A pool squeeze forcing ≥2 preemptions must host-swap the
+    victims and restore them with ZERO re-prefilled tokens and zero
+    cold re-plans — outputs bitwise equal to the fault-free run, with
+    the invariant audit live after every allocator mutation."""
+    base = _baseline()
+    fp = FaultPlan().pool_squeeze(2, 3).pool_restore(14)
+    out = serve("qwen3-4b", cfg=_cfg(), faults=fp, **_KW)
+    occ = out["page_occupancy"]
+    assert occ["host_swaps"] >= 2, occ
+    assert occ["swap_restores"] == occ["host_swaps"]
+    assert occ["re_prefill_tokens"] == 0
+    assert occ["swap_cold_replans"] == 0
+    assert occ["tokens_salvaged"] > 0
+    assert occ["requeue_preemptions"] == 0
+    assert occ["audits_run"] > 0
+    assert out["outputs"] == base["outputs"]
+    assert all(len(v) == _KW["gen_len"] for v in out["outputs"].values())
+
+
+def test_requeue_fallback_when_host_budget_dry():
+    """host_swap_bytes=0 disables swap: the livelock handler falls back
+    to requeue-and-regenerate, still bitwise equal (deterministic
+    regeneration) but paying re-prefill for every victim."""
+    base = _baseline()
+    fp = FaultPlan().pool_squeeze(2, 3).pool_restore(14)
+    out = serve("qwen3-4b", cfg=_cfg(), faults=fp, host_swap_bytes=0,
+                **_KW)
+    occ = out["page_occupancy"]
+    assert occ["host_swaps"] == 0
+    assert occ["requeue_preemptions"] > 0
+    assert occ["re_prefill_tokens"] > 0
+    assert out["outputs"] == base["outputs"]
+
+
+def test_forced_preempt_and_defer_are_deterministic():
+    """A forced-preempt/defer schedule replays identically (same
+    counters, same outputs) and never changes the final outputs."""
+    base = _baseline()
+    fp = FaultPlan().preempt(3).defer_admission(4).preempt(7, slot=1)
+    a = serve("qwen3-4b", cfg=_cfg(kv_pool_pages=8), faults=fp, **_KW)
+    b = serve("qwen3-4b", cfg=_cfg(kv_pool_pages=8), faults=fp, **_KW)
+    assert a["outputs"] == b["outputs"] == base["outputs"]
+    for k in ("preemptions", "host_swaps", "swap_restores",
+              "tokens_salvaged", "deferred_claims", "stalled_steps"):
+        assert a["page_occupancy"][k] == b["page_occupancy"][k], k
+    assert a["page_occupancy"]["preemptions"] >= 2
+
+
+def test_swap_preserves_int8_summary_rows_end_to_end():
+    """The int8 summary backend's codes + scale/zero rows ride the
+    swap payload; restored slots must keep ranking from bit-identical
+    summaries (outputs equal under squeeze-forced swaps)."""
+    kw = dict(kv_prefix_cache=True, sata_summary="int8")
+    base = _baseline(**kw)
+    fp = FaultPlan().pool_squeeze(2, 3).pool_restore(14)
+    out = serve("qwen3-4b", cfg=_cfg(**kw), faults=fp, **_KW)
+    assert out["outputs"] == base["outputs"]
+    assert out["page_occupancy"]["preemptions"] > 0
+
+
+def test_gather_scatter_round_trips_pages_bitwise():
+    """models.decode.gather_phys_pages → scatter_phys_pages moves K/V
+    AND summary rows (int8 codes included) bit-identically, even into
+    different physical pages."""
+    cfg = _cfg(kv_prefix_cache=True, sata_summary="int8",
+               kv_pool_pages=8)
+    cache = dec.init_cache(cfg, 2, 32)
+    rng = np.random.default_rng(0)
+    kv = dict(cache["kv"])
+    for f in ("k_pages", "v_pages", "page_k_min", "page_k_max",
+              "page_k_scale", "page_k_zero"):
+        a = np.asarray(kv[f])
+        if a.dtype == np.int8:
+            kv[f] = jnp.asarray(rng.integers(-128, 128, a.shape), jnp.int8)
+        else:
+            kv[f] = jnp.asarray(rng.standard_normal(a.shape), a.dtype)
+    cache = {**cache, "kv": kv}
+    src, dst = [2, 5, 3], [6, 1, 4]
+    payload = dec.gather_phys_pages(cache, src)
+    assert any(k.endswith("page_k_scale") for k in payload)  # int8 rows ride
+    restored = dec.scatter_phys_pages(cache, dst, payload)
+    for f in ("k_pages", "v_pages", "page_k_min", "page_k_max",
+              "page_k_scale", "page_k_zero"):
+        want = np.asarray(cache["kv"][f])[:, src]
+        got = np.asarray(restored["kv"][f])[:, dst]
+        np.testing.assert_array_equal(got, want, err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# Crash + watchdog + bounded retries
+# ---------------------------------------------------------------------------
+
+def test_watchdog_retires_runaway_requests():
+    """max_steps_per_request retires slots gracefully: partial outputs
+    stand, pages free (pool drains to zero), requests report as
+    timed_out instead of holding the pool forever."""
+    out = serve("qwen3-4b", cfg=_cfg(kv_pool_pages=8),
+                max_steps_per_request=5, **_KW)
+    assert out["timed_out"] == list(range(_KW["n_requests"]))
+    assert out["page_occupancy"]["pages_in_use"] == 0
+    # 1 prefill token + 5 watchdog-clocked steps of decode
+    assert all(len(v) == 6 for v in out["outputs"].values())
+    assert all(r in out["request_latency_s"] for r in out["timed_out"])
+
+
+def test_bounded_retries_reserve_guarantees_completion():
+    """A request hammered past the retry limit re-admits under the
+    reserved-page guarantee: the run still completes every request
+    bitwise-equal, and the occupancy report surfaces the retries."""
+    base = _baseline()
+    fp = FaultPlan()
+    for s in range(2, 26, 2):
+        fp.preempt(s, slot=0)
+    out = serve("qwen3-4b", cfg=_cfg(), faults=fp,
+                preempt_retry_limit=2, **_KW)
+    occ = out["page_occupancy"]
+    assert occ["preempt_retries_max"] >= 2
+    assert occ["protected_admissions"] >= 1
+    assert out["outputs"] == base["outputs"]
+    assert all(len(v) == _KW["gen_len"] for v in out["outputs"].values())
+
+
+def test_faults_require_paged_layout():
+    cfg = dataclasses.replace(SMOKE["qwen3-4b"], topk_impl="bisect",
+                              kv_cache_layout="contiguous")
+    with pytest.raises(ValueError, match="paged"):
+        serve("qwen3-4b", cfg=cfg, faults=FaultPlan().pool_squeeze(1, 2),
+              **_KW)
+
+
+def test_seeded_fault_plan_is_reproducible():
+    a = FaultPlan.seeded(7, steps=40, slots=3, allow_crash=True)
+    b = FaultPlan.seeded(7, steps=40, slots=3, allow_crash=True)
+    assert a.describe() == b.describe() and not a.empty
+    assert a.has_crash
+    c = FaultPlan.seeded(8, steps=40, slots=3)
+    assert not c.has_crash
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariants under random fault schedules (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _synthetic_pages(n_pages, rng):
+    """Host-side stand-in for the device pools: one fp32 and one int8
+    array per physical page, so gather/scatter round-trips exercise
+    both dtypes the real payload carries."""
+    return {
+        "rows": rng.standard_normal((n_pages, 4)).astype(np.float32),
+        "codes": rng.integers(-128, 128, (n_pages, 4)).astype(np.int8),
+    }
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 4))
+def test_allocator_invariants_under_random_fault_schedules(seed, slots_n):
+    """Property: over arbitrary claim/append/squeeze/preempt(swap)/
+    swap-in/crash/free schedules, (a) check_invariants holds after
+    every event (audit=True runs it inside every mutation), (b) every
+    swap round-trips its synthetic page payloads — fp32 AND int8 —
+    bit-identically, (c) swapped pages never appear in device tables."""
+    rng = np.random.default_rng(seed)
+    n_pages = int(rng.integers(6, 14))
+    a = PageAllocator(n_pages, slots_n, max_pages=8, page=4, audit=True)
+    pools = _synthetic_pages(n_pages, rng)
+    truth = {}              # slot → {logical page → (rows, codes)}
+    handles = {}            # handle id → {logical page → (rows, codes)}
+    audits_total = 0
+
+    def gather(phys):
+        return {k: pools[k][phys] for k in pools}
+
+    for _ in range(40):
+        op = rng.choice(["claim", "append", "squeeze", "unsqueeze",
+                         "swap_out", "swap_in", "free", "crash"])
+        slot = int(rng.integers(slots_n))
+        if op == "claim" and a.n_mapped[slot] == 0 and a.can_admit(1):
+            assert a.ensure(slot, 0)
+            p = int(a.table[slot, 0])
+            pools["rows"][p] = rng.standard_normal(4).astype(np.float32)
+            pools["codes"][p] = rng.integers(-128, 128, 4).astype(np.int8)
+            truth[slot] = {0: (pools["rows"][p].copy(),
+                               pools["codes"][p].copy())}
+        elif op == "append" and 0 < a.n_mapped[slot] < a.max_pages:
+            lp = int(a.n_mapped[slot])
+            if a.ensure(slot, lp * a.page):
+                p = int(a.table[slot, lp])
+                pools["rows"][p] = rng.standard_normal(4).astype(np.float32)
+                pools["codes"][p] = rng.integers(-128, 128, 4).astype(np.int8)
+                truth[slot][lp] = (pools["rows"][p].copy(),
+                                   pools["codes"][p].copy())
+        elif op == "squeeze":
+            a.squeeze(int(rng.integers(1, 4)))
+        elif op == "unsqueeze":
+            a.unsqueeze()
+        elif op == "swap_out" and a.n_mapped[slot] > 0:
+            h = a.swap_out(slot, gather)
+            handles[id(h)] = (h, truth.pop(slot))
+        elif op == "swap_in" and handles:
+            hid = list(handles)[int(rng.integers(len(handles)))]
+            h, saved = handles[hid]
+            free_slots = [s for s in range(slots_n) if a.n_mapped[s] == 0]
+            if free_slots and a.can_admit(a.swap_pages_needed(h)):
+                dst = free_slots[0]
+
+                def scatter(fresh, payload):
+                    for k in pools:
+                        pools[k][fresh] = payload[k]
+
+                assert a.swap_in(dst, h, scatter)
+                del handles[hid]
+                # bit-identical round-trip, including the int8 rows
+                for lp, (rows, codes) in saved.items():
+                    p = int(a.table[dst, lp])
+                    np.testing.assert_array_equal(pools["rows"][p], rows)
+                    np.testing.assert_array_equal(pools["codes"][p], codes)
+                truth[dst] = saved
+        elif op == "free" and a.n_mapped[slot] > 0:
+            a.free_slot(slot)
+            truth.pop(slot, None)
+        elif op == "crash":
+            # host-swap everything live, rebuild the allocator, keep
+            # the handles: exactly serve()'s crash path, allocator-side
+            for s in range(slots_n):
+                if a.n_mapped[s] > 0:
+                    h = a.swap_out(s, gather)
+                    handles[id(h)] = (h, truth.pop(s))
+            for h, _ in handles.values():
+                a.swap_to_full(h, gather)
+            keep = a.swapped
+            audits_total += a.audits_run
+            a = PageAllocator(n_pages, slots_n, max_pages=8, page=4,
+                              audit=True)
+            a.swapped = keep
+            pools = _synthetic_pages(n_pages, rng)   # device contents lost
+        a.check_invariants()
+    assert audits_total + a.audits_run > 0
+
+
+def test_check_invariants_catches_corruption():
+    """The audit must actually fire on broken state, not just pass on
+    good state."""
+    a = PageAllocator(8, 2, max_pages=4, page=4, audit=False)
+    assert a.ensure(0, 0)
+    a.ref[int(a.table[0, 0])] += 1          # phantom reference
+    with pytest.raises(AssertionError, match="refcount"):
+        a.check_invariants()
+    a2 = PageAllocator(8, 2, max_pages=4, page=4)
+    assert a2.ensure(0, 0)
+    a2.table[0, 1] = a2.table[0, 0]         # stale mapping beyond n_mapped
+    with pytest.raises(AssertionError, match="stale"):
+        a2.check_invariants()
+    a3 = PageAllocator(8, 2, max_pages=4, page=4)
+    a3.ref[OVERFLOW_PAGE] = 1
+    with pytest.raises(AssertionError, match="overflow"):
+        a3.check_invariants()
