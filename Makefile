@@ -4,7 +4,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test dev-deps bench bench-select bench-decode serve-smoke \
-	serve-smoke-faults roofline-kernel check-regression
+	serve-smoke-faults serve-smoke-overload roofline-kernel \
+	check-regression
 
 dev-deps:
 	-pip install -r requirements-dev.txt
@@ -50,6 +51,15 @@ serve-smoke:
 # re-prefilled tokens and zero cold re-plans.
 serve-smoke-faults:
 	python examples/serve_topk.py --faults 0
+
+# Overload-resilience smoke: seeded load spikes the QoS degradation
+# ladder absorbs as per-slot quality rungs (ladder-off needs >=2
+# preemptions; ladder-on completes every request with zero requeues and
+# zero timeouts), a corrupted swap payload quarantined at the checksum
+# gate, and a child process killed mid-serve resumed from checkpoint
+# with bitwise-equal outputs.
+serve-smoke-overload:
+	python examples/serve_topk.py --overload 0
 
 roofline-kernel:
 	python -m repro.launch.roofline --kernel

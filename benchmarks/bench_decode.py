@@ -186,6 +186,7 @@ def bench_decode() -> List[Row]:
     rows += _bench_handoff()
     rows += _bench_shared_prefix()
     rows += _bench_fault_swap()
+    rows += _bench_degradation()
     return rows
 
 
@@ -478,4 +479,64 @@ def _bench_fault_swap() -> List[Row]:
          f"swap-in restore {restore_us:.0f}us/restore mean, host-swap "
          f"peak {s['host_swap_bytes_peak']} B "
          f"(jit-inclusive, informational)"),
+    ]
+
+
+def _bench_degradation() -> List[Row]:
+    """Overload policy on the reduced serving model: a deterministic
+    load-spike + slow-step schedule served once with the SLO
+    degradation ladder (per-slot plan-quality rungs absorb the
+    pressure: every request completes, zero requeues/timeouts) and
+    once without it (the PR 7 behavior: the spike sheds requests by
+    preemption/requeue).  A second schedule parks a swap handle and
+    corrupts one payload byte — the swap-in checksum gate must detect
+    and quarantine it, with the victim recovering by re-prefill.  The
+    gate pins every counter exactly; there are no wall rows."""
+    import dataclasses
+
+    from repro.configs.archs import SMOKE
+    from repro.launch.faults import FaultPlan
+    from repro.launch.serve import serve
+
+    cfg = dataclasses.replace(
+        SMOKE["qwen3-4b"], topk_impl="bisect", sata_decode="on",
+        sata_decode_block=8, sata_decode_replan=4,
+        kv_cache_layout="paged", kv_pool_pages=6, sata_qos_ladder=True)
+    cfg_off = dataclasses.replace(cfg, sata_qos_ladder=False)
+    kw = dict(smoke=True, n_requests=4, batch_slots=2, gen_len=12,
+              max_len=32, prompt_len=6)
+    spikes = FaultPlan().load_spike(4, 2).slow_step(5).load_spike(10, 1)
+    base = serve("qwen3-4b", cfg=cfg, **kw)
+    lad = serve("qwen3-4b", cfg=cfg, faults=spikes, **kw)
+    req = serve("qwen3-4b", cfg=cfg_off, faults=spikes, **kw)
+    lo, ro, q = lad["page_occupancy"], req["page_occupancy"], lad["qos"]
+    # requests the ladder never degraded must be bitwise equal to the
+    # no-fault run (per-slot knob isolation)
+    eq_undeg = all(lad["outputs"][r] == base["outputs"][r]
+                   for r, tl in lad["degradation"].items() if not tl)
+    corr = (FaultPlan().preempt(6).defer_admission(6).defer_admission(7)
+            .corrupt_page(7).defer_admission(8))
+    intg = serve("qwen3-4b", cfg=cfg, faults=corr, **kw)
+    io = intg["page_occupancy"]
+    eq_intg = intg["outputs"] == base["outputs"]
+    return [
+        ("decode/degradation/ladder", 0.0,
+         f"completed {len(lad['request_latency_s'])}/{kw['n_requests']} "
+         f"requests under spike, requeues={lo['requeue_preemptions']}, "
+         f"timeouts={len(lad['timed_out'])}, "
+         f"degraded_steps={q['degraded_steps']}, "
+         f"rung_downs={q['rung_downs']}, rung_ups={q['rung_ups']}, "
+         f"outputs_equal={eq_undeg}"),
+        ("decode/degradation/requeue_baseline", 0.0,
+         f"completed {len(req['request_latency_s'])}/{kw['n_requests']} "
+         f"requests under spike, requeue discarded "
+         f"{ro['requeue_tokens_discarded']} tokens over "
+         f"{ro['preemptions']} preemptions, "
+         f"re_prefill_tokens={ro['re_prefill_tokens']}"),
+        ("decode/degradation/integrity", 0.0,
+         f"corrupt_injected={io['corrupt_pages_injected']}, "
+         f"corrupt_detected={io['corrupt_pages_detected']}, "
+         f"quarantined_pages={io['quarantined_pages']}, "
+         f"re_prefill_tokens={io['re_prefill_tokens']}, "
+         f"outputs_equal={eq_intg}"),
     ]

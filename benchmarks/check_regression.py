@@ -68,6 +68,17 @@ EXACT_PATTERNS = [
     ("requeue_discarded", r"requeue discarded (\d+) tokens"),
     ("quad_buffer", r"quad_SxS_buffer=(True|False)"),
     ("outputs_equal", r"outputs_equal=(True|False)"),
+    # overload-resilience rows (decode/degradation/*)
+    ("completed", r"completed (\d+)/\d+ requests"),
+    ("requeues", r"requeues=(\d+)"),
+    ("timeouts", r"timeouts=(\d+)"),
+    ("degraded_steps", r"degraded_steps=(\d+)"),
+    ("rung_downs", r"rung_downs=(\d+)"),
+    ("rung_ups", r"rung_ups=(\d+)"),
+    ("spike_preemptions", r"over (\d+) preemptions"),
+    ("corrupt_injected", r"corrupt_injected=(\d+)"),
+    ("corrupt_detected", r"corrupt_detected=(\d+)"),
+    ("quarantined_pages", r"quarantined_pages=(\d+)"),
 ]
 MAX_ERR_RE = re.compile(r"max_err[_a-z]*\s+([0-9.]+e?[+-]?[0-9]*)")
 

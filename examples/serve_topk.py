@@ -12,16 +12,29 @@ crash, the allocator's invariant audit stays on throughout, and the
 demo asserts the restored outputs are bitwise equal to the fault-free
 run with zero re-prefilled tokens and zero cold re-plans.
 
+With ``--overload SEED`` the demo runs the overload-resilience
+scenario: a seeded load-spike schedule that forces >=2 preemptions
+without the QoS ladder completes EVERY request with zero
+requeues/timeouts when the ladder absorbs the pressure as per-slot
+quality rungs, a corrupted host-swap payload is detected at the
+swap-in checksum gate and quarantined (victim recovers by re-prefill),
+and a child process killed mid-serve resumes from its checkpoint in
+THIS process with bitwise-equal outputs.
+
 Run:  PYTHONPATH=src python examples/serve_topk.py
           [--paged] [--summary int8] [--replan-mode sketch]
-          [--faults SEED]
+          [--faults SEED] [--overload SEED]
 """
 import argparse
 import dataclasses
+import os
+import subprocess
+import sys
+import tempfile
 
 from repro.configs.archs import SMOKE
 from repro.launch.faults import FaultPlan
-from repro.launch.serve import serve
+from repro.launch.serve import ServeKilled, serve
 
 
 def main():
@@ -53,6 +66,17 @@ def main():
                          "squeeze + crash schedule forces host-swap "
                          "preemptions; asserts bitwise-equal restored "
                          "outputs with the invariant audit on")
+    ap.add_argument("--overload", type=int, default=None, metavar="SEED",
+                    help="overload-resilience scenario: seeded load "
+                         "spikes absorbed by the QoS degradation "
+                         "ladder, a corrupted swap payload quarantined "
+                         "at the checksum gate, and a cross-process "
+                         "kill/resume from checkpoint — all asserted")
+    # internal: overload child mode (run to the kill step, then die)
+    ap.add_argument("--_ckpt-dir", dest="_ckpt_dir", default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--_kill-at", dest="_kill_at", type=int, default=None,
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
     cfg = dataclasses.replace(
         SMOKE["qwen3-4b"],
@@ -63,6 +87,12 @@ def main():
         sata_summary=args.summary,
         sata_replan_mode=args.replan_mode,
     )
+    if args.overload is not None:
+        child_args = ["--summary", args.summary,
+                      "--replan-mode", args.replan_mode]
+        return overload_demo(cfg, args.overload, child_args,
+                             ckpt_dir=args._ckpt_dir,
+                             kill_at=args._kill_at)
     if args.faults is not None:
         return faults_demo(cfg, args.faults)
     if args.shared_prefix:
@@ -140,6 +170,97 @@ def faults_demo(cfg, seed):
     assert o["re_prefill_tokens"] == 0 and o["swap_cold_replans"] == 0
     assert o["crashes"] == 1 and o["audits_run"] > 0
     assert all(len(v) == 12 for v in out["outputs"].values())
+
+
+def _overload_schedule(seed):
+    """Seeded load spikes / slow steps, plus a deterministic preempt →
+    park → corrupt sequence so the checksum gate provably fires: the
+    victim's swap handle sits parked (admission deferred) when the
+    corruption lands, and its re-admission must quarantine it."""
+    return (FaultPlan.seeded_overload(seed, steps=24, n_corrupt=0)
+            .preempt(8).defer_admission(8).defer_admission(9)
+            .corrupt_page(9).defer_admission(10))
+
+
+def overload_demo(cfg, seed, child_args, ckpt_dir=None, kill_at=None):
+    """Overload resilience, three pillars asserted end to end:
+
+    1. The QoS ladder turns a load-spike schedule that forces >=2
+       preemptions without it into per-slot quality rungs — every
+       request completes, zero requeues/timeouts, and requests whose
+       slots never degraded are BITWISE equal to the no-fault run.
+    2. A byte flipped in a parked swap payload is detected at the
+       swap-in checksum gate and quarantined; the victim recovers by
+       deterministic re-prefill (outputs unchanged).
+    3. A child process killed mid-serve resumes from its checkpoint in
+       this process with bitwise-equal outputs."""
+    cfg = dataclasses.replace(cfg, sata_decode_replan=4,
+                              kv_cache_layout="paged", kv_pool_pages=6,
+                              sata_qos_ladder=True)
+    kw = dict(smoke=True, n_requests=4, batch_slots=2, gen_len=12,
+              max_len=32, prompt_len=6)
+    faults = _overload_schedule(seed)
+    if ckpt_dir is not None:
+        # --- child mode: serve into the checkpoint dir until the
+        # injected kill, then die (the parent resumes from disk)
+        try:
+            serve("qwen3-4b", cfg=cfg, faults=faults,
+                  checkpoint_dir=ckpt_dir, checkpoint_every=5,
+                  kill_at_step=kill_at, **kw)
+        except ServeKilled as e:
+            print(f"[serve_topk] child: {e}")
+            return
+        raise AssertionError("child completed — kill step never reached")
+    print(f"[serve_topk] overload schedule (seed {seed}):")
+    print(faults.describe())
+    base = serve("qwen3-4b", cfg=cfg, **kw)              # no faults
+    out = serve("qwen3-4b", cfg=cfg, faults=faults, **kw)
+    off = serve("qwen3-4b", faults=faults,
+                cfg=dataclasses.replace(cfg, sata_qos_ladder=False), **kw)
+    o, q = out["page_occupancy"], out["qos"]
+    print(f"[serve_topk] ladder OFF: "
+          f"{off['page_occupancy']['preemptions']} preemptions; ladder "
+          f"ON: {o['preemptions']} ({o['requeue_preemptions']} requeues, "
+          f"{len(out['timed_out'])} timeouts), {q['rung_downs']} rung "
+          f"downs / {q['rung_ups']} ups over {q['degraded_steps']} "
+          f"degraded slot-steps")
+    print(f"[serve_topk] degradation timelines: {out['degradation']}")
+    # pillar 1 — the ladder absorbs what preemption used to shed
+    # (the one remaining ladder-ON preemption is the demo's explicit
+    # park-a-handle event, not spike shedding)
+    assert off["page_occupancy"]["preemptions"] >= 2, \
+        "schedule too soft: ladder-off run must need >= 2 preemptions"
+    assert sorted(out["outputs"]) == list(range(kw["n_requests"]))
+    assert o["requeue_preemptions"] == 0 and not out["timed_out"]
+    assert all(len(v) == kw["gen_len"] for v in out["outputs"].values())
+    assert any(tl for tl in out["degradation"].values()), \
+        "spikes must appear on some request's timeline"
+    for r, tl in out["degradation"].items():
+        if not tl:
+            assert out["outputs"][r] == base["outputs"][r], \
+                f"request {r} never degraded but its tokens moved"
+    # pillar 2 — the flipped byte is caught BEFORE any page scatters
+    print(f"[serve_topk] integrity: {o['corrupt_pages_injected']} "
+          f"corruptions injected, {o['corrupt_pages_detected']} detected, "
+          f"{o['quarantined_pages']} pages quarantined, "
+          f"re_prefill_tokens={o['re_prefill_tokens']}")
+    assert o["corrupt_pages_injected"] == 1
+    assert o["corrupt_pages_detected"] == 1
+    assert o["re_prefill_tokens"] > 0, "victim must recover by re-prefill"
+    # pillar 3 — cross-process kill/resume, bitwise
+    d = tempfile.mkdtemp(prefix="serve_overload_ckpt_")
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--overload", str(seed), "--_ckpt-dir", d,
+           "--_kill-at", "13"] + child_args
+    subprocess.run(cmd, check=True, env=dict(os.environ))
+    res = serve("qwen3-4b", cfg=cfg, faults=faults, checkpoint_dir=d,
+                checkpoint_every=5, resume=True, **kw)
+    equal = res["outputs"] == out["outputs"]
+    print(f"[serve_topk] killed child resumed at step "
+          f"{res['checkpoint']['resumed_at']}; outputs bitwise equal to "
+          f"uninterrupted overload run: {equal}")
+    assert equal, "checkpoint/resume changed outputs"
+    print("[serve_topk] overload scenario OK")
 
 
 def shared_prefix_demo(cfg):

@@ -37,7 +37,11 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- save
     def save(self, step: int, state: Any, extra: Optional[Dict] = None,
-             blocking: bool = True) -> None:
+             blocking: bool = True,
+             meta_blob: Optional[bytes] = None) -> None:
+        """``meta_blob``: opaque host-side bytes (e.g. a pickled serve
+        control-state) written atomically alongside the leaves as
+        ``meta.bin`` — read back with :meth:`load_meta`."""
         self.wait()                                   # one in flight max
         leaves, treedef = _flatten(state)
         # device → host snapshot NOW, as an owning copy: np.asarray of a
@@ -60,6 +64,8 @@ class CheckpointManager:
                         "treedef": str(tdef_repr),
                         "extra": extra or {}}
             (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if meta_blob is not None:
+                (tmp / "meta.bin").write_bytes(meta_blob)
             if final.exists():
                 shutil.rmtree(final)
             os.replace(tmp, final)
@@ -124,3 +130,11 @@ class CheckpointManager:
         step = self.latest_step() if step is None else step
         return json.loads(
             (self.dir / f"step_{step}" / "manifest.json").read_text())
+
+    def load_meta(self, step: Optional[int] = None) -> bytes:
+        """The ``meta_blob`` bytes saved with this step (see
+        :meth:`save`)."""
+        self.wait()
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint found"
+        return (self.dir / f"step_{step}" / "meta.bin").read_bytes()

@@ -91,6 +91,23 @@ selected blocks — with ``step`` already *off* the re-plan beat, so the
 first decode steps run the planned incremental path instead of a cold
 full re-plan (or, worse, a dense step).
 
+**Per-slot QoS vectors** (``init_decode_plan(..., qos=True)``): the
+state additionally carries ``budget``/``interval`` (B,) int32 and
+``quant``/``sketch`` (B,) bool — the degradation-ladder knobs the
+serving loop's QoS controller mutates *as values* between steps (the
+pytree structure never changes, so stepping a slot down a rung never
+re-traces the jitted step).  ``budget`` caps the blocks a re-plan may
+keep (ranked by best block score, the token threshold then recomputed
+over the survivors — still an exact top-k *within* the planned
+blocks); ``interval`` is the slot's own re-plan beat;
+``quant`` routes the slot's summary *ranking* through an int8
+quantize→dequantize round trip (conservative — containment as in the
+int8 backend); ``sketch`` swaps the slot's periodic re-plan for the
+hierarchical ``sketch_replan``.  QoS steps always run the per-slot
+``lax.map`` path so each slot's arithmetic depends only on its own
+knobs — an undegraded slot's output is bitwise identical to a run
+where no slot ever degraded.
+
 All functions are jittable; the state is a plain dict pytree so it
 stacks across layers and rides the serving scan next to the KV cache.
 """
@@ -179,13 +196,49 @@ def plan_summary_bounds(plan: PlanState) -> Tuple[jax.Array, jax.Array]:
     return plan["k_min"], plan["k_max"]
 
 
+def degraded_summary_bounds(plan: PlanState,
+                            quant: Optional[jax.Array]
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """``plan_summary_bounds`` with the per-slot ``quant`` QoS rung
+    applied: flagged slots rank from an int8 quantize→dequantize round
+    trip of their fp32 bounds (the same conservative rounding as the
+    int8 backend, so containment — and with it the superset-safe
+    ranking property — holds).  Unflagged slots pass through bitwise
+    untouched (a ``jnp.where`` of the exact values).  No-op when the
+    backend already stores int8 codes."""
+    k_min, k_max = plan_summary_bounds(plan)
+    if quant is None or "k_scale" in plan:
+        return k_min, k_max
+    d_lo, d_hi = dequantize_summaries(*quantize_summaries(k_min, k_max))
+    m = quant[:, None, None, None]
+    return jnp.where(m, d_lo, k_min), jnp.where(m, d_hi, k_max)
+
+
+def clamp_plan_budget(occ: jax.Array, blk_score: jax.Array,
+                      budget: jax.Array) -> jax.Array:
+    """Cap selected blocks per (slot, kv head) at the slot's QoS
+    ``budget``: rank the selected blocks by their best token score and
+    keep the top-``budget``.  When a slot's budget covers its whole
+    selection the bisect threshold converges below every finite score
+    and the occupancy passes through unchanged.  occ: (B, KV, nkb)
+    bool; blk_score: (B, KV, nkb) fp32 (finite on selected blocks);
+    budget: (B,) int32."""
+    s = jnp.where(occ, blk_score, NEG_INF)
+    thr = kth_largest_bisect(s, budget[:, None, None])        # (B, KV, 1)
+    return occ & bisect_select(s, thr)
+
+
 def init_decode_plan(batch: int, n_kv_heads: int, max_len: int, d: int,
                      k_block: int, plan_blocks: Optional[int] = None,
-                     summary: str = "fp32") -> PlanState:
+                     summary: str = "fp32", *, qos: bool = False,
+                     replan_interval: int = 1) -> PlanState:
     """Empty plan over a ``max_len`` cache.  ``plan_blocks`` (P) is the
     static plan width; ``None`` keeps the full ``nkb`` (exact — no block
     a re-plan selects is ever dropped).  ``summary`` picks the bounds
-    storage backend (module docstring)."""
+    storage backend (module docstring).  ``qos=True`` adds the per-slot
+    degradation-ladder knob vectors (initialized to full quality:
+    budget = P, interval = ``replan_interval``, fp32 exact re-plans) —
+    see the module docstring's QoS section."""
     assert max_len % k_block == 0, (max_len, k_block)
     assert summary in SUMMARY_BACKENDS, summary
     nkb = max_len // k_block
@@ -206,8 +259,18 @@ def init_decode_plan(batch: int, n_kv_heads: int, max_len: int, d: int,
             "k_max": jnp.full((batch, n_kv_heads, nkb, d), -jnp.inf,
                               jnp.float32),
         }
+    qos_state = {}
+    if qos:
+        qos_state = {
+            "budget": jnp.full((batch,), p, jnp.int32),
+            "interval": jnp.full((batch,), max(int(replan_interval), 1),
+                                 jnp.int32),
+            "quant": jnp.zeros((batch,), bool),
+            "sketch": jnp.zeros((batch,), bool),
+        }
     return {
         **bounds,
+        **qos_state,
         "kv_indices": jnp.zeros((batch, n_kv_heads, p), jnp.int32),
         "kv_counts": jnp.zeros((batch, n_kv_heads), jnp.int32),
         "step": jnp.zeros((batch,), jnp.int32),
@@ -276,7 +339,11 @@ def release_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
 # move the COMPLETE per-slot state (summaries whatever the backend,
 # selected blocks, beat phase, churn trigger, cumulative re-plan
 # counter, liveness) or the restored slot's decode diverges from the
-# never-preempted run
+# never-preempted run.  The QoS knob vectors (budget/interval/quant/
+# sketch) are deliberately NOT here: a rung is a property of the
+# serving SLOT under load, owned by the serve loop's QoS controller —
+# it re-pushes the knob vectors on every admission and rung change, so
+# swapping a request must not drag a rung to a different slot.
 PLAN_SLOT_FIELDS = ("k_min", "k_max", "k_scale", "k_zero", "kv_indices",
                     "kv_counts", "step", "churn", "replans", "active")
 
@@ -394,7 +461,8 @@ def block_upper_bounds(q: jax.Array, k_min: jax.Array, k_max: jax.Array,
 
 
 def full_replan(q: jax.Array, k_cache: jax.Array, pos: jax.Array, *,
-                topk_k: int, k_block: int, plan_blocks: int
+                topk_k: int, k_block: int, plan_blocks: int,
+                budget: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Exact per-step plan: score all cached keys, bisect each query
     row's top-k threshold, keep every block with a selected token.
@@ -402,6 +470,12 @@ def full_replan(q: jax.Array, k_cache: jax.Array, pos: jax.Array, *,
     q: (B, KV, G, D); k_cache: (B, S, KV, D); pos: (B,).
     Returns (kv_indices (B, KV, P), kv_counts (B, KV),
     thresholds (B, KV, G, 1) fp32).
+
+    ``budget`` (B,) int32 (QoS ladder) caps the kept blocks per (slot,
+    head) at the slot's degraded width: selected blocks ranked by best
+    token score, top-``budget`` survive, and the token threshold is
+    re-bisected over the survivors only — the plan stays an exact
+    top-k *within* the (narrowed) planned blocks.
     """
     b, s, kv, d = k_cache.shape
     nkb = s // k_block
@@ -414,6 +488,12 @@ def full_replan(q: jax.Array, k_cache: jax.Array, pos: jax.Array, *,
     thr = kth_largest_bisect(sc, topk_k)                     # (B, KV, G, 1)
     sel = bisect_select(jnp.where(valid, sc, -jnp.inf), thr) & valid
     occ = sel.reshape(b, kv, -1, nkb, k_block).any(axis=(2, 4))
+    if budget is not None:
+        blk_score = sc.max(axis=2).reshape(b, kv, nkb, k_block).max(-1)
+        occ = clamp_plan_budget(occ, blk_score, budget)
+        keep = jnp.repeat(occ, k_block, axis=-1)             # (B, KV, S)
+        thr = kth_largest_bisect(
+            jnp.where(keep[:, :, None, :], sc, NEG_INF), topk_k)
     kv_indices, kv_counts = _compact_rows(occ, plan_blocks)
     return kv_indices, kv_counts, thr
 
@@ -453,7 +533,9 @@ def gather_planned_keys(k_cache: jax.Array, kv_indices: jax.Array, *,
 
 def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
                      pos: jax.Array, *, topk_k: int, k_block: int,
-                     page_table: Optional[jax.Array] = None
+                     page_table: Optional[jax.Array] = None,
+                     budget: Optional[jax.Array] = None,
+                     quant: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Approximate per-step plan from the incrementally-maintained block
     summaries: rank all valid blocks by their upper-bound score (new
@@ -465,6 +547,11 @@ def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     the physical page pool and the planned-block gather walks the table
     (see ``gather_planned_keys``).  Cost: O(nkb·D) ranking +
     O(P·k_block·D) threshold — independent of the prefix length.
+
+    QoS ladder: ``budget`` (B,) int32 ranks top-``budget`` blocks
+    instead of top-P (the plan layout stays padded to the static P);
+    ``quant`` (B,) bool routes flagged slots' summary ranking through
+    the conservative int8 round trip (``degraded_summary_bounds``).
     """
     b, kv, _, d = q.shape
     nkb = plan["k_min"].shape[2]
@@ -472,15 +559,17 @@ def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     sm_scale = 1.0 / np.sqrt(d)
     valid_blk = (jnp.arange(nkb) * k_block <= pos[:, None])   # (B, nkb)
     vb = valid_blk[:, None, :, None]
-    k_min, k_max = plan_summary_bounds(plan)   # fp32 either backend
+    k_min, k_max = degraded_summary_bounds(plan, quant)  # fp32 either way
     ub = block_upper_bounds(q.astype(jnp.float32),
                             jnp.where(vb, k_min, 0.0),
                             jnp.where(vb, k_max, 0.0),
                             sm_scale=sm_scale)                # (B,KV,G,nkb)
     ub_row = jnp.where(valid_blk[:, None, :], ub.max(axis=2), NEG_INF)
     # top-P blocks per (slot, kv head) — the same bisect predicate as the
-    # token-level threshold, applied at block granularity
-    thr_b = kth_largest_bisect(ub_row, p)                     # (B, KV, 1)
+    # token-level threshold, applied at block granularity (a QoS budget
+    # narrows the rank per slot; k broadcasts through the bisect)
+    p_row = p if budget is None else budget[:, None, None]
+    thr_b = kth_largest_bisect(ub_row, p_row)                 # (B, KV, 1)
     occ = bisect_select(ub_row, thr_b) & valid_blk[:, None, :]
     kv_indices, kv_counts = _compact_rows(occ, p)
     # exact token threshold, restricted to the planned blocks
@@ -516,7 +605,9 @@ def sketch_geometry(nkb: int, plan_blocks: int, sketch_factor: int
 def sketch_replan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
                   pos: jax.Array, *, topk_k: int, k_block: int,
                   sketch_factor: int = 4,
-                  page_table: Optional[jax.Array] = None
+                  page_table: Optional[jax.Array] = None,
+                  budget: Optional[jax.Array] = None,
+                  quant: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Hierarchical two-level re-plan: the sub-linear replacement for
     ``full_replan``'s all-cached-K stream.
@@ -539,9 +630,12 @@ def sketch_replan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     valid block is a candidate and the result equals ``full_replan``
     bitwise (the bisection threshold depends only on the live score
     multiset).  Shapes as ``full_replan``; with ``page_table`` set,
-    ``k_cache`` is the physical page pool."""
+    ``k_cache`` is the physical page pool.  QoS ladder: ``budget``
+    (B,) int32 narrows both levels per slot (``ceil(budget/F)``
+    surviving super-blocks, then the block cap as in ``full_replan``);
+    ``quant`` (B,) bool quantizes flagged slots' sketch ranking."""
     b, kv, gq, d = q.shape
-    k_min, k_max = plan_summary_bounds(plan)
+    k_min, k_max = degraded_summary_bounds(plan, quant)
     nkb = k_min.shape[2]
     p = plan["kv_indices"].shape[-1]
     f, nsb, c, _ = sketch_geometry(nkb, p, sketch_factor)
@@ -556,7 +650,10 @@ def sketch_replan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
                             sm_scale=sm_scale)                # (B,KV,G,nsb)
     valid_sb = valid_blk.reshape(b, nsb, f).any(axis=-1)
     ub_row = jnp.where(valid_sb[:, None, :], ub.max(axis=2), NEG_INF)
-    thr_sb = kth_largest_bisect(ub_row, c)                    # (B, KV, 1)
+    # QoS budget narrows the surviving super-block count per slot
+    c_row = c if budget is None else \
+        jnp.clip((budget[:, None, None] + f - 1) // f, 1, c)
+    thr_sb = kth_largest_bisect(ub_row, c_row)                # (B, KV, 1)
     occ_sb = bisect_select(ub_row, thr_sb) & valid_sb[:, None, :]
     sb_idx, sb_cnt = _compact_rows(occ_sb, c)                 # (B, KV, C)
     cand = (sb_idx[..., None] * f +
@@ -575,6 +672,12 @@ def sketch_replan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     sel = bisect_select(jnp.where(live[:, :, None, :], sc, -jnp.inf),
                         thr) & live[:, :, None, :]
     sel_blk = sel.reshape(b, kv, gq, c * f, k_block).any(axis=(2, 4))
+    if budget is not None:
+        cand_score = sc.max(axis=2).reshape(b, kv, c * f, k_block).max(-1)
+        sel_blk = clamp_plan_budget(sel_blk, cand_score, budget)
+        keep = jnp.repeat(sel_blk, k_block, axis=-1)          # (B,KV,C·F·kb)
+        thr = kth_largest_bisect(
+            jnp.where(keep[:, :, None, :], sc, NEG_INF), topk_k)
     occ = jnp.zeros((b, kv, nkb), bool).at[
         jnp.arange(b)[:, None, None],
         jnp.arange(kv)[None, :, None], cand].max(sel_blk)
@@ -637,9 +740,21 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
     traffic proportional to the triggering subset, not the batch
     (steps where the whole batch agrees keep the batched
     single-branch fast path).  With ``page_table`` set, ``k_cache`` is
-    the physical page pool of the paged serving layout."""
+    the physical page pool of the paged serving layout.
+
+    **QoS ladder** (state carries the knob vectors — ``budget`` in
+    ``plan``): the trigger reads each slot's own ``interval``, every
+    step runs the per-slot ``lax.map`` path (knobs differ per slot, so
+    there is no batched fast path — and per-slot isolation is what
+    makes an undegraded slot bitwise independent of its degraded
+    neighbors), re-plans honor the slot's ``budget``/``quant`` and a
+    flagged ``sketch`` slot re-plans hierarchically.  Incompatible
+    with the churn-adaptive trigger (the controller owns the beat)."""
     assert replan_mode in ("exact", "sketch"), replan_mode
     p = plan["kv_indices"].shape[-1]
+    qos = "budget" in plan
+    assert not (qos and churn_budget is not None), \
+        "QoS ladder owns the re-plan beat; use an integer interval"
 
     def _full(_):
         if replan_mode == "sketch":
@@ -658,7 +773,12 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
 
     active = plan["active"]
     churn = plan["churn"]
-    if churn_budget is not None:
+    if qos:
+        # each slot's own beat (step 0 lands on every beat, so a cold
+        # slot still re-plans first)
+        do_full = ((plan["step"] % jnp.maximum(plan["interval"], 1)) == 0) \
+            & active
+    elif churn_budget is not None:
         do_full = ((plan["step"] == 0) | (churn >= churn_budget * p)) \
             & active
     elif replan_interval <= 1:
@@ -666,7 +786,54 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
     else:
         do_full = (plan["step"] % replan_interval == 0) & active
 
-    if replan_interval <= 1 and churn_budget is None:
+    if qos:
+        # always the per-slot map: knobs differ per slot, and per-slot
+        # isolation keeps undegraded slots bitwise independent of
+        # their degraded neighbors
+        sub = {k: plan[k] for k in
+               ("k_min", "k_max", "k_scale", "k_zero", "kv_indices")
+               if k in plan}
+        xs = (do_full, q, pos, sub,
+              k_cache if page_table is None else page_table,
+              plan["budget"], plan["quant"], plan["sketch"])
+
+        def _one_qos(args):
+            do_f, qb, posb, subb, kb, bud, qnt, skt = args
+            qb, posb = qb[None], posb[None]
+            bud, qnt = bud[None], qnt[None]
+            subb = {k: v[None] for k, v in subb.items()}
+            kc = kb[None] if page_table is None else k_cache
+            tb = None if page_table is None else kb[None]
+
+            def _sketch_one(_):
+                return sketch_replan(qb, kc, subb, posb, topk_k=topk_k,
+                                     k_block=k_block,
+                                     sketch_factor=sketch_factor,
+                                     page_table=tb, budget=bud,
+                                     quant=qnt)
+
+            def _exact_one(_):
+                kf = kc if tb is None else logical_kv_view(kc, tb)
+                return full_replan(qb, kf, posb, topk_k=topk_k,
+                                   k_block=k_block, plan_blocks=p,
+                                   budget=bud)
+
+            def _full_one(_):
+                if replan_mode == "sketch":
+                    return _sketch_one(None)
+                return jax.lax.cond(skt, _sketch_one, _exact_one, None)
+
+            def _incr_one(_):
+                return incremental_plan(qb, kc, subb, posb,
+                                        topk_k=topk_k, k_block=k_block,
+                                        page_table=tb, budget=bud,
+                                        quant=qnt)
+
+            fi, fc, ft = jax.lax.cond(do_f, _full_one, _incr_one, None)
+            return fi[0], fc[0], ft[0]
+
+        kv_indices, kv_counts, thr = jax.lax.map(_one_qos, xs)
+    elif replan_interval <= 1 and churn_budget is None:
         # exact mode computes the full re-plan unconditionally (idle
         # slots ride the batched einsum for free); ``do_full`` above
         # still scopes the accounting to active slots

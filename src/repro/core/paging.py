@@ -60,12 +60,32 @@ to equal the page size (plan blocks ARE pages).
 from __future__ import annotations
 
 import hashlib
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 OVERFLOW_PAGE = 0
+
+
+class PageIntegrityError(RuntimeError):
+    """A host-swap payload failed its checksum at restore time — the
+    handle's pages were corrupted while parked in host memory.  The
+    serving driver quarantines the handle (``discard_handle`` +
+    ``PrefixCache.invalidate_pages``) and recovers the victim request
+    by re-prefill; corrupted KV is never scattered back to the pool."""
+
+
+def _payload_checksums(payload: Any) -> Dict[str, int]:
+    """crc32 per payload array (the ``gather_phys_pages`` dict layout;
+    a bare array checks under the empty key).  crc32 detects every
+    single-byte flip, which is the failure model ``corrupt_page``
+    injects — and any burst under 32 bits."""
+    if isinstance(payload, dict):
+        return {k: zlib.crc32(np.ascontiguousarray(v).tobytes())
+                for k, v in payload.items()}
+    return {"": zlib.crc32(np.ascontiguousarray(payload).tobytes())}
 
 # Host-swap payload gather/scatter callbacks: the allocator decides
 # WHICH physical pages move (host-side policy), the serving driver owns
@@ -164,15 +184,50 @@ class PageAllocator:
         # handle pins holds one reference until ``swap_in`` releases it
         self.swapped: List[Dict[str, Any]] = []
         # invariant audit (``check_invariants``) after every mutation —
-        # the debug flag tests and serve-smoke keep on by default
-        self.audit = bool(audit)
+        # the debug flag tests and serve-smoke keep on by default.
+        # ``audit="light"`` samples: the full O(pages·slots) audit runs
+        # every ``audit_period``-th mutation, every other mutation runs
+        # the O(pages) vectorized refcount-sum check — fault/property
+        # workloads keep continuous auditing without the quadratic cost
+        # on every hot-path mutation.
+        self.audit = audit if audit == "light" else bool(audit)
+        self.audit_period = 16
         self.audit_trie: Optional["PrefixCache"] = None
         self.audits_run = 0
+        self.light_audits_run = 0
+        self._mutations = 0
 
     def _audit(self) -> None:
-        if self.audit:
-            self.check_invariants()
-            self.audits_run += 1
+        if not self.audit:
+            return
+        self._mutations += 1
+        if self.audit == "light" and self._mutations % self.audit_period:
+            self._light_audit()
+            self.light_audits_run += 1
+            return
+        self.check_invariants()
+        self.audits_run += 1
+
+    def _light_audit(self) -> None:
+        """Cheap sampled-mode check: total refcounts must equal the
+        nameable reference count (table mappings + handle pins + trie
+        nodes), the overflow page must stay unreferenced, and the
+        idle-page count must match the free+squeezed lists.  Catches
+        leaked/double references in O(pages) without walking tables."""
+        expect = int(self.n_mapped.sum())
+        expect += sum(int((h["resident"] >= 0).sum())
+                      for h in self.swapped)
+        if self.audit_trie is not None:
+            expect += self.audit_trie.node_count
+        total = int(self.ref.sum())
+        assert total == expect, (
+            f"refcount sum {total} != nameable references {expect}")
+        assert self.ref[OVERFLOW_PAGE] == 0, \
+            "overflow page acquired a reference"
+        idle = int((self.ref == 0).sum()) - 1       # minus overflow
+        assert idle == len(self.free) + len(self.squeezed), (
+            f"{idle} idle pages vs {len(self.free)} free + "
+            f"{len(self.squeezed)} squeezed")
 
     @property
     def free_pages(self) -> int:
@@ -342,7 +397,11 @@ class PageAllocator:
         self.n_mapped[slot] = 0
         for p in priv_phys:
             self._deref(p)
-        handle = {"n_pages": n, "resident": resident, "chunks": chunks}
+        handle = {"n_pages": n, "resident": resident, "chunks": chunks,
+                  # integrity: one checksum set per chunk, verified
+                  # before any swap_in mutation (bit-rot in host memory
+                  # must never scatter back into the pool)
+                  "sums": [_payload_checksums(pl) for _, pl in chunks]}
         self.swapped.append(handle)
         self._audit()
         return handle
@@ -359,7 +418,9 @@ class PageAllocator:
         if not res_lp:
             return
         res_phys = [int(resident[lp]) for lp in res_lp]
-        handle["chunks"].append((res_lp, gather(res_phys)))
+        payload = gather(res_phys)
+        handle["chunks"].append((res_lp, payload))
+        handle["sums"].append(_payload_checksums(payload))
         resident[:] = -1
         for p in res_phys:
             self._deref(p)
@@ -369,6 +430,41 @@ class PageAllocator:
         """Free pages ``swap_in`` must allocate for this handle (its
         payload-backed logical pages; resident pages just remap)."""
         return sum(len(lps) for lps, _ in handle["chunks"])
+
+    def verify_handle(self, handle: Dict[str, Any]) -> None:
+        """Re-checksum every payload chunk against the sums recorded at
+        swap-out; raises :class:`PageIntegrityError` naming the first
+        mismatching chunk/array.  ``swap_in`` runs this before touching
+        any allocator state, so a corrupted handle leaves the pool
+        untouched (the driver quarantines it via ``discard_handle``)."""
+        for ci, ((lps, payload), sums) in enumerate(
+                zip(handle["chunks"], handle.get("sums", []))):
+            fresh = _payload_checksums(payload)
+            for key, want in sums.items():
+                got = fresh.get(key)
+                if got != want:
+                    raise PageIntegrityError(
+                        f"swap payload checksum mismatch: chunk {ci} "
+                        f"(logical pages {list(lps)}) array {key!r}: "
+                        f"crc {got:#010x} != recorded {want:#010x}")
+
+    def discard_handle(self, handle: Dict[str, Any]) -> List[int]:
+        """Quarantine a swap handle: drop it from the outstanding list
+        and release its resident pins (those pages' CONTENTS are fine —
+        they never left the device — but nothing references them for
+        this request anymore; host-side payload is simply abandoned).
+        Returns the formerly resident physical pages so the driver can
+        invalidate any trie entries built over them."""
+        assert any(h is handle for h in self.swapped), \
+            "unknown or already-restored handle"
+        resident = handle["resident"]
+        res = [int(p) for p in resident if p >= 0]
+        for p in res:
+            self._deref(p)
+        resident[:] = -1
+        self.swapped = [h for h in self.swapped if h is not handle]
+        self._audit()
+        return res
 
     def swap_in(self, slot: int, handle: Dict[str, Any],
                 scatter: ScatterFn) -> bool:
@@ -381,6 +477,7 @@ class PageAllocator:
         driver defers re-admission, exactly like a deferred claim)."""
         assert any(h is handle for h in self.swapped), \
             "unknown or already-restored handle"
+        self.verify_handle(handle)      # before ANY mutation
         if len(self.free) < self.swap_pages_needed(handle):
             return False
         assert self.n_mapped[slot] == 0, "swap_in needs an empty slot"
@@ -551,6 +648,10 @@ class PrefixCache:
         self.misses = 0
         self.tokens_saved = 0
         self.evictions = 0
+        # live node count (== len(retained_pages())), maintained so the
+        # allocator's light audit can price trie retention in O(1)
+        self.node_count = 0
+        self.invalidated = 0
         # the allocator's invariant audit counts trie retention —
         # wire this cache in so every audit sees the full refcount story
         alloc.audit_trie = self
@@ -667,6 +768,7 @@ class PrefixCache:
                 added += 1
                 node = part
         self._touch(node)
+        self.node_count += added
         self.alloc.shared_pages_peak = max(self.alloc.shared_pages_peak,
                                            self.alloc.shared_pages)
         self.alloc._audit()
@@ -700,9 +802,55 @@ class PrefixCache:
             else:
                 parent.children.pop(pick.digest, None)
             self.alloc.deref(pick.phys)
+            self.node_count -= 1
             freed += 1
             self.evictions += 1
         return freed
+
+    def invalidate_pages(self, pages: List[int]) -> int:
+        """Quarantine: drop every trie node whose physical page is in
+        ``pages``, together with its whole subtree (a chain walk cannot
+        cross a removed node, so orphaned descendants would be
+        unreachable dead weight), releasing one retention reference per
+        removed node.  Used when a corrupted swap handle is discarded —
+        any prefix entry built over the victim's shared pages must stop
+        being matchable.  Returns nodes removed."""
+        bad = {int(p) for p in pages}
+        removed = 0
+
+        def _drop_subtree(node: _TrieNode) -> int:
+            n = 0
+            stack = [node]
+            while stack:
+                x = stack.pop()
+                stack.extend(x.children.values())
+                stack.extend(x.partials)
+                self.alloc._deref(x.phys)
+                n += 1
+            return n
+
+        def _scrub(node: _TrieNode) -> None:
+            nonlocal removed
+            for key in list(node.children):
+                child = node.children[key]
+                if child.phys in bad:
+                    removed += _drop_subtree(child)
+                    del node.children[key]
+                else:
+                    _scrub(child)
+            keep = []
+            for part in node.partials:
+                if part.phys in bad:
+                    removed += _drop_subtree(part)
+                else:
+                    keep.append(part)
+            node.partials = keep
+
+        _scrub(self.root)
+        self.node_count -= removed
+        self.invalidated += removed
+        self.alloc._audit()
+        return removed
 
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses
@@ -713,4 +861,5 @@ class PrefixCache:
             "prefill_tokens_saved": self.tokens_saved,
             "cached_pages": self.cached_pages,
             "evictions": self.evictions,
+            "invalidated": self.invalidated,
         }

@@ -38,7 +38,13 @@ def kth_largest_bisect(scores: jax.Array, k: int, iters: int = 16
     fuzzy at bf16 score precision) and 16 iterations resolve the
     threshold to range/2^16.  Returns a threshold t with
     count(scores >= t) >= k (ties may admit a few extra keys — the same
-    superset semantics as the sort threshold)."""
+    superset semantics as the sort threshold).
+
+    ``k`` may also be an array broadcasting against the row-count shape
+    ``scores.shape[:-1] + (1,)`` — each row then converges to ITS OWN
+    k-th largest value (``cnt >= k`` is elementwise).  The decode QoS
+    ladder leans on this: per-slot degraded plan budgets are just a
+    (B, 1, 1) ``k``, no re-trace, no second kernel."""
     valid = scores > NEG_INF / 2
     sc = jnp.where(valid, scores, jnp.inf)
     lo = jnp.minimum(jnp.min(sc, axis=-1, keepdims=True), 0.0) - 1.0

@@ -290,7 +290,9 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
                        summary: str = "fp32",
                        replan_mode: str = "exact",
                        sketch_factor: int = 4,
-                       plan_blocks: Optional[int] = None) -> Dict:
+                       plan_blocks=None,
+                       quant=None,
+                       sketch=None) -> Dict:
     """Per-step K/V fetch accounting for the decode route.  kv_counts:
     (B, KV) [or (L, B, KV) — any (..., B, KV)] int; pos: (B,) int
     per-slot positions.
@@ -318,6 +320,16 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
     the in-plan threshold.  ``step_bytes_plan_route`` then totals
     kernel + plan traffic for the step, the honest number to compare
     against ``step_bytes_dense_route`` (dense decode plans nothing).
+
+    **Degraded budgets** (QoS ladder): ``plan_blocks`` also accepts a
+    (B,) per-slot vector — a degraded slot's sketch re-plan prices at
+    ITS narrowed candidate geometry, not the admission-time P.
+    ``quant``/``sketch`` (B,) bool mark slots on the int8-ranking /
+    sketch-re-plan rungs: a quantized slot's summary reads price at
+    the int8 code size (the modeled traffic of the rung's backend
+    switch) and a sketched slot's periodic re-plan prices
+    hierarchically even when the global ``replan_mode`` is exact.
+    Scalar arguments keep the pre-ladder accounting bit-for-bit.
     """
     from repro.core.decode_plan import sketch_geometry, summary_bytes
     cnt = np.asarray(kv_counts)
@@ -338,17 +350,47 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
     if replan is not None:
         k_tile_bytes = k_block * d * dtype_bytes               # K only
         layers = cnt.size // (b * kv)
-        sum_head = 0 if nkb is None else summary_bytes(nkb, d, summary)
-        summaries_b = sum_head * b * kv * layers
-        if replan_mode == "sketch" and nkb is not None:
-            pb = nkb if plan_blocks is None else min(int(plan_blocks),
-                                                     nkb)
-            _, _, _, cand = sketch_geometry(nkb, pb, sketch_factor)
-            cand_slot = np.minimum(valid_blocks, cand)         # (B,)
-            full_slot = (cand_slot * kv * layers * k_tile_bytes
-                         + sum_head * kv * layers)
+        # per-slot summary pricing: the quant rung models the int8
+        # backend's code reads for flagged slots
+        if nkb is None:
+            sum_head_slot = np.zeros(b, np.int64)
         else:
-            full_slot = valid_blocks * kv * layers * k_tile_bytes
+            s_base = summary_bytes(nkb, d, summary)
+            sum_head_slot = np.full(b, s_base, np.int64)
+            if quant is not None:
+                qn = np.asarray(quant, bool).reshape(-1)
+                assert qn.size == b, (qn.size, b)
+                sum_head_slot = np.where(
+                    qn, summary_bytes(nkb, d, "int8"), s_base)
+        summaries_b = int(sum_head_slot.sum()) * kv * layers
+        # per-slot plan width: a (B,) vector prices each slot's sketch
+        # geometry at its own (possibly degraded) budget
+        pb_arr = None if plan_blocks is None else \
+            np.asarray(plan_blocks).reshape(-1)
+        skt = None if sketch is None else \
+            np.asarray(sketch, bool).reshape(-1)
+        exact_slot = valid_blocks * kv * layers * k_tile_bytes
+        if nkb is not None and (replan_mode == "sketch"
+                                or skt is not None):
+            pb_slot = np.full(b, nkb, np.int64)
+            if pb_arr is not None:
+                assert pb_arr.size in (1, b), (pb_arr.size, b)
+                pb_slot = np.minimum(
+                    np.broadcast_to(pb_arr, (b,)).astype(np.int64), nkb)
+            cand_slot = np.array(
+                [min(int(valid_blocks[i]),
+                     sketch_geometry(nkb, int(pb_slot[i]),
+                                     sketch_factor)[3])
+                 for i in range(b)], np.int64)
+            sketch_slot = (cand_slot * kv * layers * k_tile_bytes
+                           + sum_head_slot * kv * layers)
+            if replan_mode == "sketch":
+                full_slot = sketch_slot
+            else:
+                assert skt.size == b, (skt.size, b)
+                full_slot = np.where(skt, sketch_slot, exact_slot)
+        else:
+            full_slot = exact_slot
         full_b = int(full_slot.sum())
         incr_b = summaries_b + plan_tiles * k_tile_bytes
         rep = np.asarray(replan, np.float64).reshape(-1)
@@ -358,7 +400,7 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
         else:
             assert rep.size == b, (rep.size, b)
             cnt_slot = cnt.reshape(-1, b, kv).sum(axis=(0, 2))  # (B,)
-            incr_slot = (sum_head * kv * layers
+            incr_slot = (sum_head_slot * kv * layers
                          + cnt_slot * k_tile_bytes)
             step_b = int(round(float(
                 (rep * full_slot + (1.0 - rep) * incr_slot).sum())))

@@ -16,6 +16,19 @@ emergent behavior.  The events:
   crash_step(step)            drop the device cache + allocator; the
                               loop swaps all live state to host first
                               and restores from the swap handles
+  load_spike(step, severity)  sustained overload signal: with the QoS
+                              ladder on, every active slot steps down
+                              ``severity`` rungs; ladder off, the loop
+                              preempts ``severity`` victims (the PR 7
+                              requeue/swap baseline behavior)
+  slow_step(step)             step-deadline miss signal: one pressure
+                              tick into the QoS controller (no-op
+                              beyond a counter when the ladder is off)
+  corrupt_page(step, nth)     flip one byte in the ``nth`` outstanding
+                              host swap handle (bit-rot injection);
+                              integrity checksums must catch it at
+                              swap-in, quarantine the pages, and
+                              recover the victim by re-prefill
 
 Determinism is the point: the schedule is data, the serving loop
 replays it identically every run, and the headline property — serve
@@ -65,6 +78,15 @@ class FaultPlan:
 
     def crash_step(self, step: int) -> "FaultPlan":
         return self._add(step, "crash_step", None)
+
+    def load_spike(self, step: int, severity: int = 1) -> "FaultPlan":
+        return self._add(step, "load_spike", int(severity))
+
+    def slow_step(self, step: int) -> "FaultPlan":
+        return self._add(step, "slow_step", None)
+
+    def corrupt_page(self, step: int, nth: int = 0) -> "FaultPlan":
+        return self._add(step, "corrupt_page", int(nth))
 
     def at(self, step: int) -> List[Event]:
         """Events scheduled for this loop step (empty list if none)."""
@@ -121,4 +143,29 @@ class FaultPlan:
                 plan.defer_admission(step)
         if allow_crash and not crash_used:
             plan.crash_step(int(rng.integers(2, max(steps - 2, 3))))
+        return plan
+
+    @classmethod
+    def seeded_overload(cls, seed: int, *, steps: int,
+                        n_spikes: int = 2, max_severity: int = 2,
+                        n_corrupt: int = 1,
+                        n_slow: int = 2) -> "FaultPlan":
+        """Overload-flavored seeded schedule: load spikes with paired
+        slow-step pressure ticks (each spike is a sustained episode,
+        not a blip) and host-handle corruption events.  Independent of
+        :meth:`seeded` — its draw sequence stays frozen so existing
+        committed schedules never shift."""
+        rng = np.random.default_rng(seed)
+        plan = cls()
+        lo, hi = 2, max(steps - 4, 3)
+        for _ in range(n_spikes):
+            step = int(rng.integers(lo, hi))
+            sev = int(rng.integers(1, max_severity + 1))
+            plan.load_spike(step, sev)
+            for _ in range(int(rng.integers(1, n_slow + 1))):
+                plan.slow_step(min(step + 1 + int(rng.integers(0, 3)),
+                                   steps - 1))
+        for _ in range(n_corrupt):
+            plan.corrupt_page(int(rng.integers(lo, hi)),
+                              int(rng.integers(0, 2)))
         return plan

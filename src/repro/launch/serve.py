@@ -82,20 +82,118 @@ Usage (CPU, reduced arch):
 from __future__ import annotations
 
 import argparse
+import pickle
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.archs import ARCHS, SMOKE
-from repro.core.paging import PageAllocator, PrefixCache
+from repro.core.paging import PageAllocator, PageIntegrityError, PrefixCache
 from repro.launch.faults import FaultPlan
 from repro.launch.mesh import make_local_mesh
 from repro.models import attention as attn
 from repro.models import decode as dec
 from repro.models import model as mdl
+
+
+class ServeKilled(RuntimeError):
+    """Raised by ``serve(kill_at_step=N)`` — a deterministic stand-in
+    for a process crash, injected AFTER the checkpoint block so a
+    resumed run replays from the last saved state."""
+
+
+class QoSController:
+    """SLO degradation ladder: deterministic per-slot rung counters
+    mapping overload pressure to decode-plan quality knobs.
+
+    Rungs apply cumulatively::
+
+        0  full quality        budget=P, interval=iv, fp32, exact
+        1  half plan budget    budget = max(1, P // 2)
+        2  slow re-plan beat   interval = iv * 4
+        3  int8 rank bounds    quantized (conservative) block ranking
+        4  sketch re-plans     hierarchical candidate pre-filter
+
+    ``press(active, severity)`` steps every active slot DOWN
+    ``severity`` rungs — within a pressure episode quality is monotone
+    non-increasing.  ``tick(active, pressure)`` is the hysteresis
+    clock: a pressure-free tick increments a per-slot clear counter,
+    and only after ``clear_steps`` consecutive clear ticks does a slot
+    recover ONE rung (the counter then resets, so two recoveries are
+    always >= ``clear_steps`` apart — no flapping); any pressure
+    zeroes every counter.  ``reset(i)`` (new admission) returns the
+    slot to full quality immediately: a rung is a property of the
+    slot's CURRENT occupant's episode, not of the hardware."""
+
+    MAX_RUNG = 4
+
+    def __init__(self, n_slots: int, p0: int, iv0: int,
+                 clear_steps: int = 4):
+        self.n_slots = int(n_slots)
+        self.p0 = max(1, int(p0))
+        self.iv0 = max(1, int(iv0))
+        self.clear_steps = max(1, int(clear_steps))
+        self.rung = [0] * self.n_slots
+        self.clear = [0] * self.n_slots
+        self.rung_downs = 0
+        self.rung_ups = 0
+
+    def knobs(self, i: int) -> Tuple[int, int, bool, bool]:
+        """(budget, interval, quant, sketch) for slot ``i``'s rung."""
+        r = self.rung[i]
+        return (self.p0 if r < 1 else max(1, self.p0 // 2),
+                self.iv0 if r < 2 else self.iv0 * 4,
+                r >= 3, r >= 4)
+
+    def vectors(self):
+        """Per-slot knob vectors for ``models.decode.set_qos_knobs``."""
+        ks = [self.knobs(i) for i in range(self.n_slots)]
+        return (np.asarray([k[0] for k in ks], np.int32),
+                np.asarray([k[1] for k in ks], np.int32),
+                np.asarray([k[2] for k in ks], bool),
+                np.asarray([k[3] for k in ks], bool))
+
+    def press(self, active: List[int], severity: int = 1) -> List[int]:
+        """Overload signal: degrade every active slot ``severity``
+        rungs (clamped at the bottom).  Returns the changed slots."""
+        changed = []
+        for i in active:
+            new = min(self.rung[i] + max(1, int(severity)), self.MAX_RUNG)
+            if new != self.rung[i]:
+                self.rung[i] = new
+                self.rung_downs += 1
+                changed.append(i)
+            self.clear[i] = 0
+        return changed
+
+    def tick(self, active: List[int], pressure: bool) -> List[int]:
+        """Per-step hysteresis clock (call once per loop step, after
+        this step's pressure is known).  Returns slots that recovered
+        one rung."""
+        if pressure:
+            self.clear = [0] * self.n_slots
+            return []
+        changed = []
+        for i in active:
+            if self.rung[i] == 0:
+                continue
+            self.clear[i] += 1
+            if self.clear[i] >= self.clear_steps:
+                self.rung[i] -= 1
+                self.clear[i] = 0
+                self.rung_ups += 1
+                changed.append(i)
+        return changed
+
+    def reset(self, i: int) -> bool:
+        """New admission into slot ``i`` starts at full quality."""
+        changed = self.rung[i] != 0
+        self.rung[i] = 0
+        self.clear[i] = 0
+        return changed
 
 
 def _plan_field(cache: Dict, field: str) -> Optional[np.ndarray]:
@@ -149,7 +247,11 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
           host_swap_bytes: Optional[int] = None,
           max_steps_per_request: Optional[int] = None,
           preempt_retry_limit: int = 3,
-          audit_pages: bool = True) -> Dict[str, Any]:
+          audit_pages: Union[bool, str] = True,
+          checkpoint_dir: Optional[str] = None,
+          checkpoint_every: int = 0,
+          resume: bool = False,
+          kill_at_step: Optional[int] = None) -> Dict[str, Any]:
     """``shared_prefix_len``: the generated prompts share their first
     N tokens (a common system prompt) — the workload the prefix cache
     exists for.  Outputs stay a function of each request's own full
@@ -162,7 +264,28 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     as ``timed_out`` after holding a slot ``max_steps_per_request``
     steps; ``preempt_retry_limit`` preemptions of one request trigger
     the reserved-page re-admission guarantee; ``audit_pages`` keeps
-    the allocator's invariant audit on."""
+    the allocator's invariant audit on (``"light"`` samples the full
+    invariant audit every 16th mutation and runs a cheap vectorized
+    refcount-sum check otherwise).
+
+    Overload resilience (``cfg.sata_qos_ladder``): ``load_spike`` /
+    ``slow_step`` faults and organic pool pressure (deferrals, stalls)
+    step every active slot down the :class:`QoSController` rung ladder
+    instead of preempting — the per-slot plan budget/interval/summary
+    knobs degrade in place (no re-trace, no requeue) and recover with
+    hysteresis once pressure clears.  Without the ladder, a
+    ``load_spike`` sheds load the old way: one preemption per severity
+    unit.  Every request's report entry records its degradation
+    timeline (``out["degradation"]``).
+
+    Checkpoint/resume: with ``checkpoint_dir`` + ``checkpoint_every``,
+    the loop atomically saves the device cache and EVERY host-side
+    control structure (allocator, trie, swap handles, queue, admission
+    order, QoS rungs, counters) at the top of each N-th step;
+    ``kill_at_step`` raises :class:`ServeKilled` right after the
+    checkpoint block, and a fresh process calling with ``resume=True``
+    replays from the last save — outputs bitwise equal to an
+    uninterrupted run."""
     cfg = cfg or (SMOKE if smoke else ARCHS)[arch]
     mesh = mesh or make_local_mesh()
     if params is None:
@@ -304,6 +427,34 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     host_swap_bytes_now = host_swap_bytes_peak = 0
     restore_wall = 0.0
     rep_offset = 0.0              # re-plan count carried across crashes
+    # --- overload / integrity state
+    corrupt_pages_injected = corrupt_pages_detected = 0
+    quarantined_pages = trie_nodes_invalidated = 0
+    load_spikes_seen = slow_steps_seen = 0
+    degraded_steps = 0
+    deferred_retries_skipped = 0
+    defer_until: Dict[int, int] = {}      # request → earliest retry step
+    defer_backoff: Dict[int, int] = {}    # request → current backoff
+    degrade_log: Dict[int, List] = {}     # request → [(step, rung), ...]
+    qos_dirty = False
+
+    def _clear_backoff() -> None:
+        """Pool capacity (may have) grown — deferred claims re-check
+        immediately (backoff answers a FULL pool, it is not a fixed
+        penalty)."""
+        defer_until.clear()
+        defer_backoff.clear()
+
+    def _log_rungs(changed: List[int]) -> None:
+        """Record rung transitions on the occupying requests' timelines
+        and mark the device knob vectors stale."""
+        nonlocal qos_dirty
+        for i in changed:
+            qos_dirty = True
+            r = slots[i]
+            if r is not None:
+                degrade_log.setdefault(r, []).append(
+                    (steps, qosctl.rung[i]))
 
     def _gather_pages(phys):
         return dec.gather_phys_pages(cache, phys)
@@ -385,6 +536,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             alloc.free_slot(victim)
             requeue_preemptions += 1
         preemptions += 1
+        _clear_backoff()                  # the victim's pages freed
 
     def _crash_restore() -> None:
         """Mid-serve crash: every byte the device holds is about to be
@@ -442,6 +594,23 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     from repro.kernels.ops import decode_fetch_stats
     blk = attn.decode_block_size(cfg, max_len)
     tile_bytes = 2 * blk * cfg.hd * jnp.dtype(_dtype(cfg)).itemsize
+
+    # --- SLO degradation ladder over the per-slot plan knob vectors
+    qosctl: Optional[QoSController] = None
+    if getattr(cfg, "sata_qos_ladder", False):
+        has_qos_plan = any(
+            isinstance(cache.get(n), dict) and "plan" in cache[n]
+            and "budget" in cache[n]["plan"] for n in ("kv", "shared_kv"))
+        if not has_qos_plan:
+            raise ValueError(
+                "sata_qos_ladder degrades the SATA decode plan — turn on "
+                "sata_decode routing (the cache carries no qos plan)")
+        nkb0 = max_len // blk
+        p0 = getattr(cfg, "sata_decode_blocks", None) or nkb0
+        qosctl = QoSController(
+            batch_slots, p0=min(int(p0), nkb0),
+            iv0=attn._resolve_replan(cfg)[0],
+            clear_steps=getattr(cfg, "sata_qos_clear_steps", 4))
     # every slot starts RELEASED (no request → no re-plan beat, no
     # accounting); a claim re-activates it through reset_slot
     for i in range(batch_slots):
@@ -455,19 +624,163 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     jax.block_until_ready(logits)
     last_rep = _plan_replans(cache)               # skip warm-up's re-plan
     rep_base = None if last_rep is None else last_rep.copy()
+
+    def _ctrs():
+        """Counter snapshot for the checkpoint meta blob — restore
+        unpacks the SAME order (keep the two sites in sync)."""
+        return (produced, deferred_claims, stalled_steps, preemptions,
+                fetch_tiles_plan, fetch_tiles_dense, plan_bytes,
+                kernel_bytes_plan, kernel_bytes_dense, host_swaps,
+                swap_restores, requeue_preemptions, tokens_salvaged,
+                requeue_tokens_discarded, re_prefill_tokens,
+                swap_cold_replans, crashes, protected_admissions,
+                host_swap_bytes_now, host_swap_bytes_peak, restore_wall,
+                rep_offset, cow_copies, corrupt_pages_injected,
+                corrupt_pages_detected, quarantined_pages,
+                trie_nodes_invalidated, load_spikes_seen, slow_steps_seen,
+                degraded_steps, deferred_retries_skipped)
+
+    # --- cross-process serve checkpoint/resume
+    ckpt = None
+    if checkpoint_dir is not None:
+        from repro.checkpoint.manager import CheckpointManager
+        ckpt = CheckpointManager(checkpoint_dir, keep=2)
+    last_ckpt = -1
+    resumed_at: Optional[int] = None
+    if resume:
+        assert ckpt is not None, "resume=True needs checkpoint_dir"
+        rstep = ckpt.latest_step()
+        assert rstep is not None, "resume=True but no checkpoint on disk"
+        cache = ckpt.restore(like=cache, step=rstep)
+        m = pickle.loads(ckpt.load_meta(rstep))
+        steps = m["steps"]
+        last_ckpt = resumed_at = steps
+        queue = m["queue"]
+        outputs = m["outputs"]
+        latency = m["latency"]
+        slots = m["slots"]
+        pos_h = m["pos_h"]
+        tokens_h = m["tokens_h"]
+        alloc = m["alloc"]
+        pcache = m["pcache"]
+        swapped_recs = m["swapped_recs"]
+        preempt_count = m["preempt_count"]
+        admit_seq = m["admit_seq"]
+        admit_clock = m["admit_clock"]
+        req_steps = m["req_steps"]
+        timed_out = m["timed_out"]
+        noted = m["noted"]
+        qosctl = m["qosctl"]
+        degrade_log = m["degrade_log"]
+        defer_until = m["defer_until"]
+        defer_backoff = m["defer_backoff"]
+        last_rep = m["last_rep"]
+        rep_base = m["rep_base"]
+        rng.bit_generator.state = m["rng"]
+        (produced, deferred_claims, stalled_steps, preemptions,
+         fetch_tiles_plan, fetch_tiles_dense, plan_bytes,
+         kernel_bytes_plan, kernel_bytes_dense, host_swaps,
+         swap_restores, requeue_preemptions, tokens_salvaged,
+         requeue_tokens_discarded, re_prefill_tokens,
+         swap_cold_replans, crashes, protected_admissions,
+         host_swap_bytes_now, host_swap_bytes_peak, restore_wall,
+         rep_offset, cow_copies, corrupt_pages_injected,
+         corrupt_pages_detected, quarantined_pages,
+         trie_nodes_invalidated, load_spikes_seen, slow_steps_seen,
+         degraded_steps, deferred_retries_skipped) = m["ctrs"]
+        # wall clocks re-anchor — resumed latencies measure THIS
+        # process's wall; outputs/counters stay bitwise
+        t_claim = {r: time.time() for r in m["t_claim_reqs"]}
+        if alloc is not None:
+            _push_tables()
     t0 = time.time()
     # paged backpressure can stall slots / defer claims / preempt-and-
     # restart, so budget extra lockstep steps beyond the contiguous-
     # layout worst case
     max_steps = 4 * (n_requests * gen_len + batch_slots + 1)
     while (queue or any(s is not None for s in slots)) and steps < max_steps:
+        if (ckpt is not None and checkpoint_every > 0
+                and steps % checkpoint_every == 0 and steps != last_ckpt):
+            meta = {
+                "steps": steps, "queue": list(queue), "outputs": outputs,
+                "latency": latency, "slots": list(slots),
+                "pos_h": pos_h.copy(), "tokens_h": tokens_h.copy(),
+                "alloc": alloc, "pcache": pcache,
+                "swapped_recs": swapped_recs,
+                "preempt_count": preempt_count, "admit_seq": admit_seq,
+                "admit_clock": admit_clock, "req_steps": req_steps,
+                "timed_out": timed_out, "noted": noted,
+                "qosctl": qosctl, "degrade_log": degrade_log,
+                "defer_until": defer_until, "defer_backoff": defer_backoff,
+                "last_rep": last_rep, "rep_base": rep_base,
+                "rng": rng.bit_generator.state,
+                "t_claim_reqs": list(t_claim), "ctrs": _ctrs(),
+            }
+            # ONE pickle: alloc.swapped, the trie's allocator back-
+            # pointer, and every swap record's handle keep their shared
+            # identity through the dump (swap_in asserts on it)
+            ckpt.save(steps, cache, blocking=True,
+                      meta_blob=pickle.dumps(meta))
+            last_ckpt = steps
+        if kill_at_step is not None and steps == kill_at_step:
+            raise ServeKilled(f"injected process kill at loop step {steps}")
         defer_now = False
+        pressure_now = False
         if faults is not None:                    # injected adversity
             for kind, arg in faults.at(steps):
                 if kind == "pool_squeeze":
                     alloc.squeeze(arg)
                 elif kind == "pool_restore":
                     alloc.unsqueeze(arg)
+                    _clear_backoff()              # capacity returned
+                elif kind == "load_spike":
+                    load_spikes_seen += 1
+                    sev = 1 if arg is None else max(1, int(arg))
+                    held = [j for j in range(batch_slots)
+                            if slots[j] is not None]
+                    if qosctl is not None:
+                        # shed QUALITY, not requests: every active slot
+                        # steps down `severity` rungs in place
+                        _log_rungs(qosctl.press(held, sev))
+                        pressure_now = True
+                    else:
+                        # no ladder — shed load the old way: one
+                        # preemption per severity unit
+                        for _ in range(sev):
+                            held = [j for j in range(batch_slots)
+                                    if slots[j] is not None]
+                            if not held:
+                                break
+                            _preempt(_pick_victim(held, slots, outputs,
+                                                  admit_seq, _protected()))
+                            _push_tables()
+                elif kind == "slow_step":
+                    slow_steps_seen += 1
+                    if qosctl is not None:        # deadline pressure
+                        held = [j for j in range(batch_slots)
+                                if slots[j] is not None]
+                        _log_rungs(qosctl.press(held, 1))
+                        pressure_now = True
+                elif kind == "corrupt_page":
+                    # flip one byte in the nth outstanding swap handle's
+                    # first parked chunk (deterministic offset) — the
+                    # checksum verify at swap-in must catch it
+                    recs = sorted(swapped_recs)
+                    if recs:
+                        nth = 0 if arg is None else int(arg)
+                        rec_c = swapped_recs[recs[nth % len(recs)]]
+                        chunks = rec_c["handle"]["chunks"]
+                        if chunks:
+                            _, payload = chunks[0]
+                            key = sorted(payload)[0]
+                            # parked payloads can be read-only device
+                            # views — corrupt a writable copy IN the
+                            # payload dict (handle identity unchanged)
+                            arr = np.array(payload[key])   # owning copy
+                            payload[key] = arr
+                            flat = arr.view(np.uint8).reshape(-1)
+                            flat[(steps * 131 + nth) % flat.size] ^= 0x01
+                            corrupt_pages_injected += 1
                 elif kind == "defer_admission":
                     defer_now = True
                 elif kind == "preempt":
@@ -487,6 +800,37 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             if slots[i] is not None or not queue or defer_now:
                 continue
             r0 = queue[0]
+            if steps < defer_until.get(r0, 0):
+                # bounded deferred-admission backoff: a claim the pool
+                # rejected re-checks at its scheduled step instead of
+                # every step; the break keeps later queue entries
+                # BEHIND the head (admission-order fair)
+                deferred_retries_skipped += 1
+                break
+            if r0 in swapped_recs:
+                # integrity gate BEFORE any page is reserved: a handle
+                # corrupted while parked on the host must never scatter
+                # into the pool
+                try:
+                    alloc.verify_handle(swapped_recs[r0]["handle"])
+                except PageIntegrityError:
+                    # quarantine: drop the handle, invalidate trie
+                    # entries over its resident pages, and recover the
+                    # victim by deterministic re-prefill below (its
+                    # salvaged progress is lost with the payload)
+                    rec = swapped_recs.pop(r0)
+                    quarantined_pages += sum(
+                        len(lps) for lps, _ in rec["handle"]["chunks"])
+                    bad = alloc.discard_handle(rec["handle"])
+                    if pcache is not None and bad:
+                        trie_nodes_invalidated += \
+                            pcache.invalidate_pages(bad)
+                    host_swap_bytes_now -= rec["bytes"]
+                    corrupt_pages_detected += 1
+                    produced -= len(outputs[r0])
+                    requeue_tokens_discarded += len(outputs[r0])
+                    tokens_salvaged -= len(outputs[r0])   # salvage failed
+                    outputs[r0] = []
             r0_protected = preempt_count.get(r0, 0) >= preempt_retry_limit
             # protected requests (at the retry limit) consume the
             # reserve admission holds back for them; everyone else
@@ -505,6 +849,10 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                         pcache.evict(needed)
                     if not alloc.can_admit(needed):
                         deferred_claims += 1      # backpressure: wait
+                        bo = min(max(defer_backoff.get(r0, 0) * 2, 1), 8)
+                        defer_backoff[r0] = bo
+                        defer_until[r0] = steps + bo
+                        pressure_now = True
                         break
                 t_res = time.time()
                 ok = alloc.swap_in(i, rec["handle"], _scatter_pages)
@@ -515,6 +863,10 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                 slots[i] = r0
                 admit_seq[r0] = admit_clock
                 admit_clock += 1
+                defer_until.pop(r0, None)
+                defer_backoff.pop(r0, None)
+                if qosctl is not None and qosctl.reset(i):
+                    qos_dirty = True              # fresh episode: rung 0
                 pos_h[i] = rec["pos"]
                 tokens_h[i, 0] = rec["token"]
                 snap = (rec["plan"].get("kv")
@@ -562,11 +914,19 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                             prompts[r0, :-1])
                     if not alloc.can_admit(_need() + reserve):
                         deferred_claims += 1  # backpressure: wait
+                        bo = min(max(defer_backoff.get(r0, 0) * 2, 1), 8)
+                        defer_backoff[r0] = bo
+                        defer_until[r0] = steps + bo
+                        pressure_now = True
                         break
             r = queue.pop(0)
             slots[i] = r
             admit_seq[r] = admit_clock
             admit_clock += 1
+            defer_until.pop(r, None)
+            defer_backoff.pop(r, None)
+            if qosctl is not None and qosctl.reset(i):
+                qos_dirty = True                  # fresh episode: rung 0
             if r0_protected:
                 protected_admissions += 1
             if preempt_count.get(r, 0) and use_prefill:
@@ -630,6 +990,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                     cache = dec.release_slot(cfg, cache, i)
                     if alloc is not None:
                         alloc.free_slot(i)
+                        _clear_backoff()
             else:
                 pos_h[i] = 0
                 tokens_h[i, 0] = int(prompts[r, 0])
@@ -662,6 +1023,17 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             _push_tables()
             # preemption may have freed slots out of the stale list
             active = [i for i in range(batch_slots) if slots[i] is not None]
+        if qosctl is not None:
+            if stalled:
+                pressure_now = True               # organic pool pressure
+            # hysteresis clock ticks once per step, then the (possibly
+            # changed) knob vectors push BEFORE this step's compute —
+            # values only, so the jitted trace is untouched
+            _log_rungs(qosctl.tick(active, pressure_now))
+            degraded_steps += sum(1 for i in active if qosctl.rung[i] > 0)
+            if qos_dirty:
+                cache = dec.set_qos_knobs(cache, *qosctl.vectors())
+                qos_dirty = False
         logits, cache = step(params, cache, jnp.asarray(tokens_h),
                              jnp.asarray(pos_h))
         nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
@@ -683,6 +1055,16 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         if counts is not None and live:
             # count only slots holding live requests — idle slots still
             # run through the lockstep batch but serve nobody
+            pb = getattr(cfg, "sata_decode_blocks", None)
+            qn = sk = None
+            if qosctl is not None:
+                # mixed rungs: price each live slot at ITS degraded
+                # budget / summary backend / re-plan mode, or the
+                # reported savings overstate what degraded slots fetch
+                kn = [qosctl.knobs(i) for i in live]
+                pb = np.asarray([k[0] for k in kn], np.int64)
+                qn = np.asarray([k[2] for k in kn], bool)
+                sk = np.asarray([k[3] for k in kn], bool)
             st = decode_fetch_stats(counts[:, live], pos_h[live],
                                     k_block=blk, d=cfg.hd, replan=frac,
                                     nkb=max_len // blk,
@@ -694,8 +1076,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                                         cfg, "sata_replan_mode", "exact"),
                                     sketch_factor=getattr(
                                         cfg, "sata_sketch_factor", 4),
-                                    plan_blocks=getattr(
-                                        cfg, "sata_decode_blocks", None))
+                                    plan_blocks=pb, quant=qn, sketch=sk)
             fetch_tiles_plan += st["kv_fetch_tiles_plan"]
             fetch_tiles_dense += st["kv_fetch_tiles_dense"]
             plan_bytes += st["plan_fetch_bytes_step"]
@@ -727,6 +1108,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                 cache = dec.release_slot(cfg, cache, i)
                 if alloc is not None:
                     alloc.free_slot(i)            # … and its pages
+                    _clear_backoff()
             elif i not in stalled:
                 tokens_h[i, 0] = int(nxt[i])
         steps += 1
@@ -739,6 +1121,24 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         if latency else 0.0,
         "timed_out": sorted(timed_out),
     }
+    # per-request degradation timeline: every (step, rung) transition of
+    # the slot while this request held it — empty means the request was
+    # served at full quality end to end
+    out["degradation"] = {r: list(degrade_log.get(r, [])) for r in outputs}
+    if qosctl is not None:
+        out["qos"] = {
+            "rung_downs": qosctl.rung_downs,
+            "rung_ups": qosctl.rung_ups,
+            "degraded_steps": degraded_steps,
+            "load_spikes": load_spikes_seen,
+            "slow_steps": slow_steps_seen,
+            "clear_steps": qosctl.clear_steps,
+            "final_rungs": list(qosctl.rung),
+        }
+    if ckpt is not None:
+        out["checkpoint"] = {"dir": str(checkpoint_dir),
+                             "last_saved_step": last_ckpt,
+                             "resumed_at": resumed_at}
     if fetch_tiles_dense:
         out["decode_fetch"] = {
             "kv_fetch_tiles_plan": fetch_tiles_plan,
@@ -790,6 +1190,14 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         occ["preempt_retries_max"] = max(preempt_count.values(), default=0)
         occ["protected_admissions"] = protected_admissions
         occ["audits_run"] = alloc.audits_run
+        occ["light_audits_run"] = alloc.light_audits_run
+        occ["deferred_retries_skipped"] = deferred_retries_skipped
+        # page integrity: every injected corruption must be detected at
+        # the swap-in gate and quarantined (never scattered to the pool)
+        occ["corrupt_pages_injected"] = corrupt_pages_injected
+        occ["corrupt_pages_detected"] = corrupt_pages_detected
+        occ["quarantined_pages"] = quarantined_pages
+        occ["trie_nodes_invalidated"] = trie_nodes_invalidated
         out["page_occupancy"] = occ
     if pcache is not None:
         pstats = pcache.stats()

@@ -604,11 +604,21 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
                  "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype)}
     if sata:
         from repro.core.decode_plan import init_decode_plan
+        qos = bool(getattr(cfg, "sata_qos_ladder", False))
+        if qos and getattr(cfg, "sata_decode_replan", 1) == "auto":
+            raise ValueError(
+                "sata_qos_ladder drives the re-plan beat through the "
+                "per-slot interval vector — set an integer "
+                "sata_decode_replan, not 'auto'")
         cache["plan"] = init_decode_plan(
             batch, cfg.n_kv_heads, max_len, hd,
             decode_block_size(cfg, max_len),
             getattr(cfg, "sata_decode_blocks", None),
-            summary=getattr(cfg, "sata_summary", "fp32"))
+            summary=getattr(cfg, "sata_summary", "fp32"),
+            qos=qos,
+            # the ladder's full-quality rung starts at the configured
+            # beat; the per-slot interval vector owns it from there
+            replan_interval=_resolve_replan(cfg)[0] if qos else 1)
     return cache
 
 

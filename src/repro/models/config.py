@@ -91,6 +91,21 @@ class ModelConfig:
     sata_sketch_factor: int = 4               # blocks per super-block
                                               # sketch (largest divisor
                                               # of nkb is used)
+    sata_qos_ladder: bool = False             # per-slot degradation
+                                              # ladder: under pool /
+                                              # deadline pressure the
+                                              # serve loop steps slots
+                                              # down quality rungs
+                                              # (budget → interval →
+                                              # int8 → sketch) instead
+                                              # of preempting; per-slot
+                                              # knob vectors live in the
+                                              # plan state so rungs
+                                              # apply without re-tracing
+    sata_qos_clear_steps: int = 4             # hysteresis: consecutive
+                                              # pressure-free steps
+                                              # before stepping one rung
+                                              # back up
 
     # --- serving KV-cache layout ---
     kv_cache_layout: str = "contiguous"       # contiguous | paged — paged

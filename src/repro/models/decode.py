@@ -218,6 +218,31 @@ def set_page_table(cfg: ModelConfig, cache: Dict, table,
     return cache
 
 
+def set_qos_knobs(cache: Dict, budget, interval, quant, sketch) -> Dict:
+    """Push the serve loop's per-slot degradation-ladder knob vectors
+    into the device plan state (``init_decode_plan(..., qos=True)``).
+    budget/interval: (B,) int; quant/sketch: (B,) bool.  Like the page
+    table, the knobs are identical across layers (a rung degrades the
+    whole slot), so they broadcast over the stacked plan's layer axis.
+    Only VALUES change — the pytree structure is stable, so a rung
+    change never re-traces the jitted step."""
+    cache = dict(cache)
+    vecs = {"budget": jnp.asarray(np.asarray(budget), jnp.int32),
+            "interval": jnp.asarray(np.asarray(interval), jnp.int32),
+            "quant": jnp.asarray(np.asarray(quant), bool),
+            "sketch": jnp.asarray(np.asarray(sketch), bool)}
+    for name in ("kv", "shared_kv"):
+        kvc = cache.get(name)
+        if isinstance(kvc, dict) and isinstance(kvc.get("plan"), dict) \
+                and "budget" in kvc["plan"]:
+            plan = dict(kvc["plan"])
+            n = plan["budget"].shape[0]
+            for k, v in vecs.items():
+                plan[k] = jnp.broadcast_to(v, (n,) + v.shape)
+            cache[name] = {**kvc, "plan": plan}
+    return cache
+
+
 def copy_phys_pages(cache: Dict, pairs) -> Dict:
     """Copy-on-write, device side: for each ``(src, dst)`` physical
     page pair the allocator remapped (``PageAllocator.ensure_writable``)

@@ -1,0 +1,244 @@
+"""Overload-resilient serving: the SLO degradation ladder (monotone
+under pressure, hysteretic recovery, full-quality return — property-
+tested standalone), page-integrity checksums (any flipped payload byte
+detected before restore), quarantine + re-prefill recovery, the
+deferred-admission backoff, sampled ("light") allocator audits, and
+mid-serve checkpoint → kill → resume bitwise equality."""
+import dataclasses
+import sys
+import pathlib
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+from repro.configs.archs import SMOKE
+from repro.core.paging import PageAllocator, PageIntegrityError
+from repro.launch.faults import FaultPlan
+from repro.launch.serve import QoSController, ServeKilled, serve
+
+
+def _cfg(**kw):
+    base = dict(topk_impl="bisect", sata_decode="on",
+                sata_decode_block=8, sata_decode_replan=4,
+                kv_cache_layout="paged", kv_pool_pages=6,
+                sata_qos_ladder=True)
+    base.update(kw)
+    return dataclasses.replace(SMOKE["qwen3-4b"], **base)
+
+
+_KW = dict(n_requests=4, batch_slots=2, gen_len=12, max_len=32,
+           prompt_len=6)
+_BASELINES = {}
+
+
+def _baseline(**cfg_kw):
+    key = tuple(sorted(cfg_kw.items()))
+    if key not in _BASELINES:
+        _BASELINES[key] = serve("qwen3-4b", cfg=_cfg(**cfg_kw), **_KW)
+    return _BASELINES[key]
+
+
+# ---------------------------------------------------------------------------
+# QoS ladder controller (standalone — no model, no jax)
+# ---------------------------------------------------------------------------
+
+def test_rung_knob_table():
+    """The documented rung → knob mapping, exactly."""
+    q = QoSController(1, p0=8, iv0=2, clear_steps=4)
+    expect = {0: (8, 2, False, False), 1: (4, 2, False, False),
+              2: (4, 8, False, False), 3: (4, 8, True, False),
+              4: (4, 8, True, True)}
+    for rung, knobs in expect.items():
+        q.rung[0] = rung
+        assert q.knobs(0) == knobs, rung
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6), st.integers(1, 4))
+def test_ladder_monotone_hysteretic_recovers(seed, clear_steps, n_slots):
+    """Any pressure schedule: (1) a press never raises quality and a
+    pressure step never recovers a rung; (2) two recoveries of one slot
+    are >= clear_steps apart AND >= clear_steps after the last pressure
+    (hysteresis — no flapping); (3) once pressure clears for good,
+    every slot returns to full quality."""
+    rng = np.random.default_rng(seed)
+    qos = QoSController(n_slots, p0=8, iv0=2, clear_steps=clear_steps)
+    active = list(range(n_slots))
+    horizon = 40
+    pressured = rng.random(horizon) < 0.4
+    severity = rng.integers(1, 3, horizon)
+    last_up = {}
+    last_pressure = -10 ** 9
+    for t in range(horizon):
+        before = list(qos.rung)
+        if pressured[t]:
+            qos.press(active, int(severity[t]))
+            assert all(qos.rung[i] >= before[i] for i in active)
+            last_pressure = t
+        ups = qos.tick(active, bool(pressured[t]))
+        if pressured[t]:
+            assert not ups
+        for i in ups:
+            assert t - last_pressure >= clear_steps
+            if i in last_up:
+                assert t - last_up[i] >= clear_steps
+            last_up[i] = t
+        assert all(0 <= r <= qos.MAX_RUNG for r in qos.rung)
+    for _ in range(clear_steps * qos.MAX_RUNG):
+        qos.tick(active, False)
+    assert qos.rung == [0] * n_slots, "pressure cleared but quality didn't"
+
+
+def test_admission_resets_rung():
+    q = QoSController(2, p0=8, iv0=2, clear_steps=4)
+    q.press([0, 1], 3)
+    assert q.reset(0) and q.rung == [0, 3]
+    assert not q.reset(0)                     # idempotent, reports no-op
+
+
+# ---------------------------------------------------------------------------
+# Page integrity: checksums over parked swap payloads
+# ---------------------------------------------------------------------------
+
+def _swapped_handle(seed):
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(8, 2, 4, 4, audit=True)
+    assert alloc.ensure(0, 10)                # maps 3 pages
+
+    def gather(phys):
+        a = rng.standard_normal((len(phys), 4, 2)).astype(np.float32)
+        return {"k": a, "v": (a + 1.0).astype(np.float32)}
+
+    return alloc, alloc.swap_out(0, gather)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.0, 1.0))
+def test_any_flipped_byte_detected(seed, frac):
+    """Flip ANY single byte anywhere in a parked swap payload — the
+    swap-in checksum gate must raise before any page restores; flip it
+    back and the handle verifies clean again."""
+    alloc, handle = _swapped_handle(seed)
+    alloc.verify_handle(handle)               # pristine passes
+    arrays = [a for _, pl in handle["chunks"] for _, a in sorted(pl.items())]
+    total = sum(a.nbytes for a in arrays)
+    target = min(int(frac * total), total - 1)
+    off = 0
+    for a in arrays:
+        if target < off + a.nbytes:
+            flat = a.view(np.uint8).reshape(-1)
+            flat[target - off] ^= 0xFF
+            break
+        off += a.nbytes
+    with pytest.raises(PageIntegrityError):
+        alloc.verify_handle(handle)
+    flat[target - off] ^= 0xFF                # undo → clean again
+    alloc.verify_handle(handle)
+
+
+def test_discard_handle_releases_state():
+    alloc, handle = _swapped_handle(0)
+    assert alloc.swapped == [handle]
+    alloc.discard_handle(handle)
+    assert alloc.swapped == []
+    alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Serving: ladder vs spike, quarantine, light audit, checkpoint/resume
+# ---------------------------------------------------------------------------
+
+def test_ladder_absorbs_spike_no_requeues():
+    """A spike schedule that forces >= 2 preemptions without the ladder
+    completes EVERY request with zero requeues/timeouts with it; each
+    request reports its degradation timeline and requests whose slots
+    never degraded stay bitwise equal to the no-fault run."""
+    base = _baseline()
+    spikes = FaultPlan().load_spike(4, 2).slow_step(5)
+    on = serve("qwen3-4b", cfg=_cfg(), faults=spikes, **_KW)
+    off = serve("qwen3-4b", cfg=_cfg(sata_qos_ladder=False),
+                faults=spikes, **_KW)
+    assert off["page_occupancy"]["preemptions"] >= 2
+    o = on["page_occupancy"]
+    assert o["preemptions"] == 0 and o["requeue_preemptions"] == 0
+    assert not on["timed_out"]
+    assert sorted(on["outputs"]) == list(range(_KW["n_requests"]))
+    assert all(len(v) == _KW["gen_len"] for v in on["outputs"].values())
+    assert on["qos"]["rung_downs"] > 0 and on["qos"]["degraded_steps"] > 0
+    assert set(on["degradation"]) == set(on["outputs"])
+    degraded = [r for r, tl in on["degradation"].items() if tl]
+    assert degraded, "the spike must land on some request's timeline"
+    for r, tl in on["degradation"].items():
+        if not tl:
+            assert on["outputs"][r] == base["outputs"][r], r
+
+
+def test_corrupt_page_quarantined_and_reprefilled():
+    """A byte flipped in a PARKED handle: detected at the swap-in gate
+    (never restored), quarantined, and the victim re-prefills to the
+    same final outputs as the fault-free run."""
+    base = _baseline()
+    faults = (FaultPlan().preempt(4).defer_admission(4).defer_admission(5)
+              .corrupt_page(5).defer_admission(6))
+    out = serve("qwen3-4b", cfg=_cfg(), faults=faults, **_KW)
+    o = out["page_occupancy"]
+    assert o["corrupt_pages_injected"] == 1
+    assert o["corrupt_pages_detected"] == 1
+    assert o["swap_restores"] == 0, "corrupted payload must never restore"
+    assert o["quarantined_pages"] > 0
+    assert o["re_prefill_tokens"] > 0
+    assert out["outputs"] == base["outputs"]
+
+
+def test_light_audit_mode():
+    """audit_pages='light' samples the full invariant audit and runs
+    the cheap refcount-sum check otherwise — same outputs, nonzero
+    counters for both modes."""
+    base = _baseline()
+    out = serve("qwen3-4b", cfg=_cfg(), audit_pages="light", **_KW)
+    assert out["outputs"] == base["outputs"]
+    assert out["page_occupancy"]["light_audits_run"] > 0
+    assert out["page_occupancy"]["audits_run"] > 0
+
+
+def test_checkpoint_kill_resume_bitwise(tmp_path):
+    """Kill the loop mid-serve (after a checkpoint), resume from disk
+    in fresh serve state: outputs bitwise equal to the uninterrupted
+    run — allocator, trie, swap handles, queue, RNG and QoS rungs all
+    ride the checkpoint."""
+    base = _baseline()
+    d = str(tmp_path / "ckpt")
+    faults = FaultPlan().preempt(4).defer_admission(4).defer_admission(5)
+    with pytest.raises(ServeKilled):
+        serve("qwen3-4b", cfg=_cfg(), faults=faults, checkpoint_dir=d,
+              checkpoint_every=5, kill_at_step=7, **_KW)
+    out = serve("qwen3-4b", cfg=_cfg(), faults=faults, checkpoint_dir=d,
+                checkpoint_every=5, resume=True, **_KW)
+    assert out["checkpoint"]["resumed_at"] == 5
+    assert out["outputs"] == base["outputs"]
+
+
+def test_deferred_backoff_skips_and_completes():
+    """Under a sustained squeeze the deferred head request skips its
+    scheduled-out steps (bounded backoff) instead of re-checking every
+    step — and still completes everything deterministically."""
+    base = _baseline()
+    faults = FaultPlan().pool_squeeze(2, 3).pool_restore(14)
+    out = serve("qwen3-4b", cfg=_cfg(), faults=faults, **_KW)
+    o = out["page_occupancy"]
+    assert o["deferred_retries_skipped"] > 0
+    assert o["deferred_claims"] > 0
+    assert out["outputs"] == base["outputs"]
+
+
+def test_seeded_overload_deterministic():
+    a = FaultPlan.seeded_overload(7, steps=30)
+    b = FaultPlan.seeded_overload(7, steps=30)
+    assert a.describe() == b.describe()
+    kinds = {k for evs in a._events.values() for k, _ in evs}
+    assert "load_spike" in kinds
