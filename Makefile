@@ -38,11 +38,15 @@ bench-decode:
 # The --shared-prefix scenario then drives the prefix cache: requests
 # sharing a prompt prefix map its cached pages (hit-rate > 0, prefill
 # tokens saved, CoW on append) with outputs bitwise equal to the
-# cache-disabled run.
+# cache-disabled run.  The --retire scenario serves a workload whose
+# live prefixes overflow the pool: cascade token retirement reclaims
+# the coldest blocks' pages mid-stream and completes without the
+# preemptions the retire-off twin needs.
 serve-smoke:
 	python examples/serve_topk.py --paged
 	python examples/serve_topk.py --summary int8 --replan-mode sketch
 	python examples/serve_topk.py --shared-prefix
+	python examples/serve_topk.py --retire
 
 # Fault-injection smoke: seeded squeeze/preempt/defer schedule plus a
 # hard pool squeeze (forces >=2 host-swap preemptions) and a mid-serve

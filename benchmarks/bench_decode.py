@@ -28,7 +28,12 @@ with the *prefix* (dense decode streams every cached block) or with the
   * shared-prefix page cache — N requests sharing a prompt prefix pay
     its prefill compute and HBM once (hit-rate, prefill tokens saved,
     peak-pages reduction vs private pages, CoW copies), outputs
-    bitwise equal to the cache-disabled run.
+    bitwise equal to the cache-disabled run;
+  * cascade token retirement — the coldest attention blocks' pages
+    freed mid-stream at a fixed pool (no-preemption completion ratio
+    vs the retire-off twin), plan-side ranking-byte reduction with the
+    retained-token budget, and the accuracy lane's deterministic
+    divergence-vs-budget sweep.
 """
 from __future__ import annotations
 
@@ -187,6 +192,7 @@ def bench_decode() -> List[Row]:
     rows += _bench_shared_prefix()
     rows += _bench_fault_swap()
     rows += _bench_degradation()
+    rows += _bench_retirement()
     return rows
 
 
@@ -479,6 +485,95 @@ def _bench_fault_swap() -> List[Row]:
          f"swap-in restore {restore_us:.0f}us/restore mean, host-swap "
          f"peak {s['host_swap_bytes_peak']} B "
          f"(jit-inclusive, informational)"),
+    ]
+
+
+def _bench_retirement() -> List[Row]:
+    """Cascade token retirement on the reduced serving model, two
+    lanes.  Pressure lane: a mixed-prefix workload (six 60-token
+    requests sharing a 12-token prefix) against a 16-page pool that
+    holds barely two full prefixes — retire-off sheds by preemption;
+    retire-on frees the coldest blocks' pages mid-stream, and the gate
+    pins reclaimed pages, the no-preemption completion ratio (must
+    stay >= 1.5x), and the plan-side ranking-byte reduction exactly.
+    Accuracy lane (ample pool, so every difference is retirement's):
+    deterministic token-divergence vs the retire-off twin across
+    retained-token budgets — retirement is lossy BY DESIGN and the
+    trajectory must price that, not hide it.  A watermark no slot can
+    reach must reproduce retire-off bitwise (the off-path contract)."""
+    import dataclasses
+
+    from repro.configs.archs import SMOKE
+    from repro.launch.serve import serve
+
+    cfg = dataclasses.replace(
+        SMOKE["qwen3-4b"], topk_impl="bisect", sata_decode="on",
+        sata_decode_block=8, sata_decode_replan=1,
+        kv_cache_layout="paged")
+    kw = dict(smoke=True, n_requests=6, batch_slots=3, gen_len=40,
+              max_len=64, prompt_len=20, shared_prefix_len=12)
+    n = kw["n_requests"]
+
+    def ret(keep, pool, watermark=0.4):
+        return serve("qwen3-4b", cfg=dataclasses.replace(
+            cfg, kv_pool_pages=pool, sata_retire="on",
+            sata_retire_watermark=watermark, sata_retire_keep=keep), **kw)
+
+    # --- pressure lane: fixed 16-page pool
+    off_p = serve("qwen3-4b",
+                  cfg=dataclasses.replace(cfg, kv_pool_pages=16), **kw)
+    on_p = ret(0.5, 16)
+    r = on_p["retirement"]
+    first_ev = min((t[0][0] for t in r["timelines"].values() if t),
+                   default=on_p["steps"])
+    oo, op = on_p["page_occupancy"], off_p["page_occupancy"]
+    ok_on = n - oo["preempted_requests"]
+    ok_off = n - op["preempted_requests"]
+    ratio = ok_on / max(ok_off, 1)
+
+    # --- accuracy + traffic lane: ample pool, retirement is the only
+    # difference; divergence = token mismatch rate vs the off twin
+    off_a = serve("qwen3-4b", cfg=cfg, **kw)
+    total = sum(len(v) for v in off_a["outputs"].values())
+
+    def diverge(on):
+        d = sum(1 for req, toks in off_a["outputs"].items()
+                for j, t in enumerate(toks)
+                if on["outputs"][req][j] != t)
+        return d / max(total, 1)
+
+    sweep = {keep: ret(keep, 0) for keep in (0.75, 0.5, 0.25)}
+    b_off = off_a["decode_fetch"]["plan_fetch_bytes"]
+    b50 = sweep[0.5]["decode_fetch"]["plan_fetch_bytes"]
+    b25 = sweep[0.25]["decode_fetch"]["plan_fetch_bytes"]
+    never = ret(0.5, 0, watermark=2.0)         # can never fire
+    eq_never = never["outputs"] == off_a["outputs"]
+    return [
+        ("decode/retirement/reclaim", 0.0,
+         f"reclaimed {r['pages_reclaimed']} pages over {r['events']} "
+         f"events ({r['retired_tokens']} tokens retired, keep 0.50, "
+         f"16-page pool), first at step {first_ev}/{on_p['steps']} "
+         f"(mid-stream)"),
+        ("decode/retirement/completion", 0.0,
+         f"no-preemption completions {ok_on}/{n} retire-on vs "
+         f"{ok_off}/{n} retire-off ({ratio:.2f}x), preemptions "
+         f"{oo['preemptions']} vs {op['preemptions']}, stalled steps "
+         f"{oo['stalled_steps']} vs {op['stalled_steps']}"),
+        ("decode/retirement/plan_bytes", 0.0,
+         f"plan-side ranking traffic {b50} B at keep 0.50, {b25} B at "
+         f"keep 0.25 vs {b_off} B retire-off "
+         f"({b_off / max(b50, 1):.2f}x/{b_off / max(b25, 1):.2f}x "
+         f"reduction with the retained-token budget)"),
+        ("decode/retirement/accuracy", 0.0,
+         f"token divergence vs retained-token budget: keep 0.75 -> "
+         f"{diverge(sweep[0.75]):.4f}, 0.50 -> "
+         f"{diverge(sweep[0.5]):.4f}, 0.25 -> "
+         f"{diverge(sweep[0.25]):.4f} (mismatch rate vs retire-off; "
+         f"lossy by design, priced not hidden)"),
+        ("decode/retirement/off_bitwise", 0.0,
+         f"unreachable watermark: outputs_equal={eq_never} to "
+         f"retire-off with {never['retirement']['pages_reclaimed']} "
+         f"pages reclaimed"),
     ]
 
 

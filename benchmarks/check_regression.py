@@ -6,8 +6,9 @@ them into a firewall.  **Gate contract** (what fails the build):
 
 * **Exact fields** — deterministic counters parsed out of each row's
   ``derived`` string (fetch bytes/tiles, tile visits, re-plan counts,
-  reserved/used HBM, prefill tokens saved, hit counts, the
-  ``quad_SxS_buffer`` flag): must be EQUAL to the baseline.  These are
+  reserved/used HBM, prefill tokens saved, hit counts, retirement
+  reclaim/completion/divergence counters, the ``quad_SxS_buffer``
+  flag): must be EQUAL to the baseline.  These are
   pure functions of code + seeds — any drift is a real behavior
   change, not noise.
 * **Parity fields** — ``max_err`` values: a ``0.0`` baseline is a
@@ -79,6 +80,19 @@ EXACT_PATTERNS = [
     ("corrupt_injected", r"corrupt_injected=(\d+)"),
     ("corrupt_detected", r"corrupt_detected=(\d+)"),
     ("quarantined_pages", r"quarantined_pages=(\d+)"),
+    # cascade-retirement rows (decode/retirement/*)
+    ("pages_reclaimed", r"reclaimed (\d+) pages"),
+    ("retire_events", r"over (\d+) events"),
+    ("tokens_retired", r"\((\d+) tokens retired"),
+    ("retire_first_step", r"first at step (\d+)/"),
+    ("no_preempt_on", r"completions (\d+)/\d+ retire-on"),
+    ("no_preempt_off", r"vs (\d+)/\d+ retire-off"),
+    ("plan_bytes_keep50", r"traffic (\d+) B at keep 0\.50"),
+    ("plan_bytes_keep25", r"(\d+) B at keep 0\.25"),
+    ("plan_bytes_retire_off", r"vs (\d+) B retire-off"),
+    ("diverge_keep75", r"0\.75 -> ([0-9.]+)"),
+    ("diverge_keep50", r"0\.50 -> ([0-9.]+)"),
+    ("diverge_keep25", r"0\.25 -> ([0-9.]+)"),
 ]
 MAX_ERR_RE = re.compile(r"max_err[_a-z]*\s+([0-9.]+e?[+-]?[0-9]*)")
 

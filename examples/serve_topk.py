@@ -21,9 +21,14 @@ swap-in checksum gate and quarantined (victim recovers by re-prefill),
 and a child process killed mid-serve resumes from its checkpoint in
 THIS process with bitwise-equal outputs.
 
+With ``--retire`` the demo serves a workload whose live prefixes do
+not fit the pool: cascade token retirement frees the coldest blocks'
+pages mid-stream and the run completes without the preemptions the
+retire-off twin needs.
+
 Run:  PYTHONPATH=src python examples/serve_topk.py
           [--paged] [--summary int8] [--replan-mode sketch]
-          [--faults SEED] [--overload SEED]
+          [--retire] [--faults SEED] [--overload SEED]
 """
 import argparse
 import dataclasses
@@ -61,6 +66,12 @@ def main():
                          "when the plan tolerates a missed block until "
                          "the next re-plan, NOT for bitwise-exact "
                          "serving)")
+    ap.add_argument("--retire", action="store_true",
+                    help="cascade token retirement scenario: a pool too "
+                         "small for every live request's full prefix — "
+                         "retire-off preempts its way through, retire-on "
+                         "frees the coldest blocks' pages mid-stream and "
+                         "completes without a single preemption")
     ap.add_argument("--faults", type=int, default=None, metavar="SEED",
                     help="fault-injection scenario: a deterministic "
                          "squeeze + crash schedule forces host-swap "
@@ -95,6 +106,8 @@ def main():
                              kill_at=args._kill_at)
     if args.faults is not None:
         return faults_demo(cfg, args.faults)
+    if args.retire:
+        return retire_demo(cfg)
     if args.shared_prefix:
         return shared_prefix_demo(cfg)
     if args.paged:
@@ -261,6 +274,49 @@ def overload_demo(cfg, seed, child_args, ckpt_dir=None, kill_at=None):
           f"uninterrupted overload run: {equal}")
     assert equal, "checkpoint/resume changed outputs"
     print("[serve_topk] overload scenario OK")
+
+
+def retire_demo(cfg):
+    """Six 60-token requests (20 prompt + 40 generated) against a
+    16-page pool that can hold only two full prefixes: without
+    retirement the pool preempts and stalls its way through; with
+    ``sata_retire="on"`` each slot frees its coldest attention blocks'
+    pages mid-stream (ranked by the plan's decayed importance
+    accumulator — zero extra cache reads), and the same workload
+    completes without a single preemption.  Prints the per-request
+    retirement timelines and the per-KV-head importance split the
+    report prices."""
+    base = dataclasses.replace(cfg, kv_cache_layout="paged",
+                               kv_pool_pages=16)
+    kw = dict(smoke=True, n_requests=6, batch_slots=3, gen_len=40,
+              max_len=64, prompt_len=20, shared_prefix_len=12)
+    off = serve("qwen3-4b", cfg=base, **kw)
+    on = serve("qwen3-4b", cfg=dataclasses.replace(
+        base, sata_retire="on", sata_retire_watermark=0.4,
+        sata_retire_keep=0.5), **kw)
+    o_off, o_on = off["page_occupancy"], on["page_occupancy"]
+    r = on["retirement"]
+    print(f"[serve_topk] retire OFF: {o_off['preemptions']} preemptions, "
+          f"{o_off['stalled_steps']} stalled steps, "
+          f"{o_off['deferred_claims']} deferred claims, "
+          f"{off['steps']} loop steps")
+    print(f"[serve_topk] retire ON:  {o_on['preemptions']} preemptions, "
+          f"{o_on['stalled_steps']} stalled steps, {on['steps']} loop "
+          f"steps — {r['pages_reclaimed']} pages reclaimed mid-stream "
+          f"over {r['events']} retirement events "
+          f"({r['retired_tokens']} tokens, keep budget "
+          f"{r['keep_budget']:.2f})")
+    for req in sorted(r["timelines"])[:2]:
+        print(f"[serve_topk]   request {req} timeline (step, pages): "
+              f"{r['timelines'][req]}")
+    print(f"[serve_topk] per-KV-head importance mass: "
+          f"{[round(x, 1) for x in r['head_importance']]}")
+    assert r["pages_reclaimed"] > 0, "retirement never fired"
+    assert all(len(v) == kw["gen_len"] for v in on["outputs"].values())
+    assert o_off["preemptions"] + o_off["stalled_steps"] > 0, \
+        "pool too large: the off run never felt pressure"
+    assert o_on["preemptions"] < o_off["preemptions"], \
+        "retirement failed to absorb the preemption pressure"
 
 
 def shared_prefix_demo(cfg):

@@ -231,14 +231,23 @@ def clamp_plan_budget(occ: jax.Array, blk_score: jax.Array,
 def init_decode_plan(batch: int, n_kv_heads: int, max_len: int, d: int,
                      k_block: int, plan_blocks: Optional[int] = None,
                      summary: str = "fp32", *, qos: bool = False,
-                     replan_interval: int = 1) -> PlanState:
+                     replan_interval: int = 1,
+                     retire: bool = False) -> PlanState:
     """Empty plan over a ``max_len`` cache.  ``plan_blocks`` (P) is the
     static plan width; ``None`` keeps the full ``nkb`` (exact — no block
     a re-plan selects is ever dropped).  ``summary`` picks the bounds
     storage backend (module docstring).  ``qos=True`` adds the per-slot
     degradation-ladder knob vectors (initialized to full quality:
     budget = P, interval = ``replan_interval``, fp32 exact re-plans) —
-    see the module docstring's QoS section."""
+    see the module docstring's QoS section.  ``retire=True`` adds the
+    cascade-retirement state (``sata_retire``): ``imp`` (B, KV, nkb)
+    fp32 accumulated block importance (exponentially decayed membership
+    of each step's planned set — it rides the planners' existing score
+    pass, zero extra cache reads) and ``live_blk`` (B, nkb) bool, the
+    retired-block mask every planner ANDs into its validity predicate
+    so retired blocks leave the ranking set entirely.  ``retire=False``
+    leaves the pytree — and with it every jitted consumer — bitwise
+    identical to the pre-retirement state."""
     assert max_len % k_block == 0, (max_len, k_block)
     assert summary in SUMMARY_BACKENDS, summary
     nkb = max_len // k_block
@@ -268,9 +277,16 @@ def init_decode_plan(batch: int, n_kv_heads: int, max_len: int, d: int,
             "quant": jnp.zeros((batch,), bool),
             "sketch": jnp.zeros((batch,), bool),
         }
+    retire_state = {}
+    if retire:
+        retire_state = {
+            "imp": jnp.zeros((batch, n_kv_heads, nkb), jnp.float32),
+            "live_blk": jnp.ones((batch, nkb), bool),
+        }
     return {
         **bounds,
         **qos_state,
+        **retire_state,
         "kv_indices": jnp.zeros((batch, n_kv_heads, p), jnp.int32),
         "kv_counts": jnp.zeros((batch, n_kv_heads), jnp.int32),
         "step": jnp.zeros((batch,), jnp.int32),
@@ -314,7 +330,7 @@ def reset_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
             "k_min": plan["k_min"].at[ix].set(jnp.inf),
             "k_max": plan["k_max"].at[ix].set(-jnp.inf),
         }
-    return {
+    out = {
         **plan,                      # replans is cumulative accounting
         **bounds,
         "kv_indices": plan["kv_indices"].at[ix].set(0),
@@ -323,6 +339,10 @@ def reset_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
         "churn": plan["churn"].at[ix].set(0.0),
         "active": plan["active"].at[ix].set(True),
     }
+    if "imp" in plan:                # retirement state restarts with the
+        out["imp"] = plan["imp"].at[ix].set(0.0)       # new occupant
+        out["live_blk"] = plan["live_blk"].at[ix].set(True)
+    return out
 
 
 def release_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
@@ -343,9 +363,14 @@ def release_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
 # sketch) are deliberately NOT here: a rung is a property of the
 # serving SLOT under load, owned by the serve loop's QoS controller —
 # it re-pushes the knob vectors on every admission and rung change, so
-# swapping a request must not drag a rung to a different slot.
+# swapping a request must not drag a rung to a different slot.  The
+# retirement state (``imp``/``live_blk``) IS here: a swapped-out
+# request's accumulated importance and retired-block mask belong to the
+# request, and restoring them is what keeps a restored slot's plan from
+# resurrecting blocks whose pages were already reclaimed.
 PLAN_SLOT_FIELDS = ("k_min", "k_max", "k_scale", "k_zero", "kv_indices",
-                    "kv_counts", "step", "churn", "replans", "active")
+                    "kv_counts", "step", "churn", "replans", "active",
+                    "imp", "live_blk")
 
 
 def capture_plan_slot(plan: PlanState, slot, *, batch_axis: int = 0
@@ -462,7 +487,8 @@ def block_upper_bounds(q: jax.Array, k_min: jax.Array, k_max: jax.Array,
 
 def full_replan(q: jax.Array, k_cache: jax.Array, pos: jax.Array, *,
                 topk_k: int, k_block: int, plan_blocks: int,
-                budget: Optional[jax.Array] = None
+                budget: Optional[jax.Array] = None,
+                live_blk: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Exact per-step plan: score all cached keys, bisect each query
     row's top-k threshold, keep every block with a selected token.
@@ -476,6 +502,11 @@ def full_replan(q: jax.Array, k_cache: jax.Array, pos: jax.Array, *,
     token score, top-``budget`` survive, and the token threshold is
     re-bisected over the survivors only — the plan stays an exact
     top-k *within* the (narrowed) planned blocks.
+
+    ``live_blk`` (B, nkb) bool (cascade retirement) masks retired
+    blocks' tokens out of the score multiset entirely: their pages are
+    already freed, so neither the threshold nor the selection may name
+    them — the plan is an exact top-k over the *surviving* tokens.
     """
     b, s, kv, d = k_cache.shape
     nkb = s // k_block
@@ -484,6 +515,9 @@ def full_replan(q: jax.Array, k_cache: jax.Array, pos: jax.Array, *,
                     k_cache.astype(jnp.float32),
                     preferred_element_type=jnp.float32) * sm_scale
     valid = (jnp.arange(s) <= pos[:, None])[:, None, None, :]  # (B,1,1,S)
+    if live_blk is not None:
+        live_tok = jnp.repeat(live_blk, k_block, axis=-1)      # (B, S)
+        valid = valid & live_tok[:, None, None, :]
     sc = jnp.where(valid, sc, NEG_INF)
     thr = kth_largest_bisect(sc, topk_k)                     # (B, KV, G, 1)
     sel = bisect_select(jnp.where(valid, sc, -jnp.inf), thr) & valid
@@ -552,12 +586,18 @@ def incremental_plan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     instead of top-P (the plan layout stays padded to the static P);
     ``quant`` (B,) bool routes flagged slots' summary ranking through
     the conservative int8 round trip (``degraded_summary_bounds``).
+
+    Cascade retirement: a plan carrying ``live_blk`` ranks only live
+    blocks — a retired block never re-enters the plan (its summary is
+    the empty sentinel too, but the mask is the contract).
     """
     b, kv, _, d = q.shape
     nkb = plan["k_min"].shape[2]
     p = plan["kv_indices"].shape[-1]
     sm_scale = 1.0 / np.sqrt(d)
     valid_blk = (jnp.arange(nkb) * k_block <= pos[:, None])   # (B, nkb)
+    if "live_blk" in plan:
+        valid_blk = valid_blk & plan["live_blk"]
     vb = valid_blk[:, None, :, None]
     k_min, k_max = degraded_summary_bounds(plan, quant)  # fp32 either way
     ub = block_upper_bounds(q.astype(jnp.float32),
@@ -641,6 +681,8 @@ def sketch_replan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     f, nsb, c, _ = sketch_geometry(nkb, p, sketch_factor)
     sm_scale = 1.0 / np.sqrt(d)
     valid_blk = (jnp.arange(nkb) * k_block <= pos[:, None])   # (B, nkb)
+    if "live_blk" in plan:            # retired blocks leave the ranking
+        valid_blk = valid_blk & plan["live_blk"]
     vb = valid_blk[:, None, :, None]
     lo = jnp.where(vb, k_min, 0.0)
     hi = jnp.where(vb, k_max, 0.0)
@@ -667,6 +709,12 @@ def sketch_replan(q: jax.Array, k_cache: jax.Array, plan: PlanState,
     sb_slot = jnp.arange(c * f * k_block) // (f * k_block)    # (C·F·kb,)
     live = sb_slot[None, None, :] < sb_cnt[..., None]         # no dup pads
     live = live & (tok <= pos[:, None, None])
+    if "live_blk" in plan:
+        # a surviving super-block may straddle retired blocks whose
+        # pages are already freed — their gathered rows are garbage and
+        # must never reach the threshold multiset
+        lv = jax.vmap(lambda m, c_: m[c_])(plan["live_blk"], cand)
+        live = live & jnp.repeat(lv, k_block, axis=-1)
     sc = jnp.where(live[:, :, None, :], sc, NEG_INF)
     thr = kth_largest_bisect(sc, topk_k)                      # (B, KV, G, 1)
     sel = bisect_select(jnp.where(live[:, :, None, :], sc, -jnp.inf),
@@ -715,7 +763,8 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
                        churn_budget: Optional[float] = None,
                        page_table: Optional[jax.Array] = None,
                        replan_mode: str = "exact",
-                       sketch_factor: int = 4
+                       sketch_factor: int = 4,
+                       retire_decay: float = 0.9
                        ) -> Tuple[PlanState, jax.Array]:
     """One decode step of plan maintenance (summaries must already hold
     the step's appended key — call ``update_block_summaries`` first).
@@ -749,7 +798,16 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
     makes an undegraded slot bitwise independent of its degraded
     neighbors), re-plans honor the slot's ``budget``/``quant`` and a
     flagged ``sketch`` slot re-plans hierarchically.  Incompatible
-    with the churn-adaptive trigger (the controller owns the beat)."""
+    with the churn-adaptive trigger (the controller owns the beat).
+
+    **Cascade retirement** (state carries ``imp``/``live_blk``): every
+    planner ANDs ``live_blk`` into its block-validity predicate, and
+    after the plan lands the accumulated importance decays and absorbs
+    this step's planned membership — ``imp ← retire_decay·imp + sel``
+    per (slot, kv head, block), a SpAtten-style cumulative attention
+    importance proxied by the score pass's own selection output, so it
+    costs zero extra cache reads.  Inactive slots' importance is
+    frozen.  A retirement-free plan skips all of this bitwise."""
     assert replan_mode in ("exact", "sketch"), replan_mode
     p = plan["kv_indices"].shape[-1]
     qos = "budget" in plan
@@ -765,7 +823,8 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
         kc = k_cache if page_table is None else \
             logical_kv_view(k_cache, page_table)
         return full_replan(q, kc, pos, topk_k=topk_k,
-                           k_block=k_block, plan_blocks=p)
+                           k_block=k_block, plan_blocks=p,
+                           live_blk=plan.get("live_blk"))
 
     def _incr(_):
         return incremental_plan(q, k_cache, plan, pos, topk_k=topk_k,
@@ -791,7 +850,8 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
         # isolation keeps undegraded slots bitwise independent of
         # their degraded neighbors
         sub = {k: plan[k] for k in
-               ("k_min", "k_max", "k_scale", "k_zero", "kv_indices")
+               ("k_min", "k_max", "k_scale", "k_zero", "kv_indices",
+                "live_blk")
                if k in plan}
         xs = (do_full, q, pos, sub,
               k_cache if page_table is None else page_table,
@@ -816,7 +876,8 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
                 kf = kc if tb is None else logical_kv_view(kc, tb)
                 return full_replan(qb, kf, posb, topk_k=topk_k,
                                    k_block=k_block, plan_blocks=p,
-                                   budget=bud)
+                                   budget=bud,
+                                   live_blk=subb.get("live_blk"))
 
             def _full_one(_):
                 if replan_mode == "sketch":
@@ -844,7 +905,8 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
             # a genuine runtime branch (NOT a batched select of both),
             # so untriggered slots never stream their cache
             sub = {k: plan[k] for k in
-                   ("k_min", "k_max", "k_scale", "k_zero", "kv_indices")
+                   ("k_min", "k_max", "k_scale", "k_zero", "kv_indices",
+                    "live_blk")
                    if k in plan}
             xs = (do_full, q, pos, sub,
                   k_cache if page_table is None else page_table)
@@ -864,7 +926,8 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
                             page_table=tb)
                     kf = kc if tb is None else logical_kv_view(kc, tb)
                     return full_replan(qb, kf, posb, topk_k=topk_k,
-                                       k_block=k_block, plan_blocks=p)
+                                       k_block=k_block, plan_blocks=p,
+                                       live_blk=subb.get("live_blk"))
 
                 def _incr_one(_):
                     return incremental_plan(
@@ -888,7 +951,66 @@ def decode_plan_update(plan: PlanState, q: jax.Array, k_cache: jax.Array,
                 "step": plan["step"] + active.astype(jnp.int32),
                 "churn": churn,
                 "replans": plan["replans"] + do_full.astype(jnp.int32)}
+    if "imp" in plan:
+        # SpAtten-style cumulative importance: decay, then absorb this
+        # step's planned-set membership — derived from the score pass's
+        # own output, so no extra cache reads.  Idle slots freeze.
+        nkb = plan["imp"].shape[-1]
+        sel = _plan_occupancy(kv_indices, kv_counts, nkb)
+        imp = plan["imp"] * retire_decay + sel.astype(jnp.float32)
+        new_plan["imp"] = jnp.where(active[:, None, None], imp,
+                                    plan["imp"])
     return new_plan, thr
+
+
+def retire_plan_blocks(plan: PlanState, slot, blocks, *,
+                       batch_axis: int = 0) -> PlanState:
+    """Plan-state repair after a retirement pass freed one slot's cold
+    blocks' pages (host-invoked between steps, like
+    ``install_plan_slot``): mark the blocks dead in ``live_blk``, reset
+    their summaries to the empty sentinel (so even a stale ranking can
+    never resurrect them — the conservative-bounds contract holds
+    vacuously for a block with no tokens), zero their accumulated
+    importance, and re-absorb ``kv_indices``/``kv_counts`` over the
+    survivors (occupancy → compact round-trips the untouched entries
+    bitwise).  Positions stay logical throughout — survivors keep their
+    token positions, so causality masks and RoPE are untouched.  Works
+    on layer-stacked states via ``batch_axis``."""
+    assert "live_blk" in plan, "plan was not initialized with retire=True"
+    ix = (slice(None),) * batch_axis + (slot,)
+    nkb = plan["live_blk"].shape[-1]
+    p = plan["kv_indices"].shape[-1]
+    m = jnp.zeros((nkb,), bool).at[jnp.asarray(blocks, jnp.int32)].set(True)
+    out = dict(plan)
+    out["live_blk"] = plan["live_blk"].at[ix].set(
+        plan["live_blk"][ix] & ~m)
+    out["imp"] = plan["imp"].at[ix].set(
+        jnp.where(m, 0.0, plan["imp"][ix]))
+    if "k_scale" in plan:            # int8 backend: sentinel = empty
+        out["k_min"] = plan["k_min"].at[ix].set(
+            jnp.where(m[:, None], 0, plan["k_min"][ix]))
+        out["k_max"] = plan["k_max"].at[ix].set(
+            jnp.where(m[:, None], 0, plan["k_max"][ix]))
+        out["k_scale"] = plan["k_scale"].at[ix].set(
+            jnp.where(m, -1.0, plan["k_scale"][ix]))
+        out["k_zero"] = plan["k_zero"].at[ix].set(
+            jnp.where(m, 0.0, plan["k_zero"][ix]))
+    else:
+        out["k_min"] = plan["k_min"].at[ix].set(
+            jnp.where(m[:, None], jnp.inf, plan["k_min"][ix]))
+        out["k_max"] = plan["k_max"].at[ix].set(
+            jnp.where(m[:, None], -jnp.inf, plan["k_max"][ix]))
+    # recompact the slot's planned rows over the survivors
+    idx, cnt = plan["kv_indices"][ix], plan["kv_counts"][ix]
+    lead = idx.shape[:-2]                       # () or (L,) layer-stacked
+    occ = _plan_occupancy(idx.reshape((-1,) + idx.shape[-2:]),
+                          cnt.reshape((-1,) + cnt.shape[-1:]), nkb)
+    ni, nc = _compact_rows(occ & ~m, p)
+    out["kv_indices"] = plan["kv_indices"].at[ix].set(
+        ni.reshape(lead + ni.shape[-2:]).astype(idx.dtype))
+    out["kv_counts"] = plan["kv_counts"].at[ix].set(
+        nc.reshape(lead + nc.shape[-1:]).astype(cnt.dtype))
+    return out
 
 
 def plan_from_prefill(k_cache: jax.Array, q_tail: jax.Array,

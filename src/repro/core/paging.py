@@ -180,6 +180,27 @@ class PageAllocator:
         # injection's ``pool_squeeze``) — out of the free list but
         # referenced by nobody
         self.squeezed: List[int] = []
+        # cascade retirement (``retire_compact``): per-slot set of
+        # logical pages whose physical page was retired mid-stream.
+        # Retired logical pages are HOLES below ``n_mapped``: their
+        # table entries point at the overflow page (position masking in
+        # the plan keeps them unread — the plan stops naming retired
+        # blocks), ``ensure`` never remaps them (it only maps at
+        # ``n_mapped`` and beyond), and ``free_slot``/``swap_out`` skip
+        # them.  Cleared with the slot.
+        self.retired: List[set] = [set() for _ in range(batch_slots)]
+        self.pages_retired = 0
+        # lazy copy-on-write (``cfg.kv_lazy_cow``): phys page → slot
+        # holding a write lease on it.  A lease lets the SOLE mapping
+        # slot append in place into a trie-retained partial page
+        # (appends land past the rows the trie node covers, so the
+        # cached prefix stays pristine); it is live only while exactly
+        # {holder's table entry, trie retention} reference the page —
+        # any third reference re-protects the page and the holder falls
+        # back to the eager CoW copy on its next append.
+        self.lazy_cow = False
+        self.cow_leases: Dict[int, int] = {}
+        self.lazy_cow_skips = 0
         # outstanding host-swap handles: each resident (shared) page a
         # handle pins holds one reference until ``swap_in`` releases it
         self.swapped: List[Dict[str, Any]] = []
@@ -215,6 +236,7 @@ class PageAllocator:
         idle-page count must match the free+squeezed lists.  Catches
         leaked/double references in O(pages) without walking tables."""
         expect = int(self.n_mapped.sum())
+        expect -= sum(len(r) for r in self.retired)   # holes map nothing
         expect += sum(int((h["resident"] >= 0).sum())
                       for h in self.swapped)
         if self.audit_trie is not None:
@@ -308,23 +330,127 @@ class PageAllocator:
         page was remapped and the caller must copy the K/V rows
         device-side (``models.decode.copy_phys_pages``) before the
         write lands; ``(False, None)`` when the pool cannot back the
-        copy (the slot stalls this step, exactly like ``ensure``)."""
+        copy (the slot stalls this step, exactly like ``ensure``).
+
+        **Lazy CoW** (``lazy_cow=True``): when the only other reference
+        to the shared page is the prefix trie's retention (``ref ==
+        2``) AND the write row sits past every row a trie node covers
+        (``PrefixCache.covered_rows``), the copy is skipped and the
+        slot takes a *write lease* instead — such appends can never
+        corrupt the cached prefix.  A partial matcher whose tail starts
+        INSIDE the covered rows always eager-copies.  The driver must push ``writable_ref_view()`` (not
+        ``ref``) so the device write-protect honors the lease; the
+        lease self-invalidates the moment a third reference appears,
+        and the next append then takes the eager copy path (copying
+        the holder's own in-place rows — correct contents either
+        way)."""
         lp = pos // self.page
         if lp >= self.n_mapped[slot]:
             return True, None                    # unmapped: ensure() maps
         src = int(self.table[slot, lp])
         if self.ref[src] <= 1:
+            self.cow_leases.pop(src, None)       # lease served its term
             return True, None                    # exclusive: write away
+        if self.lazy_cow and self.ref[src] == 2:
+            if self.cow_leases.get(src) == slot:
+                return True, None                # live lease
+            if (src not in self.cow_leases and self._trie_retains(src)
+                    and pos % self.page >=
+                    self.audit_trie.covered_rows(src)):
+                # the write row is PAST every row a trie node covers
+                # (the owner appending after registering its prompt) —
+                # in place is safe.  A partial matcher diverging INSIDE
+                # the covered range never qualifies: it must eager-copy
+                # or it would overwrite cached prefix rows.
+                self.cow_leases[src] = slot
+                self.lazy_cow_skips += 1
+                return True, None
         if not self.free:
             return False, None                   # CoW needs a page: stall
         dst = self.free.pop()
         self.ref[dst] = 1
         self.table[slot, lp] = dst
         self.ref[src] -= 1                       # shared pages never hit 0
+        self.cow_leases.pop(src, None)           # holder went private
         self.pages_in_use_peak = max(self.pages_in_use_peak,
                                      self.pages_in_use)
         self._audit()
         return True, (src, dst)
+
+    def _trie_retains(self, phys: int) -> bool:
+        """Is one of ``phys``'s references the prefix trie's retention?
+        (Lease eligibility: at ``ref == 2`` with trie retention the
+        only sharer is the trie, whose node never covers the rows an
+        append writes.)"""
+        return self.audit_trie is not None and \
+            phys in self.audit_trie.retained_pages()
+
+    def writable_ref_view(self) -> np.ndarray:
+        """The refcounts the driver pushes device-side for the paged
+        write protect.  Identical to ``ref`` except that a *live* lazy-
+        CoW lease's page reports 1, so the holder's in-place appends
+        pass the protect.  Liveness is re-derived from scratch on every
+        push — a lease whose page gained a third reference (or whose
+        holder no longer maps it) is dropped here and the true refcount
+        re-protects the page."""
+        if not self.cow_leases:
+            return self.ref
+        view = self.ref.copy()
+        for phys in list(self.cow_leases):
+            slot = self.cow_leases[phys]
+            held = phys in self.table[slot, :self.n_mapped[slot]]
+            if self.ref[phys] == 2 and held:
+                view[phys] = 1
+            elif self.ref[phys] != 2 or not held:
+                del self.cow_leases[phys]
+        return view
+
+    def drop_leases(self, slot: int) -> None:
+        """Release every lazy-CoW lease ``slot`` holds (slot freed,
+        swapped, or preempted — the next occupant must not inherit a
+        write grant on a page it never mapped)."""
+        self.cow_leases = {p: s for p, s in self.cow_leases.items()
+                           if s != slot}
+
+    def retire_compact(self, slot: int, lps: List[int]
+                       ) -> Tuple[List[int], List[int]]:
+        """Cascade retirement: free the physical pages behind ``slot``'s
+        cold logical pages ``lps`` and return them to the global pool
+        mid-stream.  Returns ``(freed_phys, skipped_lps)``.
+
+        Pinned pages are **never** retired: a page referenced by anyone
+        else — the prefix trie's retention, another slot's mapping, or
+        a swap handle's resident pin (``ref > 1`` covers all three, and
+        a swapped-out request has no table row to name pages through in
+        the first place) — is skipped and reported back, not freed.
+
+        A retired logical page becomes a HOLE: its table entry resets
+        to the overflow page while ``n_mapped`` stands, so ``ensure``
+        never remaps it and the slot's surviving pages keep their
+        logical positions (causality masks untouched — the decode plan
+        simply stops naming the retired blocks).  The caller owns the
+        policy of never retiring the block holding the current write
+        position."""
+        freed: List[int] = []
+        skipped: List[int] = []
+        for lp in sorted({int(x) for x in lps}):
+            assert 0 <= lp < self.n_mapped[slot], \
+                f"retire of unmapped logical page {lp} (slot {slot})"
+            assert lp not in self.retired[slot], \
+                f"logical page {lp} already retired (slot {slot})"
+            phys = int(self.table[slot, lp])
+            assert phys != OVERFLOW_PAGE, (slot, lp)
+            if self.ref[phys] > 1:               # pinned: trie / slot /
+                skipped.append(lp)               # swap-handle reference
+                continue
+            self.table[slot, lp] = OVERFLOW_PAGE
+            self.retired[slot].add(lp)
+            self.cow_leases.pop(phys, None)
+            self._deref(phys)
+            freed.append(phys)
+        self.pages_retired += len(freed)
+        self._audit()
+        return freed, skipped
 
     def free_slot(self, slot: int) -> int:
         """Release a finished slot's references.  Pages drop back to
@@ -333,11 +459,15 @@ class PageAllocator:
         what makes preemption safe under sharing).  Stale table entries
         reset to the overflow page (reads are position-masked anyway,
         but a recycled physical page must not stay visible through an
-        old slot's table row)."""
+        old slot's table row).  Retired holes hold no reference and are
+        simply forgotten with the slot."""
         n = int(self.n_mapped[slot])
-        phys = [int(self.table[slot, lp]) for lp in range(n)]
+        phys = [int(self.table[slot, lp]) for lp in range(n)
+                if lp not in self.retired[slot]]
         self.table[slot, :] = OVERFLOW_PAGE
         self.n_mapped[slot] = 0
+        self.retired[slot] = set()
+        self.drop_leases(slot)
         for p in phys:
             self._deref(p)
         self._audit()
@@ -382,11 +512,14 @@ class PageAllocator:
         ``swap_in``."""
         n = int(self.n_mapped[slot])
         assert n > 0, "swap_out on a slot with no mapped pages"
+        retired = sorted(self.retired[slot])
         phys = [int(self.table[slot, lp]) for lp in range(n)]
         resident = np.full(n, -1, np.int64)
         priv_lp: List[int] = []
         priv_phys: List[int] = []
         for lp, p in enumerate(phys):
+            if lp in self.retired[slot]:
+                continue             # retired hole: nothing to move
             if self.ref[p] > 1:
                 resident[lp] = p     # slot's ref transfers to the handle
             else:
@@ -395,9 +528,14 @@ class PageAllocator:
         chunks = [(priv_lp, gather(priv_phys))] if priv_phys else []
         self.table[slot, :] = OVERFLOW_PAGE
         self.n_mapped[slot] = 0
+        self.retired[slot] = set()
+        self.drop_leases(slot)
         for p in priv_phys:
             self._deref(p)
         handle = {"n_pages": n, "resident": resident, "chunks": chunks,
+                  # retired holes restore as holes (``swap_in`` re-marks
+                  # them), so the logical layout round-trips exactly
+                  "retired": retired,
                   # integrity: one checksum set per chunk, verified
                   # before any swap_in mutation (bit-rot in host memory
                   # must never scatter back into the pool)
@@ -494,6 +632,7 @@ class PageAllocator:
                 fresh.append(q)
             scatter(fresh, payload)
         self.n_mapped[slot] = handle["n_pages"]
+        self.retired[slot] = set(handle.get("retired", ()))
         self.swapped = [h for h in self.swapped if h is not handle]
         self.pages_in_use_peak = max(self.pages_in_use_peak,
                                      self.pages_in_use)
@@ -519,6 +658,12 @@ class PageAllocator:
           shared and write-protected, or fails here);
         * table entries beyond ``n_mapped`` are exactly the overflow
           page (no stale mapping survives a free/swap);
+        * retired logical pages are holes strictly below ``n_mapped``
+          whose table entries are exactly the overflow page (a retired
+          page maps nothing and references nothing);
+        * every lazy-CoW lease names a non-overflow page with a live
+          reference (lease *liveness* — ref == 2 + holder mapping — is
+          re-derived on every ``writable_ref_view`` push instead);
         * every trie node's page is live (``ref > 0``).
 
         ``trie`` defaults to ``audit_trie`` (auto-wired by
@@ -537,15 +682,26 @@ class PageAllocator:
         expected = np.zeros(self.n_pages, np.int64)
         for slot in range(self.table.shape[0]):
             m = int(self.n_mapped[slot])
+            assert all(0 <= lp < m for lp in self.retired[slot]), (
+                f"slot {slot}: retired pages {sorted(self.retired[slot])} "
+                f"outside the mapped region [0, {m})")
             for lp in range(self.max_pages):
                 p = int(self.table[slot, lp])
-                if lp < m:
+                if lp < m and lp in self.retired[slot]:
+                    assert p == OVERFLOW_PAGE, (
+                        f"slot {slot}: retired logical page {lp} still "
+                        f"maps physical page {p}")
+                elif lp < m:
                     assert p != OVERFLOW_PAGE, \
                         f"slot {slot} maps overflow at logical page {lp}"
                     expected[p] += 1
                 else:
                     assert p == OVERFLOW_PAGE, \
                         f"stale table entry {p} at slot {slot} lp {lp}"
+        for phys, slot in self.cow_leases.items():
+            assert phys != OVERFLOW_PAGE, "lease on the overflow page"
+            assert self.ref[phys] >= 1, \
+                f"lazy-CoW lease on dead page {phys} (slot {slot})"
         for h in self.swapped:
             for p in h["resident"]:
                 if p >= 0:
@@ -581,6 +737,8 @@ class PageAllocator:
             "private_pages": self.pages_in_use - self.shared_pages,
             "hbm_reserved_bytes": self.n_pages * page_bytes,
             "hbm_used_peak_bytes": self.pages_in_use_peak * page_bytes,
+            "pages_retired": self.pages_retired,
+            "lazy_cow_skips": self.lazy_cow_skips,
         }
 
 
@@ -674,6 +832,22 @@ class PrefixCache:
             stack.extend(node.children.values())
             stack.extend(node.partials)
         return out
+
+    def covered_rows(self, phys: int) -> int:
+        """Rows of ``phys`` a live trie node covers (its ``ntok``; 0
+        when no node is backed by ``phys``).  The lazy-CoW lease gate:
+        in-place writes are safe only at rows PAST this — a write
+        inside the covered range would corrupt the cached prefix for
+        every future matcher."""
+        best = 0
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            if node is not self.root and node.phys == int(phys):
+                best = max(best, len(node.tokens))
+            stack.extend(node.children.values())
+            stack.extend(node.partials)
+        return best
 
     def _touch(self, node: _TrieNode) -> None:
         self._clock += 1

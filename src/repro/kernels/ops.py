@@ -292,7 +292,8 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
                        sketch_factor: int = 4,
                        plan_blocks=None,
                        quant=None,
-                       sketch=None) -> Dict:
+                       sketch=None,
+                       live_blocks=None) -> Dict:
     """Per-step K/V fetch accounting for the decode route.  kv_counts:
     (B, KV) [or (L, B, KV) — any (..., B, KV)] int; pos: (B,) int
     per-slot positions.
@@ -330,6 +331,15 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
     switch) and a sketched slot's periodic re-plan prices
     hierarchically even when the global ``replan_mode`` is exact.
     Scalar arguments keep the pre-ladder accounting bit-for-bit.
+
+    **Retirement** (``live_blocks`` — (B,) int, the per-slot count of
+    LIVE blocks after cascade retirement): retired blocks leave the
+    ranking set entirely — their pages are freed, so a full re-plan
+    can only stream the surviving blocks' keys and an incremental step
+    only reads summaries the plan still maintains.  Summary reads
+    price at the live count instead of ``nkb``, and the exact/sketch
+    re-plan's key stream at ``min(valid_blocks, live_blocks)``.
+    ``None`` (or retire off) keeps every prior pricing bit-for-bit.
     """
     from repro.core.decode_plan import sketch_geometry, summary_bytes
     cnt = np.asarray(kv_counts)
@@ -350,11 +360,16 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
     if replan is not None:
         k_tile_bytes = k_block * d * dtype_bytes               # K only
         layers = cnt.size // (b * kv)
+        # retirement: a slot's ranking set shrinks to its live blocks
+        live = None
+        if live_blocks is not None:
+            live = np.asarray(live_blocks, np.int64).reshape(-1)
+            assert live.size == b, (live.size, b)
         # per-slot summary pricing: the quant rung models the int8
         # backend's code reads for flagged slots
         if nkb is None:
             sum_head_slot = np.zeros(b, np.int64)
-        else:
+        elif live is None:
             s_base = summary_bytes(nkb, d, summary)
             sum_head_slot = np.full(b, s_base, np.int64)
             if quant is not None:
@@ -362,6 +377,16 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
                 assert qn.size == b, (qn.size, b)
                 sum_head_slot = np.where(
                     qn, summary_bytes(nkb, d, "int8"), s_base)
+        else:
+            sum_head_slot = np.array(
+                [summary_bytes(int(n), d, summary) for n in live],
+                np.int64)
+            if quant is not None:
+                qn = np.asarray(quant, bool).reshape(-1)
+                assert qn.size == b, (qn.size, b)
+                sum_head_slot = np.where(qn, np.array(
+                    [summary_bytes(int(n), d, "int8") for n in live],
+                    np.int64), sum_head_slot)
         summaries_b = int(sum_head_slot.sum()) * kv * layers
         # per-slot plan width: a (B,) vector prices each slot's sketch
         # geometry at its own (possibly degraded) budget
@@ -369,7 +394,9 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
             np.asarray(plan_blocks).reshape(-1)
         skt = None if sketch is None else \
             np.asarray(sketch, bool).reshape(-1)
-        exact_slot = valid_blocks * kv * layers * k_tile_bytes
+        vb = valid_blocks if live is None else \
+            np.minimum(live, valid_blocks)
+        exact_slot = vb * kv * layers * k_tile_bytes
         if nkb is not None and (replan_mode == "sketch"
                                 or skt is not None):
             pb_slot = np.full(b, nkb, np.int64)
@@ -378,7 +405,7 @@ def decode_fetch_stats(kv_counts, pos, *, k_block: int, d: int,
                 pb_slot = np.minimum(
                     np.broadcast_to(pb_arr, (b,)).astype(np.int64), nkb)
             cand_slot = np.array(
-                [min(int(valid_blocks[i]),
+                [min(int(vb[i]),
                      sketch_geometry(nkb, int(pb_slot[i]),
                                      sketch_factor)[3])
                  for i in range(b)], np.int64)

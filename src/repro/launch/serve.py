@@ -314,6 +314,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         n_pages = int(pool["k_pages"].shape[1])
         alloc = PageAllocator(n_pages, batch_slots, max_len // page, page,
                               audit=audit_pages)
+        alloc.lazy_cow = bool(getattr(cfg, "kv_lazy_cow", False))
         cache = dec.set_page_table(cfg, cache, alloc.table)
         # backpressure only helps when at least ONE request's worst-case
         # working set fits: otherwise the livelock handler preempts the
@@ -370,9 +371,13 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
 
     def _push_tables():
         nonlocal cache
+        # writable_ref_view == ref when lazy CoW is off (bit-identical
+        # push); with leases, a live lease's page reports refcount 1 so
+        # its holder's in-place appends pass the device write-protect
         cache = dec.set_page_table(
             cfg, cache, alloc.table,
-            page_ref=alloc.ref if pcache is not None else None)
+            page_ref=alloc.writable_ref_view() if pcache is not None
+            else None)
 
     def _step_writable(i: int) -> bool:
         """Pool-side gate before slot ``i`` appends at pos_h[i]: CoW
@@ -437,6 +442,9 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     defer_backoff: Dict[int, int] = {}    # request → current backoff
     degrade_log: Dict[int, List] = {}     # request → [(step, rung), ...]
     qos_dirty = False
+    # --- cascade retirement state
+    retire_events = pages_reclaimed = retired_tokens = 0
+    retire_log: Dict[int, List] = {}      # request → [(step, pages_freed)]
 
     def _clear_backoff() -> None:
         """Pool capacity (may have) grown — deferred claims re-check
@@ -611,6 +619,79 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             batch_slots, p0=min(int(p0), nkb0),
             iv0=attn._resolve_replan(cfg)[0],
             clear_steps=getattr(cfg, "sata_qos_clear_steps", 4))
+
+    # --- cascade token retirement (SpAtten): free cold blocks' pages
+    # back to the pool MID-STREAM instead of holding every prefix token
+    # until completion.  Lossy by design once a pass fires; "off" keeps
+    # the whole stack bitwise identical (no plan fields, no passes).
+    retire_on = getattr(cfg, "sata_retire", "off") == "on"
+    if retire_on:
+        if alloc is None or _plan_field(cache, "imp") is None:
+            raise ValueError(
+                "sata_retire='on' frees pages through the paged allocator "
+                "and ranks blocks by the decode plan's importance "
+                "accumulator — it needs kv_cache_layout='paged' AND sata "
+                "decode routing")
+        retire_keep = float(getattr(cfg, "sata_retire_keep", 0.5))
+        retire_mark = float(getattr(cfg, "sata_retire_watermark", 0.75))
+
+    def _retire_pass(force: bool) -> bool:
+        """One cascade-retirement sweep: for every active slot past its
+        live-token watermark (``force`` — pool pressure this step —
+        sweeps every slot), retire the coldest completed blocks down to
+        the ``sata_retire_keep`` budget and free their pages.
+
+        Importance = the plan's exponentially-decayed selection
+        accumulator (``plan["imp"]``), summed over layers and kv heads
+        — the SpAtten cumulative-attention signal, proxied by the score
+        pass's own selection output so it costs zero extra cache reads.
+        Never candidates: the current append block (and anything after
+        it), already-retired holes; ``retire_compact`` additionally
+        skips pinned pages (trie-shared / other-slot / swap-resident
+        refs).  Survivors keep their logical positions — the plan
+        repair (``dec.retire_plan``) only unnames the dead blocks, so
+        causality masks and RoPE are untouched.  Returns True when any
+        page was freed (caller re-pushes tables + clears backoff)."""
+        nonlocal cache, retire_events, pages_reclaimed, retired_tokens
+        imp = None
+        freed_any = False
+        for i in range(batch_slots):
+            r = slots[i]
+            if r is None:
+                continue
+            ret = alloc.retired[i]
+            live_tok = int(pos_h[i]) + 1 - page * len(ret)
+            if not (force or live_tok >= retire_mark * max_len):
+                continue
+            cur_blk = int(pos_h[i]) // page
+            live_lps = [lp for lp in range(int(alloc.n_mapped[i]))
+                        if lp not in ret]
+            cand = [lp for lp in live_lps if lp < cur_blk]
+            keep_n = max(1, int(np.ceil(retire_keep * len(live_lps))))
+            n_ret = min(len(live_lps) - keep_n, len(cand))
+            if n_ret <= 0:
+                continue
+            if imp is None:                  # one device pull per sweep
+                a = _plan_field(cache, "imp")
+                imp = a.reshape(-1, *a.shape[-3:])     # (L, B, KV, nkb)
+            score = imp[:, i].sum(axis=(0, 1))         # (nkb,)
+            # coldest first; ties retire the OLDEST block (deterministic)
+            cand.sort(key=lambda lp: (float(score[lp]), lp))
+            chosen = cand[:n_ret]
+            freed, skipped = alloc.retire_compact(i, chosen)
+            retired_lps = [lp for lp in chosen if lp not in skipped]
+            if not retired_lps:
+                continue                     # every candidate was pinned
+            cache = dec.retire_plan(cfg, cache, i, retired_lps)
+            if freed:
+                cache = dec.retire_phys_pages(cache, freed)
+                freed_any = True
+            retire_events += 1
+            pages_reclaimed += len(freed)
+            retired_tokens += page * len(retired_lps)
+            retire_log.setdefault(r, []).append((steps, len(freed)))
+        return freed_any
+
     # every slot starts RELEASED (no request → no re-plan beat, no
     # accounting); a claim re-activates it through reset_slot
     for i in range(batch_slots):
@@ -638,7 +719,8 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                 rep_offset, cow_copies, corrupt_pages_injected,
                 corrupt_pages_detected, quarantined_pages,
                 trie_nodes_invalidated, load_spikes_seen, slow_steps_seen,
-                degraded_steps, deferred_retries_skipped)
+                degraded_steps, deferred_retries_skipped,
+                retire_events, pages_reclaimed, retired_tokens)
 
     # --- cross-process serve checkpoint/resume
     ckpt = None
@@ -672,6 +754,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         noted = m["noted"]
         qosctl = m["qosctl"]
         degrade_log = m["degrade_log"]
+        retire_log = m.get("retire_log", {})
         defer_until = m["defer_until"]
         defer_backoff = m["defer_backoff"]
         last_rep = m["last_rep"]
@@ -687,7 +770,8 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
          rep_offset, cow_copies, corrupt_pages_injected,
          corrupt_pages_detected, quarantined_pages,
          trie_nodes_invalidated, load_spikes_seen, slow_steps_seen,
-         degraded_steps, deferred_retries_skipped) = m["ctrs"]
+         degraded_steps, deferred_retries_skipped,
+         retire_events, pages_reclaimed, retired_tokens) = m["ctrs"]
         # wall clocks re-anchor — resumed latencies measure THIS
         # process's wall; outputs/counters stay bitwise
         t_claim = {r: time.time() for r in m["t_claim_reqs"]}
@@ -711,6 +795,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                 "admit_clock": admit_clock, "req_steps": req_steps,
                 "timed_out": timed_out, "noted": noted,
                 "qosctl": qosctl, "degrade_log": degrade_log,
+                "retire_log": retire_log,
                 "defer_until": defer_until, "defer_backoff": defer_backoff,
                 "last_rep": last_rep, "rep_base": rep_base,
                 "rng": rng.bit_generator.state,
@@ -1065,6 +1150,13 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                 pb = np.asarray([k[0] for k in kn], np.int64)
                 qn = np.asarray([k[2] for k in kn], bool)
                 sk = np.asarray([k[3] for k in kn], bool)
+            lv = None
+            if retire_on:
+                # retired blocks left the ranking set — summary reads
+                # and re-plan key streams price at the live count
+                lv = np.asarray(
+                    [max_len // blk - len(alloc.retired[i]) for i in live],
+                    np.int64)
             st = decode_fetch_stats(counts[:, live], pos_h[live],
                                     k_block=blk, d=cfg.hd, replan=frac,
                                     nkb=max_len // blk,
@@ -1076,7 +1168,8 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                                         cfg, "sata_replan_mode", "exact"),
                                     sketch_factor=getattr(
                                         cfg, "sata_sketch_factor", 4),
-                                    plan_blocks=pb, quant=qn, sketch=sk)
+                                    plan_blocks=pb, quant=qn, sketch=sk,
+                                    live_blocks=lv)
             fetch_tiles_plan += st["kv_fetch_tiles_plan"]
             fetch_tiles_dense += st["kv_fetch_tiles_dense"]
             plan_bytes += st["plan_fetch_bytes_step"]
@@ -1111,6 +1204,15 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                     _clear_backoff()
             elif i not in stalled:
                 tokens_h[i, 0] = int(nxt[i])
+        if retire_on:
+            # after the step: this step's selection is already folded
+            # into the importance accumulator, and completed slots have
+            # released — pool pressure (a deferral, a stall, a spike)
+            # forces a sweep of every active slot, the watermark fires
+            # per slot otherwise
+            if _retire_pass(pressure_now or bool(stalled)):
+                _push_tables()
+                _clear_backoff()              # freed pages: re-check now
         steps += 1
     dt = time.time() - t0
     out: Dict[str, Any] = {
@@ -1125,6 +1227,23 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     # the slot while this request held it — empty means the request was
     # served at full quality end to end
     out["degradation"] = {r: list(degrade_log.get(r, [])) for r in outputs}
+    if retire_on:
+        # per-request retirement timelines ((step, pages_freed) per
+        # pass) plus SpAtten's second cascade, report-only: per-KV-head
+        # importance (the decayed accumulator summed over layers, slots
+        # and blocks) — the signal a future head-pruning cascade would
+        # rank on, surfaced with zero behavior change
+        a = _plan_field(cache, "imp")
+        head_imp = a.reshape(-1, *a.shape[-3:]).sum(axis=(0, 1, 3))
+        out["retirement"] = {
+            "events": retire_events,
+            "pages_reclaimed": pages_reclaimed,
+            "retired_tokens": retired_tokens,
+            "timelines": {r: list(retire_log.get(r, [])) for r in outputs},
+            "head_importance": [float(x) for x in head_imp],
+            "keep_budget": retire_keep,
+            "watermark": retire_mark,
+        }
     if qosctl is not None:
         out["qos"] = {
             "rung_downs": qosctl.rung_downs,
@@ -1188,6 +1307,8 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         occ["swap_restore_wall_s"] = restore_wall
         occ["crashes"] = crashes
         occ["preempt_retries_max"] = max(preempt_count.values(), default=0)
+        occ["preempted_requests"] = sum(
+            1 for c in preempt_count.values() if c > 0)
         occ["protected_admissions"] = protected_admissions
         occ["audits_run"] = alloc.audits_run
         occ["light_audits_run"] = alloc.light_audits_run

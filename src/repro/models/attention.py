@@ -616,6 +616,7 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
             getattr(cfg, "sata_decode_blocks", None),
             summary=getattr(cfg, "sata_summary", "fp32"),
             qos=qos,
+            retire=getattr(cfg, "sata_retire", "off") == "on",
             # the ladder's full-quality rung starts at the configured
             # beat; the per-slot interval vector owns it from there
             replan_interval=_resolve_replan(cfg)[0] if qos else 1)
@@ -681,7 +682,8 @@ def _attend_sata_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         replan_interval=interval, churn_budget=churn_budget,
         page_table=page_table,
         replan_mode=getattr(cfg, "sata_replan_mode", "exact"),
-        sketch_factor=getattr(cfg, "sata_sketch_factor", 4))
+        sketch_factor=getattr(cfg, "sata_sketch_factor", 4),
+        retire_decay=getattr(cfg, "sata_retire_decay", 0.9))
     out = sata_decode_attention(qg, k, v, plan["kv_indices"],
                                 plan["kv_counts"], thr, pos,
                                 k_block=k_block, page_table=page_table)

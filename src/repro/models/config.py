@@ -106,6 +106,35 @@ class ModelConfig:
                                               # pressure-free steps
                                               # before stepping one rung
                                               # back up
+    sata_retire: str = "off"                  # off | on — cascade token
+                                              # retirement (SpAtten):
+                                              # accumulated block
+                                              # importance rides the
+                                              # plan's score pass; cold
+                                              # blocks are retired, their
+                                              # pages freed back to the
+                                              # pool mid-stream.  LOSSY
+                                              # by design once a pass
+                                              # fires; "off" is bitwise
+                                              # identical to the
+                                              # pre-retirement stack
+    sata_retire_decay: float = 0.9            # exponential decay of the
+                                              # accumulated per-block
+                                              # importance per step
+    sata_retire_watermark: float = 0.75       # per-slot live-token
+                                              # watermark (fraction of
+                                              # max_len) that triggers a
+                                              # retirement pass; pool
+                                              # pressure (a deferred
+                                              # claim) also triggers
+    sata_retire_keep: float = 0.5             # retained-token budget: a
+                                              # pass keeps this fraction
+                                              # of the slot's live blocks
+                                              # (the hottest by
+                                              # importance; the current
+                                              # append block and trie-/
+                                              # swap-pinned pages are
+                                              # never retired)
 
     # --- serving KV-cache layout ---
     kv_cache_layout: str = "contiguous"       # contiguous | paged — paged
@@ -131,6 +160,16 @@ class ModelConfig:
                                               # copy-on-write on append;
                                               # prefill runs only on the
                                               # unmatched tail)
+    kv_lazy_cow: bool = False                 # lazy copy-on-write: a
+                                              # partial-page prefix match
+                                              # skips the eager CoW copy
+                                              # when appended rows land
+                                              # past the shared rows —
+                                              # the sole appender holds a
+                                              # write lease (revoked the
+                                              # moment another slot maps
+                                              # the page) instead of
+                                              # copying
     qk_norm: bool = False
     rope_theta: float = 10000.0
     causal: bool = True

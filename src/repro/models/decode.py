@@ -268,6 +268,64 @@ def copy_phys_pages(cache: Dict, pairs) -> Dict:
     return cache
 
 
+def retire_phys_pages(cache: Dict, phys) -> Dict:
+    """Device side of a retirement pass (``PageAllocator.
+    retire_compact``): scrub the freed physical pages back to their
+    init state — K/V rows zeroed and the per-page summary rows reset to
+    the empty sentinel (fp32 ±inf bounds; int8 zero codes with the
+    ``scale = -1`` sentinel) — across all layers, the same
+    ``.at[:, pages]`` move shape as ``copy_phys_pages``.  Correctness
+    never depends on this (a retired hole maps the overflow page so
+    the freed rows are unreachable, and a re-claimed page is rewritten
+    before any position-masked read can see it), but a freed page's
+    stale summary row must not survive into a future prefix-cache
+    registration, and scrubbing keeps the pool's audit surface clean."""
+    if phys is None or not len(phys):
+        return cache
+    idx = jnp.asarray(np.asarray(phys, np.int32))
+    cache = dict(cache)
+    for name in ("kv", "shared_kv"):
+        kvc = cache.get(name)
+        if isinstance(kvc, dict) and "k_pages" in kvc:
+            kvc = dict(kvc)
+            for f in ("k_pages", "v_pages"):
+                kvc[f] = kvc[f].at[:, idx].set(0)
+            if "page_k_min" in kvc:
+                if "page_k_scale" in kvc:           # int8 backend
+                    kvc["page_k_min"] = kvc["page_k_min"].at[:, idx].set(0)
+                    kvc["page_k_max"] = kvc["page_k_max"].at[:, idx].set(0)
+                    kvc["page_k_scale"] = \
+                        kvc["page_k_scale"].at[:, idx].set(-1.0)
+                    kvc["page_k_zero"] = \
+                        kvc["page_k_zero"].at[:, idx].set(0.0)
+                else:
+                    kvc["page_k_min"] = \
+                        kvc["page_k_min"].at[:, idx].set(jnp.inf)
+                    kvc["page_k_max"] = \
+                        kvc["page_k_max"].at[:, idx].set(-jnp.inf)
+            cache[name] = kvc
+    return cache
+
+
+def retire_plan(cfg: ModelConfig, cache: Dict, slot: int, blocks) -> Dict:
+    """Apply ``decode_plan.retire_plan_blocks`` to every plan-bearing
+    cache group — the plan-state repair half of a retirement pass
+    (summaries → empty sentinel, importance zeroed, planned rows
+    re-compacted over the survivors).  Values-only like
+    ``set_qos_knobs``: the pytree structure is unchanged, so the jitted
+    step never re-traces."""
+    from repro.core.decode_plan import retire_plan_blocks
+    cache = dict(cache)
+    for name in ("kv", "shared_kv"):
+        kvc = cache.get(name)
+        if isinstance(kvc, dict) and isinstance(kvc.get("plan"), dict) \
+                and "live_blk" in kvc["plan"]:
+            axis = 2 if (name == "kv" and cfg.family == "vlm") else 1
+            cache[name] = {**kvc, "plan": retire_plan_blocks(
+                kvc["plan"], slot, blocks, batch_axis=axis)}
+    return cache
+
+
 # --- host-swap preemption: device↔host page payloads + plan state -------
 
 # Every per-physical-page array a page row lives in: K/V rows plus the

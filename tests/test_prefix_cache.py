@@ -505,3 +505,94 @@ def test_prefix_cache_requires_paged_layout():
     with pytest.raises(ValueError, match="paged"):
         attn.prefix_cache_on(dataclasses.replace(
             _cfg(), kv_cache_layout="contiguous"))
+
+
+# ---------------------------------------------------------------------------
+# Lazy CoW write leases (kv_lazy_cow)
+# ---------------------------------------------------------------------------
+
+def test_lazy_cow_lease_lifecycle():
+    """The owner appending past its registered prompt takes a write
+    lease instead of a copy; the lease self-invalidates the moment a
+    third reference appears, after which the eager copy path runs."""
+    a, pc = _pool(n_pages=12, slots=3)
+    a.lazy_cow = True
+    assert a.ensure(0, 5)                        # 2 pages; lp 1 partial
+    assert pc.register(np.arange(6), a.table[0]) == 2
+    p1 = int(a.table[0, 1])
+    assert int(a.ref[p1]) == 2                   # slot 0 + trie
+    assert pc.covered_rows(p1) == 2              # partial node: 2 rows
+    ok, cp = a.ensure_writable(0, 6)             # append at row 2: past
+    assert ok and cp is None                     # coverage -> lease
+    assert a.lazy_cow_skips == 1 and a.cow_leases == {p1: 0}
+    view = a.writable_ref_view()
+    assert view[p1] == 1 and int(a.ref[p1]) == 2     # device sees 1
+    ok, cp = a.ensure_writable(0, 6)             # idempotent re-check
+    assert ok and cp is None
+    # a second matcher maps the page: third reference -> the next
+    # device push re-protects the page and the lease is gone
+    a.map_shared(2, [p1])
+    view = a.writable_ref_view()
+    assert view[p1] == 3 and p1 not in a.cow_leases
+    # next append: eager copy (the holder's in-place rows ride along)
+    ok, cp = a.ensure_writable(0, 7)
+    assert ok and cp is not None and cp[0] == p1
+    assert int(a.ref[p1]) == 2                   # slot 0 went private
+    a.check_invariants(pc)
+
+
+def test_lazy_cow_no_lease_inside_covered_rows():
+    """A partial matcher whose tail starts INSIDE the trie node's
+    covered rows must eager-copy even at ref == 2 — an in-place write
+    there would corrupt the cached prefix for future matchers."""
+    a, pc = _pool(n_pages=12, slots=3)
+    a.lazy_cow = True
+    assert a.ensure(0, 5)
+    assert pc.register(np.arange(6), a.table[0]) == 2
+    p0, p1 = int(a.table[0, 0]), int(a.table[0, 1])
+    a.free_slot(0)                               # trie retention remains
+    a.map_shared(1, [p0, p1])                    # matcher admission
+    assert int(a.ref[p1]) == 2                   # slot 1 + trie
+    ok, cp = a.ensure_writable(1, 5)             # row 1 < covered 2
+    assert ok and cp is not None and cp[0] == p1
+    assert a.lazy_cow_skips == 0 and not a.cow_leases
+    a.check_invariants(pc)
+
+
+def test_lazy_cow_lease_dropped_with_slot():
+    a, pc = _pool(n_pages=12, slots=3)
+    a.lazy_cow = True
+    assert a.ensure(0, 5)
+    pc.register(np.arange(6), a.table[0])
+    ok, cp = a.ensure_writable(0, 6)
+    assert ok and cp is None and a.cow_leases
+    a.free_slot(0)                               # lease dies with the slot
+    assert not a.cow_leases
+    a.check_invariants(pc)
+
+
+def test_serve_lazy_cow_skips_eager_copies():
+    """Serve triple at a geometry where every registered prompt ends
+    mid-page (prompt 20, page 8): the owner's first append after
+    registering lands inside the trie-retained partial page.  Eager
+    CoW copies it; lazy CoW leases it.  Outputs must stay bitwise
+    equal to the cache-off run either way — the satellite's pin is the
+    copy counter, which must strictly drop."""
+    from repro.launch.serve import serve
+    base = _cfg(kv_prefix_cache=False)
+    kw = dict(smoke=True, n_requests=6, batch_slots=3, gen_len=6,
+              max_len=64, prompt_len=20, shared_prefix_len=18, seed=0)
+    off = serve("qwen3-4b", cfg=base, **kw)
+    eager = serve("qwen3-4b",
+                  cfg=dataclasses.replace(base, kv_prefix_cache=True),
+                  **kw)
+    lazy = serve("qwen3-4b",
+                 cfg=dataclasses.replace(base, kv_prefix_cache=True,
+                                         kv_lazy_cow=True), **kw)
+    assert eager["outputs"] == off["outputs"]
+    assert lazy["outputs"] == off["outputs"]
+    assert eager["prefix_cache"]["cow_copies"] > 0
+    assert (lazy["prefix_cache"]["cow_copies"]
+            < eager["prefix_cache"]["cow_copies"])
+    assert lazy["page_occupancy"]["lazy_cow_skips"] > 0
+    assert lazy["prefix_cache"]["hits"] > 0
