@@ -3,15 +3,24 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test dev-deps bench bench-select bench-decode serve-smoke \
-	serve-smoke-faults serve-smoke-overload roofline-kernel \
-	check-regression
+.PHONY: test test-mesh dev-deps bench bench-select bench-decode \
+	serve-smoke serve-smoke-faults serve-smoke-overload \
+	serve-smoke-mesh roofline-kernel check-regression
 
 dev-deps:
 	-pip install -r requirements-dev.txt
 
 test:
 	python -m pytest -x -q
+
+# Mesh tier-1: the shard_map parity tests (sequence-sharded selection,
+# tensor-parallel decode) need >1 device — force an 8-way simulated
+# CPU mesh so plain CI runners exercise the sharded paths.  The same
+# tests SKIP (not fail) under `make test` on a single device.
+test-mesh:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		python -m pytest -x -q tests/test_mesh_serving.py \
+		tests/test_config_api.py
 
 # BENCH_kernel.json: dense-grid vs compacted-grid kernel timings +
 # tile-visit / fetch-byte counts — the perf trajectory across PRs.
@@ -64,6 +73,16 @@ serve-smoke-faults:
 # with bitwise-equal outputs.
 serve-smoke-overload:
 	python examples/serve_topk.py --overload 0
+
+# Cross-replica prefix-index smoke: two serve replicas share one
+# prefix digest index — replica 0 publishes its shared-prefix pages,
+# replica 1 migrates them into its own pool instead of re-prefilling
+# (asserts cross-replica hits, migrated pages, and bitwise-equal
+# outputs across replicas).  The forced device count keeps the smoke
+# on the same simulated mesh the `mesh` CI job uses.
+serve-smoke-mesh:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		python examples/serve_topk.py --replicas 2
 
 roofline-kernel:
 	python -m repro.launch.roofline --kernel

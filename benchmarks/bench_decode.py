@@ -33,7 +33,12 @@ with the *prefix* (dense decode streams every cached block) or with the
     freed mid-stream at a fixed pool (no-preemption completion ratio
     vs the retire-off twin), plan-side ranking-byte reduction with the
     retained-token budget, and the accuracy lane's deterministic
-    divergence-vs-budget sweep.
+    divergence-vs-budget sweep;
+  * mesh scaling — 2-/4-/8-way sharded selection and tensor-parallel
+    decode on a simulated 8-device CPU mesh (subprocess, because
+    XLA_FLAGS must precede jax init): parity vs single-device is
+    bitwise-gated, per-shard fetch/work splits are exact, wall tok/s
+    informational (see ``benchmarks/mesh_rows.py``).
 """
 from __future__ import annotations
 
@@ -193,7 +198,36 @@ def bench_decode() -> List[Row]:
     rows += _bench_fault_swap()
     rows += _bench_degradation()
     rows += _bench_retirement()
+    rows += _bench_mesh()
     return rows
+
+
+def _bench_mesh() -> List[Row]:
+    """2-/4-/8-way mesh scaling rows via ``benchmarks.mesh_rows`` in a
+    subprocess — the forced host device count must be set before jax
+    initializes, and this process's jax is already up single-device."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [root, os.path.join(root, "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run([sys.executable, "-m", "benchmarks.mesh_rows"],
+                          capture_output=True, text=True, env=env,
+                          cwd=root, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"mesh_rows subprocess failed:\n{proc.stderr}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("MESH_ROWS_JSON:"):
+            return [tuple(r) for r in
+                    json.loads(line[len("MESH_ROWS_JSON:"):])]
+    raise RuntimeError(f"mesh_rows emitted no row marker:\n{proc.stdout}")
 
 
 def _bench_paged(rng, interp, mode) -> List[Row]:

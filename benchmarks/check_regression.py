@@ -8,7 +8,8 @@ them into a firewall.  **Gate contract** (what fails the build):
   ``derived`` string (fetch bytes/tiles, tile visits, re-plan counts,
   reserved/used HBM, prefill tokens saved, hit counts, retirement
   reclaim/completion/divergence counters, the ``quad_SxS_buffer``
-  flag): must be EQUAL to the baseline.  These are
+  flag, mesh parity booleans and per-shard work splits): must be
+  EQUAL to the baseline.  These are
   pure functions of code + seeds — any drift is a real behavior
   change, not noise.
 * **Parity fields** — ``max_err`` values: a ``0.0`` baseline is a
@@ -93,6 +94,19 @@ EXACT_PATTERNS = [
     ("diverge_keep75", r"0\.75 -> ([0-9.]+)"),
     ("diverge_keep50", r"0\.50 -> ([0-9.]+)"),
     ("diverge_keep25", r"0\.25 -> ([0-9.]+)"),
+    # mesh-sharded serving rows (decode/mesh/*): parity booleans and
+    # the per-shard work split are bitwise properties of the sharding
+    # (max_err itself rides the generic MAX_ERR_RE gate below); only
+    # tp_scale wall-time is banded, and the docstring in
+    # benchmarks/mesh_rows.py explains why wall is informational on a
+    # simulated mesh.
+    ("mesh_thr_eq", r"thr_eq=(True|False)"),
+    ("mesh_plan_eq", r"plan_eq=(True|False)"),
+    ("mesh_fetch_sum", r"fetched tiles sum (\d+)"),
+    ("mesh_fetch_total", r"sum \d+ of (\d+) single-device"),
+    ("mesh_max_shard", r"max shard (\d+)"),
+    ("mesh_tp_shard_max", r"planned tiles max (\d+)"),
+    ("mesh_tp_plan_tiles", r"tiles max \d+ of (\d+) total"),
 ]
 MAX_ERR_RE = re.compile(r"max_err[_a-z]*\s+([0-9.]+e?[+-]?[0-9]*)")
 

@@ -1,0 +1,118 @@
+"""Mesh scaling rows for BENCH_decode.json — run as a SUBPROCESS.
+
+``bench_decode._bench_mesh`` spawns this module with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so jax
+initializes an 8-device simulated CPU mesh (the parent process already
+initialized jax single-device; the flag only takes effect before first
+init).  Prints one line: ``MESH_ROWS_JSON:<json list of rows>``.
+
+Row semantics (what the regression gate can and cannot pin on a
+simulated mesh): parity fields and per-shard planned-tile counts are
+EXACT — selection is row-local and decode is per-KV-head local, so
+sharded output must be bitwise the single-device run at ``replan=1``
+fp32, and per-shard work must partition the single-device plan.
+Wall-clock tok/s is informational: the 8 "devices" share one host's
+cores, so near-linear wall speedup is a property of a real mesh, not
+of this simulation — the linear-scaling evidence CI pins is the
+per-shard fetch/work split.
+"""
+from __future__ import annotations
+
+import json
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import timed
+    from repro.core.decode_plan import (decode_plan_update,
+                                        init_decode_plan,
+                                        update_block_summaries)
+    from repro.kernels.ops import sata_decode_attention
+    from repro.launch import mesh as M
+
+    assert len(jax.devices()) >= 8, (
+        "mesh rows need the forced 8-device host platform")
+    rows = []
+    rng = np.random.default_rng(17)
+
+    # --- sequence-sharded selection: parity + plan-proportional fetch
+    bh, s, sk, d, qb, kb = 4, 256, 256, 32, 32, 32
+    q = jnp.asarray(rng.standard_normal((bh, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, sk, d)), jnp.float32)
+    ref, rstats = M.sequence_local_attention(q, k, v, k_sel=32,
+                                             q_block=qb, k_block=kb)
+    total_tiles = int(rstats["fetched_tiles"])
+    for ways in (2, 4, 8):
+        mesh = M.make_shard_mesh(ways)
+        out, stats = M.sequence_sharded_attention(mesh, q, k, v,
+                                                  k_sel=32, q_block=qb,
+                                                  k_block=kb)
+        err = float(jnp.abs(out - ref).max())
+        thr_eq = bool((stats["thresholds"] == rstats["thresholds"]).all())
+        per_shard = np.asarray(stats["fetched_tiles_per_shard"])
+        rows.append([f"decode/mesh/seq_parity/W{ways}", 0.0,
+                     f"max_err {err:.2e} sharded vs single-device "
+                     f"(replan-free prefill selection, fp32, bitwise "
+                     f"gate), thr_eq={thr_eq}"])
+        rows.append([f"decode/mesh/seq_fetch/W{ways}", 0.0,
+                     f"per-shard fetched tiles sum {int(per_shard.sum())} "
+                     f"of {total_tiles} single-device plan tiles "
+                     f"(plan-proportional halo exchange, max shard "
+                     f"{int(per_shard.max())})"])
+
+    # --- tensor-parallel decode: parity + per-shard work + tok/s
+    b, kv, g, smax, dkb = 2, 8, 2, 2048, 128
+    pos0 = smax - 1
+    kc = jnp.asarray(rng.standard_normal((b, smax, kv, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, smax, kv, d)), jnp.float32)
+    qg = jnp.asarray(rng.standard_normal((b, kv, g, d)), jnp.float32)
+    kn = kc[:, pos0:pos0 + 1]
+    pos = jnp.full((b,), pos0, jnp.int32)
+
+    def ref_step(plan):
+        plan = update_block_summaries(plan, kn, pos, k_block=dkb)
+        plan, thr = decode_plan_update(plan, qg, kc, pos, topk_k=64,
+                                       k_block=dkb, replan_interval=1)
+        out = sata_decode_attention(qg, kc, vc, plan["kv_indices"],
+                                    plan["kv_counts"], thr, pos,
+                                    k_block=dkb)
+        return out, plan
+
+    oref, pref = ref_step(init_decode_plan(b, kv, smax, d, dkb))
+    plan_tiles = int(np.asarray(pref["kv_counts"]).sum())
+    for ways in (1, 2, 4, 8):
+        plan0 = init_decode_plan(b, kv, smax, d, dkb)
+        if ways == 1:
+            fn = jax.jit(lambda: ref_step(plan0))
+        else:
+            mesh = M.make_shard_mesh(ways)
+            fn = jax.jit(lambda m=mesh: M.tensor_parallel_decode_step(
+                m, qg, kc, vc, kn, pos, plan0, topk_k=64, k_block=dkb,
+                replan_interval=1))
+        out, pnew = fn()
+        jax.block_until_ready(out)
+        _, us = timed(lambda: jax.block_until_ready(fn()[0]), repeat=3)
+        err = float(jnp.abs(out - oref).max())
+        plan_eq = all(bool((np.asarray(pnew[n]) ==
+                            np.asarray(pref[n])).all()) for n in pref)
+        rows.append([f"decode/mesh/tp_parity/W{ways}", 0.0,
+                     f"max_err {err:.2e} sharded vs single-device "
+                     f"(replan=1 fp32, bitwise gate), "
+                     f"plan_eq={plan_eq}"])
+        cnts = np.asarray(pnew["kv_counts"])          # (B, KV)
+        shard_tiles = cnts.reshape(b, ways, kv // ways).sum(axis=(0, 2))
+        rows.append([f"decode/mesh/tp_scale/W{ways}", us,
+                     f"{b * 1e6 / us:.1f} tok/s, per-shard planned "
+                     f"tiles max {int(shard_tiles.max())} of "
+                     f"{plan_tiles} total (KV-head split, no "
+                     f"collectives; wall informational on the "
+                     f"simulated mesh)"])
+    print("MESH_ROWS_JSON:" + json.dumps(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -26,9 +26,15 @@ not fit the pool: cascade token retirement frees the coldest blocks'
 pages mid-stream and the run completes without the preemptions the
 retire-off twin needs.
 
+With ``--replicas N`` the demo runs N serve replicas around one shared
+prefix index: replica 0 publishes its shared-prefix pages' digests,
+later replicas migrate those pages into their own pools instead of
+re-prefilling, and the cross-replica hit rate is reported (outputs
+bitwise equal across replicas).
+
 Run:  PYTHONPATH=src python examples/serve_topk.py
           [--paged] [--summary int8] [--replan-mode sketch]
-          [--retire] [--faults SEED] [--overload SEED]
+          [--retire] [--replicas N] [--faults SEED] [--overload SEED]
 """
 import argparse
 import dataclasses
@@ -39,7 +45,18 @@ import tempfile
 
 from repro.configs.archs import SMOKE
 from repro.launch.faults import FaultPlan
-from repro.launch.serve import ServeKilled, serve
+from repro.launch.serve import (ResilienceOptions, ServeKilled,
+                                ServeOptions, serve, serve_replicated)
+from repro.models.config import (KVCacheConfig, QosConfig, RetireConfig,
+                                 SataDecodeConfig)
+
+
+def _with_decode(cfg, **kw):
+    """Replace fields on ``cfg.sata.decode`` (nested-config idiom)."""
+    return dataclasses.replace(
+        cfg, sata=dataclasses.replace(
+            cfg.sata,
+            decode=dataclasses.replace(cfg.sata.decode, **kw)))
 
 
 def main():
@@ -77,6 +94,12 @@ def main():
                          "squeeze + crash schedule forces host-swap "
                          "preemptions; asserts bitwise-equal restored "
                          "outputs with the invariant audit on")
+    ap.add_argument("--replicas", type=int, default=0, metavar="N",
+                    help="cross-replica prefix index scenario: N serve "
+                         "replicas (each with its own page pool) share "
+                         "one prefix digest index — later replicas "
+                         "migrate replica 0's published prefix pages "
+                         "instead of re-prefilling them")
     ap.add_argument("--overload", type=int, default=None, metavar="SEED",
                     help="overload-resilience scenario: seeded load "
                          "spikes absorbed by the QoS degradation "
@@ -92,12 +115,17 @@ def main():
     cfg = dataclasses.replace(
         SMOKE["qwen3-4b"],
         topk_impl="bisect",         # bisect thresholds (the SATA predicate)
-        sata_decode="on",           # route decode through the plan + kernel
-        sata_decode_block=8,        # k-block edge over the 64-token cache
-        sata_decode_replan=1,       # full re-plan every step (exact top-k)
-        sata_summary=args.summary,
-        sata_replan_mode=args.replan_mode,
+        sata=dataclasses.replace(
+            SMOKE["qwen3-4b"].sata,
+            decode=SataDecodeConfig(
+                mode="on",          # route decode through the plan + kernel
+                block=8,            # k-block edge over the 64-token cache
+                replan=1,           # full re-plan every step (exact top-k)
+                summary=args.summary,
+                replan_mode=args.replan_mode)),
     )
+    if args.replicas:
+        return replicated_demo(cfg, args.replicas)
     if args.overload is not None:
         child_args = ["--summary", args.summary,
                       "--replan-mode", args.replan_mode]
@@ -115,12 +143,13 @@ def main():
         # pages): short-prefix slots stop reserving max_len worth of
         # HBM, and any transient over-demand stalls a slot for a step
         # instead of failing a shape
-        cfg = dataclasses.replace(cfg, kv_cache_layout="paged",
-                                  kv_pool_pages=12)
+        cfg = dataclasses.replace(cfg, kv=KVCacheConfig(layout="paged",
+                                                        pool_pages=12))
     # gen_len spans several k-blocks so top-k (4 keys) actually skips
     # blocks — the fetch-reduction line below is the point of the demo
-    out = serve("qwen3-4b", smoke=True, n_requests=6, batch_slots=3,
-                gen_len=48, max_len=64, cfg=cfg)
+    out = serve("qwen3-4b", smoke=True, cfg=cfg,
+                options=ServeOptions(n_requests=6, batch_slots=3,
+                                     gen_len=48, max_len=64))
     print(f"[serve_topk] completed {len(out['outputs'])} requests, "
           f"{out['tokens_generated']} tokens in {out['steps']} decode steps "
           f"({out['tok_per_s']:.1f} tok/s on CPU, mean request latency "
@@ -156,19 +185,21 @@ def faults_demo(cfg, seed):
     reference.  Host-swap restores must reproduce the reference
     bitwise with ZERO re-prefilled tokens and zero cold re-plans, and
     the allocator invariant audit runs after every mutation."""
-    cfg = dataclasses.replace(cfg, sata_decode_replan=4,
-                              kv_cache_layout="paged", kv_pool_pages=6)
-    kw = dict(smoke=True, n_requests=4, batch_slots=2, gen_len=12,
-              max_len=32, prompt_len=6)
-    base = serve("qwen3-4b", cfg=cfg, **kw)
+    cfg = dataclasses.replace(_with_decode(cfg, replan=4),
+                              kv=KVCacheConfig(layout="paged",
+                                               pool_pages=6))
+    opt = ServeOptions(n_requests=4, batch_slots=2, gen_len=12,
+                       max_len=32, prompt_len=6)
+    base = serve("qwen3-4b", cfg=cfg, smoke=True, options=opt)
     faults = (FaultPlan.seeded(seed, steps=24, n_events=3,
                                max_squeeze=2, slots=2)
               .pool_squeeze(2, 3).pool_restore(14)   # forces ≥2 swaps
               .crash_step(20))
     print(f"[serve_topk] fault schedule (seed {seed}):")
     print(faults.describe())
-    out = serve("qwen3-4b", cfg=cfg, faults=faults, audit_pages=True,
-                **kw)
+    out = serve("qwen3-4b", cfg=cfg, faults=faults, smoke=True,
+                options=opt,
+                resilience=ResilienceOptions(audit_pages=True))
     o = out["page_occupancy"]
     print(f"[serve_topk] {o['host_swaps']} host-swaps "
           f"({o['tokens_salvaged']} tokens salvaged, {o['swap_restores']} "
@@ -207,29 +238,36 @@ def overload_demo(cfg, seed, child_args, ckpt_dir=None, kill_at=None):
        deterministic re-prefill (outputs unchanged).
     3. A child process killed mid-serve resumes from its checkpoint in
        this process with bitwise-equal outputs."""
-    cfg = dataclasses.replace(cfg, sata_decode_replan=4,
-                              kv_cache_layout="paged", kv_pool_pages=6,
-                              sata_qos_ladder=True)
-    kw = dict(smoke=True, n_requests=4, batch_slots=2, gen_len=12,
-              max_len=32, prompt_len=6)
+    cfg = _with_decode(cfg, replan=4)
+    cfg = dataclasses.replace(
+        cfg,
+        sata=dataclasses.replace(cfg.sata, qos=QosConfig(ladder=True)),
+        kv=KVCacheConfig(layout="paged", pool_pages=6))
+    opt = ServeOptions(n_requests=4, batch_slots=2, gen_len=12,
+                       max_len=32, prompt_len=6)
     faults = _overload_schedule(seed)
     if ckpt_dir is not None:
         # --- child mode: serve into the checkpoint dir until the
         # injected kill, then die (the parent resumes from disk)
         try:
-            serve("qwen3-4b", cfg=cfg, faults=faults,
-                  checkpoint_dir=ckpt_dir, checkpoint_every=5,
-                  kill_at_step=kill_at, **kw)
+            serve("qwen3-4b", cfg=cfg, faults=faults, smoke=True,
+                  options=opt,
+                  resilience=ResilienceOptions(checkpoint_dir=ckpt_dir,
+                                               checkpoint_every=5,
+                                               kill_at_step=kill_at))
         except ServeKilled as e:
             print(f"[serve_topk] child: {e}")
             return
         raise AssertionError("child completed — kill step never reached")
     print(f"[serve_topk] overload schedule (seed {seed}):")
     print(faults.describe())
-    base = serve("qwen3-4b", cfg=cfg, **kw)              # no faults
-    out = serve("qwen3-4b", cfg=cfg, faults=faults, **kw)
-    off = serve("qwen3-4b", faults=faults,
-                cfg=dataclasses.replace(cfg, sata_qos_ladder=False), **kw)
+    base = serve("qwen3-4b", cfg=cfg, smoke=True, options=opt)  # no faults
+    out = serve("qwen3-4b", cfg=cfg, faults=faults, smoke=True,
+                options=opt)
+    off_cfg = dataclasses.replace(
+        cfg, sata=dataclasses.replace(cfg.sata, qos=QosConfig(ladder=False)))
+    off = serve("qwen3-4b", faults=faults, cfg=off_cfg, smoke=True,
+                options=opt)
     o, q = out["page_occupancy"], out["qos"]
     print(f"[serve_topk] ladder OFF: "
           f"{off['page_occupancy']['preemptions']} preemptions; ladder "
@@ -243,9 +281,9 @@ def overload_demo(cfg, seed, child_args, ckpt_dir=None, kill_at=None):
     # park-a-handle event, not spike shedding)
     assert off["page_occupancy"]["preemptions"] >= 2, \
         "schedule too soft: ladder-off run must need >= 2 preemptions"
-    assert sorted(out["outputs"]) == list(range(kw["n_requests"]))
+    assert sorted(out["outputs"]) == list(range(opt.n_requests))
     assert o["requeue_preemptions"] == 0 and not out["timed_out"]
-    assert all(len(v) == kw["gen_len"] for v in out["outputs"].values())
+    assert all(len(v) == opt.gen_len for v in out["outputs"].values())
     assert any(tl for tl in out["degradation"].values()), \
         "spikes must appear on some request's timeline"
     for r, tl in out["degradation"].items():
@@ -266,8 +304,11 @@ def overload_demo(cfg, seed, child_args, ckpt_dir=None, kill_at=None):
            "--overload", str(seed), "--_ckpt-dir", d,
            "--_kill-at", "13"] + child_args
     subprocess.run(cmd, check=True, env=dict(os.environ))
-    res = serve("qwen3-4b", cfg=cfg, faults=faults, checkpoint_dir=d,
-                checkpoint_every=5, resume=True, **kw)
+    res = serve("qwen3-4b", cfg=cfg, faults=faults, smoke=True,
+                options=opt,
+                resilience=ResilienceOptions(checkpoint_dir=d,
+                                             checkpoint_every=5,
+                                             resume=True))
     equal = res["outputs"] == out["outputs"]
     print(f"[serve_topk] killed child resumed at step "
           f"{res['checkpoint']['resumed_at']}; outputs bitwise equal to "
@@ -286,14 +327,16 @@ def retire_demo(cfg):
     completes without a single preemption.  Prints the per-request
     retirement timelines and the per-KV-head importance split the
     report prices."""
-    base = dataclasses.replace(cfg, kv_cache_layout="paged",
-                               kv_pool_pages=16)
-    kw = dict(smoke=True, n_requests=6, batch_slots=3, gen_len=40,
-              max_len=64, prompt_len=20, shared_prefix_len=12)
-    off = serve("qwen3-4b", cfg=base, **kw)
-    on = serve("qwen3-4b", cfg=dataclasses.replace(
-        base, sata_retire="on", sata_retire_watermark=0.4,
-        sata_retire_keep=0.5), **kw)
+    base = dataclasses.replace(cfg, kv=KVCacheConfig(layout="paged",
+                                                     pool_pages=16))
+    opt = ServeOptions(n_requests=6, batch_slots=3, gen_len=40,
+                       max_len=64, prompt_len=20, shared_prefix_len=12)
+    off = serve("qwen3-4b", cfg=base, smoke=True, options=opt)
+    on_cfg = dataclasses.replace(
+        base, sata=dataclasses.replace(
+            base.sata, retire=RetireConfig(mode="on", watermark=0.4,
+                                           keep=0.5)))
+    on = serve("qwen3-4b", cfg=on_cfg, smoke=True, options=opt)
     o_off, o_on = off["page_occupancy"], on["page_occupancy"]
     r = on["retirement"]
     print(f"[serve_topk] retire OFF: {o_off['preemptions']} preemptions, "
@@ -312,11 +355,45 @@ def retire_demo(cfg):
     print(f"[serve_topk] per-KV-head importance mass: "
           f"{[round(x, 1) for x in r['head_importance']]}")
     assert r["pages_reclaimed"] > 0, "retirement never fired"
-    assert all(len(v) == kw["gen_len"] for v in on["outputs"].values())
+    assert all(len(v) == opt.gen_len for v in on["outputs"].values())
     assert o_off["preemptions"] + o_off["stalled_steps"] > 0, \
         "pool too large: the off run never felt pressure"
     assert o_on["preemptions"] < o_off["preemptions"], \
         "retirement failed to absorb the preemption pressure"
+
+
+def replicated_demo(cfg, n_replicas):
+    """N serve replicas (each with its own page pool, prefix trie, and
+    decode state) around ONE shared prefix index: replica 0 prefills
+    the shared system prefix cold and publishes its full pages' digest
+    chain; every later replica's lookup hits the index and MIGRATES the
+    published pages into its local pool (refcount/CoW semantics intact
+    — migration goes through the ordinary claiming slot) instead of
+    re-running the shared-prefix prefill.  Prints the cross-replica hit
+    rate and the prefill tokens the migrations saved; outputs must be
+    bitwise equal across replicas."""
+    cfg = dataclasses.replace(
+        cfg, kv=KVCacheConfig(layout="paged", prefix_cache=True))
+    out = serve_replicated(
+        "qwen3-4b", n_replicas=n_replicas, smoke=True, cfg=cfg,
+        options=ServeOptions(n_requests=6, batch_slots=3, gen_len=8,
+                             max_len=64, prompt_len=20,
+                             shared_prefix_len=16))
+    idx = out["index"]
+    print(f"[serve_topk] {out['n_replicas']} replicas / "
+          f"{out['requests']} requests: cross-replica hit rate "
+          f"{out['cross_replica_hit_rate']:.2f} "
+          f"({out['cross_replica_hits']} hits), {out['migrated_pages']} "
+          f"pages migrated ({out['migrated_tokens']} tokens), prefill "
+          f"tokens saved {out['prefill_tokens_saved']}")
+    print(f"[serve_topk] shared index: {idx['pages_published']} pages "
+          f"published, {idx['lookups']} lookups, {idx['remote_hits']} "
+          f"remote hits; outputs bitwise equal across replicas: "
+          f"{out['outputs_equal']}")
+    assert out["outputs_equal"], "migration changed replica outputs"
+    assert out["cross_replica_hits"] >= n_replicas - 1
+    assert out["migrated_pages"] >= 2
+    assert out["prefill_tokens_saved"] > 0
 
 
 def shared_prefix_demo(cfg):
@@ -325,12 +402,13 @@ def shared_prefix_demo(cfg):
     later claim maps them (refcount bump, zero copy, prefill only over
     the tail), and the outputs stay bitwise identical to serving with
     the cache disabled."""
-    base = dataclasses.replace(cfg, kv_cache_layout="paged")
-    kw = dict(smoke=True, n_requests=6, batch_slots=3, gen_len=8,
-              max_len=64, prompt_len=20)
-    off = serve("qwen3-4b", shared_prefix_len=16, cfg=base, **kw)
-    on = serve("qwen3-4b", shared_prefix_len=16,
-               cfg=dataclasses.replace(base, kv_prefix_cache=True), **kw)
+    base = dataclasses.replace(cfg, kv=KVCacheConfig(layout="paged"))
+    opt = ServeOptions(n_requests=6, batch_slots=3, gen_len=8,
+                       max_len=64, prompt_len=20, shared_prefix_len=16)
+    off = serve("qwen3-4b", cfg=base, smoke=True, options=opt)
+    on_cfg = dataclasses.replace(
+        base, kv=dataclasses.replace(base.kv, prefix_cache=True))
+    on = serve("qwen3-4b", cfg=on_cfg, smoke=True, options=opt)
     p = on["prefix_cache"]
     print(f"[serve_topk] shared-prefix: hit-rate {p['hit_rate']:.2f} "
           f"({p['hits']}/{p['requests']}), prefill tokens saved "

@@ -1037,3 +1037,97 @@ class PrefixCache:
             "evictions": self.evictions,
             "invalidated": self.invalidated,
         }
+
+
+class SharedPrefixIndex:
+    """Cross-replica prompt-prefix index: the distributed counterpart
+    of :class:`PrefixCache`.
+
+    Each serving replica owns its page pool and trie, but registers its
+    prompt-prefix pages here — keyed by the SAME chained page digest
+    the trie routes on — together with the pages' host-side payload
+    (K/V rows plus summary rows, the ``gather_phys_pages`` dict).  A
+    replica whose local trie misses walks the chain here instead; a hit
+    published by ANOTHER replica is a *migration*: the caller copies
+    the matched payload into freshly allocated local pages
+    (``scatter_phys_pages``), registers them in its local trie, and
+    from then on serves them with ordinary refcount/CoW semantics —
+    the index stays a pure copy source, never a shared owner, so no
+    cross-replica refcount protocol is needed.
+
+    Host-side and process-local by construction (the N-replica harness
+    runs replicas in one process); the digest-chain key is what a real
+    multi-host index service would shard on.
+    """
+
+    def __init__(self):
+        self.page: Optional[int] = None
+        # chain digest -> (replica_id, page tokens, per-page payload)
+        self._pages: Dict[bytes, Tuple[int, Tuple[int, ...],
+                                       Dict[str, np.ndarray]]] = {}
+        self.publishes = 0
+        self.pages_published = 0
+        self.lookups = 0
+        self.remote_hits = 0
+
+    def publish(self, replica_id: int, tokens: np.ndarray, page: int,
+                payload: Dict[str, np.ndarray]) -> int:
+        """Register a prompt's FULL pages (payload page axis must cover
+        ``len(tokens) // page`` pages, in prefix order).  Already-known
+        digests are skipped — first publisher wins, so a page's payload
+        is immutable once indexed (prefix pages are append-frozen by
+        the trie's own CoW protection).  Returns pages newly indexed."""
+        if self.page is None:
+            self.page = int(page)
+        assert self.page == int(page), "replicas must agree on page size"
+        toks = np.asarray(tokens, np.int64).reshape(-1)
+        digest, added = b"root", 0
+        for p in range(len(toks) // self.page):
+            page_toks = toks[p * self.page:(p + 1) * self.page]
+            digest = _chain_digest(digest, page_toks)
+            if digest not in self._pages:
+                self._pages[digest] = (
+                    int(replica_id), tuple(page_toks.tolist()),
+                    {k: np.asarray(v[:, p:p + 1])
+                     for k, v in payload.items()})
+                added += 1
+        self.publishes += 1
+        self.pages_published += added
+        return added
+
+    def lookup(self, replica_id: int, tokens: np.ndarray
+               ) -> Optional[Tuple[int, Dict[str, np.ndarray], int]]:
+        """Longest indexed full-page prefix of ``tokens``: returns
+        ``(matched_tokens, stacked_payload, remote_pages)`` — payload
+        page axis in prefix order, ready for ``scatter_phys_pages``
+        into ``matched_tokens // page`` fresh pages — or ``None`` when
+        no page matches.  ``remote_pages`` counts matched pages whose
+        publisher is not ``replica_id`` (the migration, vs re-reading
+        what this replica itself published)."""
+        self.lookups += 1
+        if self.page is None:
+            return None
+        toks = np.asarray(tokens, np.int64).reshape(-1)
+        digest, chain = b"root", []
+        for p in range(len(toks) // self.page):
+            page_toks = toks[p * self.page:(p + 1) * self.page]
+            digest = _chain_digest(digest, page_toks)
+            hit = self._pages.get(digest)
+            if hit is None or hit[1] != tuple(page_toks.tolist()):
+                break
+            chain.append(hit)
+        if not chain:
+            return None
+        remote = sum(1 for rid, _, _ in chain if rid != int(replica_id))
+        payload = {k: np.concatenate([c[2][k] for c in chain], axis=1)
+                   for k in chain[0][2]}
+        return len(chain) * self.page, payload, remote
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "pages_indexed": len(self._pages),
+            "publishes": self.publishes,
+            "pages_published": self.pages_published,
+            "lookups": self.lookups,
+            "remote_hits": self.remote_hits,
+        }

@@ -82,8 +82,10 @@ Usage (CPU, reduced arch):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import pickle
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
@@ -91,7 +93,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.archs import ARCHS, SMOKE
-from repro.core.paging import PageAllocator, PageIntegrityError, PrefixCache
+from repro.core.paging import (PageAllocator, PageIntegrityError,
+                               PrefixCache, SharedPrefixIndex)
 from repro.launch.faults import FaultPlan
 from repro.launch.mesh import make_local_mesh
 from repro.models import attention as attn
@@ -238,24 +241,108 @@ def _pick_victim(stalled: List[int], slots: List[Optional[int]],
                                      -admit_seq[slots[i]]))
 
 
-def serve(arch: str, smoke: bool = True, n_requests: int = 8,
-          batch_slots: int = 4, gen_len: int = 16, max_len: int = 64,
-          seed: int = 0, mesh=None, params=None,
-          cfg=None, prompt_len: int = 1,
-          shared_prefix_len: int = 0,
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    """Workload shape for one :func:`serve` run."""
+    n_requests: int = 8
+    batch_slots: int = 4
+    gen_len: int = 16
+    max_len: int = 64
+    prompt_len: int = 1
+    shared_prefix_len: int = 0        # prompts share their first N
+                                      # tokens (a common system prompt)
+                                      # — the workload the prefix cache
+                                      # exists for
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceOptions:
+    """Fault-tolerance / overload knobs for :func:`serve` (see the
+    module docstring for the failure model each one drives)."""
+    host_swap_bytes: Optional[int] = None   # host-swap payload budget
+                                            # (None unbounded, 0 =
+                                            # requeue-only)
+    max_steps_per_request: Optional[int] = None  # deadline watchdog
+    preempt_retry_limit: int = 3            # reserved-page guarantee
+                                            # past this many preemptions
+    audit_pages: Union[bool, str] = True    # allocator invariant audit
+                                            # (True | False | "light")
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    resume: bool = False
+    kill_at_step: Optional[int] = None      # deterministic crash after
+                                            # the checkpoint block
+
+
+_LEGACY_SERVE_KW = {
+    # legacy flat kwarg -> (options group, field)
+    "n_requests": ("options", "n_requests"),
+    "batch_slots": ("options", "batch_slots"),
+    "gen_len": ("options", "gen_len"),
+    "max_len": ("options", "max_len"),
+    "prompt_len": ("options", "prompt_len"),
+    "shared_prefix_len": ("options", "shared_prefix_len"),
+    "host_swap_bytes": ("resilience", "host_swap_bytes"),
+    "max_steps_per_request": ("resilience", "max_steps_per_request"),
+    "preempt_retry_limit": ("resilience", "preempt_retry_limit"),
+    "audit_pages": ("resilience", "audit_pages"),
+    "checkpoint_dir": ("resilience", "checkpoint_dir"),
+    "checkpoint_every": ("resilience", "checkpoint_every"),
+    "resume": ("resilience", "resume"),
+    "kill_at_step": ("resilience", "kill_at_step"),
+}
+
+_warned_serve_legacy = False
+
+
+def _fold_serve_legacy(options: Optional[ServeOptions],
+                       resilience: Optional[ResilienceOptions],
+                       legacy: Dict[str, Any]
+                       ) -> Tuple[ServeOptions, ResilienceOptions]:
+    """Map legacy flat ``serve()`` kwargs onto the options dataclasses
+    (explicit flat values override group values).  One
+    DeprecationWarning per process, naming every legacy kwarg seen."""
+    opt = options or ServeOptions()
+    res = resilience or ResilienceOptions()
+    if legacy:
+        unknown = [k for k in legacy if k not in _LEGACY_SERVE_KW]
+        if unknown:
+            raise TypeError(f"serve() got unexpected keyword argument(s) "
+                            f"{unknown}")
+        global _warned_serve_legacy
+        if not _warned_serve_legacy:
+            _warned_serve_legacy = True
+            warnings.warn(
+                f"flat serve() kwargs {sorted(legacy)} are deprecated; "
+                f"pass serve(options=ServeOptions(...), "
+                f"resilience=ResilienceOptions(...))",
+                DeprecationWarning, stacklevel=3)
+        by_group: Dict[str, Dict[str, Any]] = {"options": {},
+                                               "resilience": {}}
+        for k, v in legacy.items():
+            group, field = _LEGACY_SERVE_KW[k]
+            by_group[group][field] = v
+        if by_group["options"]:
+            opt = dataclasses.replace(opt, **by_group["options"])
+        if by_group["resilience"]:
+            res = dataclasses.replace(res, **by_group["resilience"])
+    return opt, res
+
+
+def serve(arch: str, smoke: bool = True, *,
+          seed: int = 0, mesh=None, params=None, cfg=None,
+          options: Optional[ServeOptions] = None,
           faults: Optional[FaultPlan] = None,
-          host_swap_bytes: Optional[int] = None,
-          max_steps_per_request: Optional[int] = None,
-          preempt_retry_limit: int = 3,
-          audit_pages: Union[bool, str] = True,
-          checkpoint_dir: Optional[str] = None,
-          checkpoint_every: int = 0,
-          resume: bool = False,
-          kill_at_step: Optional[int] = None) -> Dict[str, Any]:
-    """``shared_prefix_len``: the generated prompts share their first
-    N tokens (a common system prompt) — the workload the prefix cache
-    exists for.  Outputs stay a function of each request's own full
-    prompt, cache or no cache.
+          resilience: Optional[ResilienceOptions] = None,
+          prefix_index: Optional[SharedPrefixIndex] = None,
+          replica_id: int = 0,
+          **legacy) -> Dict[str, Any]:
+    """Serve ``options.n_requests`` requests through ``batch_slots``
+    decode slots.  The workload shape lives in :class:`ServeOptions`,
+    fault injection in ``faults`` (a :class:`FaultPlan`), and the
+    recovery/watchdog knobs in :class:`ResilienceOptions`; the legacy
+    flat kwargs (``n_requests=...``, ``checkpoint_dir=...``) still work
+    through a deprecation shim.
 
     Fault-tolerance knobs (see the module docstring): ``faults`` is a
     deterministic ``FaultPlan`` keyed on the loop-step counter;
@@ -267,6 +354,14 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     the allocator's invariant audit on (``"light"`` samples the full
     invariant audit every 16th mutation and runs a cheap vectorized
     refcount-sum check otherwise).
+
+    Cross-replica serving: with a :class:`SharedPrefixIndex` passed as
+    ``prefix_index`` (plus ``kv_prefix_cache=True``), this replica
+    publishes its prompt-prefix pages to the index and, on a local trie
+    miss, *migrates* a prefix another replica published — the matched
+    pages are copied into freshly allocated local pages, registered in
+    the local trie, and served under ordinary refcount/CoW semantics.
+    See :func:`serve_replicated` for the N-replica harness.
 
     Overload resilience (``cfg.sata_qos_ladder``): ``load_spike`` /
     ``slow_step`` faults and organic pool pressure (deferrals, stalls)
@@ -286,6 +381,17 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
     checkpoint block, and a fresh process calling with ``resume=True``
     replays from the last save — outputs bitwise equal to an
     uninterrupted run."""
+    opt, res = _fold_serve_legacy(options, resilience, legacy)
+    n_requests, batch_slots = opt.n_requests, opt.batch_slots
+    gen_len, max_len = opt.gen_len, opt.max_len
+    prompt_len, shared_prefix_len = opt.prompt_len, opt.shared_prefix_len
+    host_swap_bytes = res.host_swap_bytes
+    max_steps_per_request = res.max_steps_per_request
+    preempt_retry_limit = res.preempt_retry_limit
+    audit_pages = res.audit_pages
+    checkpoint_dir, checkpoint_every = res.checkpoint_dir, \
+        res.checkpoint_every
+    resume, kill_at_step = res.resume, res.kill_at_step
     cfg = cfg or (SMOKE if smoke else ARCHS)[arch]
     mesh = mesh or make_local_mesh()
     if params is None:
@@ -314,7 +420,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         n_pages = int(pool["k_pages"].shape[1])
         alloc = PageAllocator(n_pages, batch_slots, max_len // page, page,
                               audit=audit_pages)
-        alloc.lazy_cow = bool(getattr(cfg, "kv_lazy_cow", False))
+        alloc.lazy_cow = bool(cfg.kv.lazy_cow)
         cache = dec.set_page_table(cfg, cache, alloc.table)
         # backpressure only helps when at least ONE request's worst-case
         # working set fits: otherwise the livelock handler preempts the
@@ -368,6 +474,16 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         pcache = PrefixCache(alloc)
     cow_copies = 0
     page = alloc.page if alloc is not None else max_len
+    # --- cross-replica prefix index (see SharedPrefixIndex): publishes
+    # ride the local trie register; a local miss consults the index and
+    # migrates a remote replica's pages into the local pool
+    if prefix_index is not None and pcache is None:
+        raise ValueError(
+            "prefix_index needs the local shared-prefix cache on "
+            "(kv_prefix_cache=True, paged layout) — migration lands "
+            "remote pages in the local trie")
+    cross_replica_hits = migrated_pages = migrated_tokens = 0
+    index_publishes = 0
 
     def _push_tables():
         nonlocal cache
@@ -605,7 +721,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
 
     # --- SLO degradation ladder over the per-slot plan knob vectors
     qosctl: Optional[QoSController] = None
-    if getattr(cfg, "sata_qos_ladder", False):
+    if cfg.sata.qos.ladder:
         has_qos_plan = any(
             isinstance(cache.get(n), dict) and "plan" in cache[n]
             and "budget" in cache[n]["plan"] for n in ("kv", "shared_kv"))
@@ -614,17 +730,17 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                 "sata_qos_ladder degrades the SATA decode plan — turn on "
                 "sata_decode routing (the cache carries no qos plan)")
         nkb0 = max_len // blk
-        p0 = getattr(cfg, "sata_decode_blocks", None) or nkb0
+        p0 = cfg.sata.decode.blocks or nkb0
         qosctl = QoSController(
             batch_slots, p0=min(int(p0), nkb0),
             iv0=attn._resolve_replan(cfg)[0],
-            clear_steps=getattr(cfg, "sata_qos_clear_steps", 4))
+            clear_steps=cfg.sata.qos.clear_steps)
 
     # --- cascade token retirement (SpAtten): free cold blocks' pages
     # back to the pool MID-STREAM instead of holding every prefix token
     # until completion.  Lossy by design once a pass fires; "off" keeps
     # the whole stack bitwise identical (no plan fields, no passes).
-    retire_on = getattr(cfg, "sata_retire", "off") == "on"
+    retire_on = cfg.sata.retire.mode == "on"
     if retire_on:
         if alloc is None or _plan_field(cache, "imp") is None:
             raise ValueError(
@@ -632,8 +748,8 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                 "and ranks blocks by the decode plan's importance "
                 "accumulator — it needs kv_cache_layout='paged' AND sata "
                 "decode routing")
-        retire_keep = float(getattr(cfg, "sata_retire_keep", 0.5))
-        retire_mark = float(getattr(cfg, "sata_retire_watermark", 0.75))
+        retire_keep = float(cfg.sata.retire.keep)
+        retire_mark = float(cfg.sata.retire.watermark)
 
     def _retire_pass(force: bool) -> bool:
         """One cascade-retirement sweep: for every active slot past its
@@ -983,10 +1099,24 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             # (match tokens[:-1] — the tail must stay non-empty so
             # the prefill always produces last-token logits)
             m, phys_m = 0, []
+            mig: Optional[Tuple[int, Dict[str, np.ndarray], int]] = None
             if pcache is not None and use_prefill:
                 m, phys_m, _ = pcache.match(prompts[r0, :-1])
+                if prefix_index is not None:
+                    hit = prefix_index.lookup(replica_id,
+                                              prompts[r0, :-1])
+                    # migrate only when another replica's publication
+                    # beats the local trie — re-importing this
+                    # replica's own (evicted) pages is just a re-prefill
+                    if hit is not None and hit[0] > m and hit[2] > 0:
+                        mig = hit
             if alloc is not None:
                 def _need():
+                    if mig is not None:
+                        # migrated pages are fresh local COPIES — the
+                        # claim pays for every prompt page (the win is
+                        # prefill compute, not pool pages)
+                        return alloc.pages_for(max(prompt_len, 1))
                     return max(alloc.pages_for(max(prompt_len, 1))
                                - len(phys_m) + (1 if m % page else 0),
                                0)
@@ -997,6 +1127,12 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                         # re-walk before trusting the mapping
                         m, phys_m, _ = pcache.match(
                             prompts[r0, :-1])
+                    if mig is not None and \
+                            not alloc.can_admit(_need() + reserve):
+                        # a migration is optional work — under pool
+                        # pressure fall back to the plain (cheaper)
+                        # admission before deferring
+                        mig = None
                     if not alloc.can_admit(_need() + reserve):
                         deferred_claims += 1  # backpressure: wait
                         bo = min(max(defer_backoff.get(r0, 0) * 2, 1), 8)
@@ -1026,8 +1162,31 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                     # own registered pages guarantee the re-claim
                     # hits, inflating saved past total)
                     noted.add(r)
-                    pcache.note(m)
-                if m:
+                    pcache.note(mig[0] if mig is not None else m)
+                if mig is not None:
+                    # cross-replica page migration: copy the remote
+                    # replica's published prefix pages into freshly
+                    # allocated LOCAL pages, register them in the local
+                    # trie, and continue exactly like a local full-page
+                    # hit (the slot owns the pages; the trie's register
+                    # adds its retention ref, so CoW semantics from
+                    # here on are the ordinary owner-after-register
+                    # case)
+                    rows, payload, _n_rem = mig
+                    npg = rows // page
+                    ok = alloc.ensure(i, rows - 1)
+                    assert ok, "admission control reserved these pages"
+                    phys_mig = [int(p_) for p_ in alloc.table[i, :npg]]
+                    cache = dec.scatter_phys_pages(cache, phys_mig,
+                                                   payload)
+                    pcache.register(prompts[r, :rows], alloc.table[i])
+                    _push_tables()
+                    cross_replica_hits += 1
+                    migrated_pages += npg
+                    migrated_tokens += rows
+                    prefix_index.remote_hits += 1
+                    m, phys_m = rows, []   # slot already maps the pages
+                if m and phys_m:
                     alloc.map_shared(i, phys_m)
                     if m % page:
                         # the tail's first rows land inside the
@@ -1062,6 +1221,21 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                     # append below will copy-on-write it)
                     pcache.register(prompts[r], alloc.table[i])
                     _push_tables()
+                    if prefix_index is not None:
+                        # publish the MATCHABLE full pages (matchers
+                        # walk tokens[:-1]); full prompt pages are
+                        # append-frozen under trie retention, so the
+                        # host copy taken here stays valid forever
+                        full = ((prompt_len - 1) // page) * page
+                        if full:
+                            npg_f = full // page
+                            payload_f = dec.gather_phys_pages(
+                                cache,
+                                [int(p_) for p_
+                                 in alloc.table[i, :npg_f]])
+                            index_publishes += prefix_index.publish(
+                                replica_id, prompts[r, :full], page,
+                                payload_f)
                 pos_h[i] = prompt_len
                 # the prefill's last-position argmax IS the first
                 # generated token — record it, don't just feed it
@@ -1140,7 +1314,7 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         if counts is not None and live:
             # count only slots holding live requests — idle slots still
             # run through the lockstep batch but serve nobody
-            pb = getattr(cfg, "sata_decode_blocks", None)
+            pb = cfg.sata.decode.blocks
             qn = sk = None
             if qosctl is not None:
                 # mixed rungs: price each live slot at ITS degraded
@@ -1162,12 +1336,10 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
                                     nkb=max_len // blk,
                                     dtype_bytes=jnp.dtype(
                                         _dtype(cfg)).itemsize,
-                                    summary=getattr(cfg, "sata_summary",
-                                                    "fp32"),
-                                    replan_mode=getattr(
-                                        cfg, "sata_replan_mode", "exact"),
-                                    sketch_factor=getattr(
-                                        cfg, "sata_sketch_factor", 4),
+                                    summary=cfg.sata.decode.summary,
+                                    replan_mode=cfg.sata.decode.replan_mode,
+                                    sketch_factor=(
+                                        cfg.sata.decode.sketch_factor),
                                     plan_blocks=pb, quant=qn, sketch=sk,
                                     live_blocks=lv)
             fetch_tiles_plan += st["kv_fetch_tiles_plan"]
@@ -1272,8 +1444,8 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
             # true_reduction is per-backend honest because the summary
             # bytes above are sized by the configured backend
             "plan_fetch_bytes": plan_bytes,
-            "summary_backend": getattr(cfg, "sata_summary", "fp32"),
-            "replan_mode": getattr(cfg, "sata_replan_mode", "exact"),
+            "summary_backend": cfg.sata.decode.summary,
+            "replan_mode": cfg.sata.decode.replan_mode,
             "step_bytes_plan_route": kernel_bytes_plan + plan_bytes,
             "step_bytes_dense_route": kernel_bytes_dense,
             "true_reduction": kernel_bytes_dense
@@ -1326,7 +1498,66 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 8,
         pstats["cow_copies"] = cow_copies
         pstats["shared_pages_peak"] = alloc.shared_pages_peak
         out["prefix_cache"] = pstats
+    if prefix_index is not None:
+        out["replica"] = {
+            "replica_id": int(replica_id),
+            "cross_replica_hits": cross_replica_hits,
+            "cross_replica_hit_rate": cross_replica_hits
+            / max(len(latency), 1),
+            "migrated_pages": migrated_pages,
+            "migrated_tokens": migrated_tokens,
+            "index_pages_published": index_publishes,
+            "index": prefix_index.stats(),
+        }
     return out
+
+
+def serve_replicated(arch: str, *, n_replicas: int = 2,
+                     smoke: bool = True, seed: int = 0, cfg=None,
+                     options: Optional[ServeOptions] = None,
+                     resilience: Optional[ResilienceOptions] = None
+                     ) -> Dict[str, Any]:
+    """N-replica serve harness around one :class:`SharedPrefixIndex`.
+
+    Each replica owns its own page pool, trie, and decode state
+    (replicas run sequentially in-process — the point is the index
+    protocol, not wall-clock overlap) and serves the same seeded
+    workload: the situation where N frontends all carry one popular
+    system prompt.  Replica 0 prefills its prefixes cold and publishes
+    them; later replicas migrate those pages instead of re-running the
+    shared-prefix prefill — the report aggregates the cross-replica hit
+    rate and the prefill tokens the migrations saved.  Every replica's
+    outputs are bitwise equal across replicas (same prompts, same
+    math — migration only moves pages, never changes what they hold).
+    """
+    index = SharedPrefixIndex()
+    opt = options or ServeOptions()
+    reports = []
+    for rid in range(int(n_replicas)):
+        reports.append(serve(arch, smoke=smoke, seed=seed, cfg=cfg,
+                             options=opt, resilience=resilience,
+                             prefix_index=index, replica_id=rid))
+    hits = sum(r["replica"]["cross_replica_hits"] for r in reports)
+    requests = sum(len(r["outputs"]) for r in reports)
+    for a, b in zip(reports, reports[1:]):
+        assert a["outputs"] == b["outputs"], \
+            "replicas serving the same workload must agree bitwise"
+    return {
+        "replicas": reports,
+        "n_replicas": int(n_replicas),
+        "requests": requests,
+        "cross_replica_hits": hits,
+        "cross_replica_hit_rate": hits / max(requests, 1),
+        "migrated_pages": sum(r["replica"]["migrated_pages"]
+                              for r in reports),
+        "migrated_tokens": sum(r["replica"]["migrated_tokens"]
+                               for r in reports),
+        "prefill_tokens_saved": sum(
+            r.get("prefix_cache", {}).get("prefill_tokens_saved", 0)
+            for r in reports),
+        "outputs_equal": True,
+        "index": index.stats(),
+    }
 
 
 def main():
@@ -1349,12 +1580,18 @@ def main():
     ap.add_argument("--max-steps-per-request", type=int, default=None,
                     help="deadline watchdog: retire a slot as timed_out "
                          "after N held steps")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="run N serve replicas around one shared prefix "
+                         "index (implies --paged --prefix-cache)")
     args = ap.parse_args()
     cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
+    if args.replicas:
+        args.paged = args.prefix_cache = True
     if args.paged or args.prefix_cache or args.faults_seed is not None:
-        import dataclasses
-        cfg = dataclasses.replace(cfg, kv_cache_layout="paged",
-                                  kv_prefix_cache=args.prefix_cache)
+        from repro.models.config import KVCacheConfig
+        cfg = dataclasses.replace(
+            cfg, kv=KVCacheConfig(layout="paged",
+                                  prefix_cache=args.prefix_cache))
     faults = None
     if args.faults_seed is not None:
         faults = FaultPlan.seeded(args.faults_seed,
@@ -1362,11 +1599,26 @@ def main():
                                   slots=args.slots)
         print(f"[serve] fault schedule (seed {args.faults_seed}):")
         print(faults.describe())
-    out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
-                batch_slots=args.slots, gen_len=args.gen_len,
-                prompt_len=args.prompt_len, cfg=cfg,
-                shared_prefix_len=args.shared_prefix_len, faults=faults,
-                max_steps_per_request=args.max_steps_per_request)
+    opts = ServeOptions(n_requests=args.requests, batch_slots=args.slots,
+                        gen_len=args.gen_len, prompt_len=args.prompt_len,
+                        shared_prefix_len=args.shared_prefix_len)
+    res = ResilienceOptions(
+        max_steps_per_request=args.max_steps_per_request)
+    if args.replicas:
+        rep = serve_replicated(args.arch, n_replicas=args.replicas,
+                               smoke=args.smoke, cfg=cfg, options=opts,
+                               resilience=res)
+        print(f"[serve] {rep['n_replicas']} replicas, "
+              f"{rep['requests']} requests: cross-replica hit rate "
+              f"{rep['cross_replica_hit_rate']:.2f} "
+              f"({rep['cross_replica_hits']} migrations, "
+              f"{rep['migrated_pages']} pages / "
+              f"{rep['migrated_tokens']} tokens migrated), prefill "
+              f"tokens saved {rep['prefill_tokens_saved']}, "
+              f"outputs_equal={rep['outputs_equal']}")
+        return
+    out = serve(args.arch, smoke=args.smoke, cfg=cfg, options=opts,
+                faults=faults, resilience=res)
     print(f"[serve] generated {out['tokens_generated']} tokens over "
           f"{len(out['outputs'])} requests "
           f"({out['tok_per_s']:.1f} tok/s on CPU, "

@@ -324,8 +324,8 @@ def _chunked_selection_on(cfg, s: int) -> bool:
     chunked route only exists on the compact grid, so a
     ``sata_schedule="dense"`` baseline keeps dense selection under
     "auto" and is rejected under a forced "chunked"."""
-    mode = getattr(cfg, "sata_selection", "auto")
-    schedule = getattr(cfg, "sata_schedule", "compact")
+    mode = cfg.sata.kernel.selection
+    schedule = cfg.sata.kernel.schedule
     if mode == "chunked":
         if schedule != "compact":
             raise ValueError(
@@ -373,8 +373,8 @@ def _attend_sata_kernel(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
     kf = kq.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
     vf = vq.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
-    blk = cfg.sata_block
-    mkb = getattr(cfg, "sata_max_kv_blocks", None)
+    blk = cfg.sata.kernel.block
+    mkb = cfg.sata.kernel.max_kv_blocks
     if _chunked_selection_on(cfg, s):
         from repro.core.blockmap import resolve_sel_chunk
         chunk = resolve_sel_chunk(min(cfg.q_chunk, s), s, blk)
@@ -385,7 +385,7 @@ def _attend_sata_kernel(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
                                   q_block=blk, k_block=blk)
         out = _sata_kernel_chunked_call(
             qf, kf, vf, thr, bm, qp, kp, blk, causal, chunk, mkb,
-            getattr(cfg, "sata_bound_fallback", "dense"))
+            cfg.sata.kernel.bound_fallback)
     else:
         scores = jnp.einsum("bqd,bkd->bqk", qf, kf,
                             preferred_element_type=jnp.float32)
@@ -398,7 +398,7 @@ def _attend_sata_kernel(q: jax.Array, k: jax.Array, v: jax.Array, cfg,
                                   impl=getattr(cfg, "topk_impl", "auto"))
         sel = sel & admissible[None]
         out = _sata_kernel_call(qf, kf, vf, sel, blk,
-                                getattr(cfg, "sata_schedule", "compact"),
+                                cfg.sata.kernel.schedule,
                                 mkb)
     return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
 
@@ -411,12 +411,12 @@ def _sata_kernel_ok(cfg, s: int, cross: bool) -> bool:
     a launcher-installed mesh) also fall back: ``pallas_call`` has no
     SPMD partitioning rule, so routing it would force-replicate the
     (B·H, S, S) score tensor onto every device."""
-    if not getattr(cfg, "use_sata_kernel", False) or cross:
+    if not cfg.sata.kernel.use or cross:
         return False
     if cfg.attention_variant != "topk" or dctx.cp_enabled() \
             or dctx.mesh_installed():
         return False
-    blk = getattr(cfg, "sata_block", 128)
+    blk = cfg.sata.kernel.block
     if s % blk != 0:
         return False
     from repro.kernels.ops import default_interpret
@@ -493,20 +493,20 @@ def attention_apply(params: Params, cfg, x: jax.Array,
 def decode_block_size(cfg, max_len: int) -> int:
     """Decode k-block edge: ``sata_decode_block`` (default
     ``sata_block``), clamped so at least one block tiles the cache."""
-    blk = getattr(cfg, "sata_decode_block", None) or \
-        getattr(cfg, "sata_block", 128)
+    blk = cfg.sata.decode.block or \
+        cfg.sata.kernel.block
     return min(blk, max_len)
 
 
 def paged_kv_on(cfg) -> bool:
     """Serve from the paged pool layout (``core/paging.py``)?"""
-    return getattr(cfg, "kv_cache_layout", "contiguous") == "paged"
+    return cfg.kv.layout == "paged"
 
 
 def prefix_cache_on(cfg) -> bool:
     """Shared-prefix page cache (``core.paging.PrefixCache``)?  Only
     meaningful on the paged layout — sharing IS page-table aliasing."""
-    if not getattr(cfg, "kv_prefix_cache", False):
+    if not cfg.kv.prefix_cache:
         return False
     if not paged_kv_on(cfg):
         raise ValueError(
@@ -519,7 +519,7 @@ def prefix_cache_on(cfg) -> bool:
 def kv_page_size(cfg, max_len: int) -> int:
     """Tokens per page: ``kv_page_size`` or the decode k-block edge —
     the equality SATA decode requires (plan blocks ARE pages)."""
-    page = getattr(cfg, "kv_page_size", 0) or decode_block_size(cfg, max_len)
+    page = cfg.kv.page_size or decode_block_size(cfg, max_len)
     return min(int(page), max_len)
 
 
@@ -530,7 +530,7 @@ def sata_decode_on(cfg, max_len: int) -> bool:
     per-row bisect thresholds, so it turns on exactly when
     ``topk_threshold_mask`` would bisect a ``max_len`` row anyway.
     Sharded runs fall back (``pallas_call`` has no SPMD rule)."""
-    mode = getattr(cfg, "sata_decode", "auto")
+    mode = cfg.sata.decode.mode
     if mode == "off" or cfg.attention_variant != "topk":
         return False
     if dctx.cp_enabled() or dctx.mesh_installed():
@@ -568,7 +568,7 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
             raise ValueError(f"max_len ({max_len}) must tile by the page "
                              f"size ({page})")
         max_pages = max_len // page
-        n_pages = getattr(cfg, "kv_pool_pages", 0) or batch * max_pages + 1
+        n_pages = cfg.kv.pool_pages or batch * max_pages + 1
         cache = {
             "k_pages": jnp.zeros((n_pages, page, cfg.n_kv_heads, hd), dtype),
             "v_pages": jnp.zeros((n_pages, page, cfg.n_kv_heads, hd), dtype),
@@ -590,7 +590,7 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
                 from repro.core.paging import init_page_summaries
                 cache.update(init_page_summaries(
                     n_pages, cfg.n_kv_heads, hd,
-                    getattr(cfg, "sata_summary", "fp32")))
+                    cfg.sata.decode.summary))
         if sata:
             blk = decode_block_size(cfg, max_len)
             if blk != page:
@@ -604,8 +604,8 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
                  "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype)}
     if sata:
         from repro.core.decode_plan import init_decode_plan
-        qos = bool(getattr(cfg, "sata_qos_ladder", False))
-        if qos and getattr(cfg, "sata_decode_replan", 1) == "auto":
+        qos = bool(cfg.sata.qos.ladder)
+        if qos and cfg.sata.decode.replan == "auto":
             raise ValueError(
                 "sata_qos_ladder drives the re-plan beat through the "
                 "per-slot interval vector — set an integer "
@@ -613,10 +613,10 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
         cache["plan"] = init_decode_plan(
             batch, cfg.n_kv_heads, max_len, hd,
             decode_block_size(cfg, max_len),
-            getattr(cfg, "sata_decode_blocks", None),
-            summary=getattr(cfg, "sata_summary", "fp32"),
+            cfg.sata.decode.blocks,
+            summary=cfg.sata.decode.summary,
             qos=qos,
-            retire=getattr(cfg, "sata_retire", "off") == "on",
+            retire=cfg.sata.retire.mode == "on",
             # the ladder's full-quality rung starts at the configured
             # beat; the per-slot interval vector owns it from there
             replan_interval=_resolve_replan(cfg)[0] if qos else 1)
@@ -644,9 +644,9 @@ def _resolve_replan(cfg) -> Tuple[int, Optional[float]]:
     keeps the fixed-interval trigger (budget None, bit-compatible);
     ``"auto"`` switches to the churn-adaptive trigger with
     ``sata_decode_churn`` as the accumulated-churn budget."""
-    rp = getattr(cfg, "sata_decode_replan", 1)
+    rp = cfg.sata.decode.replan
     if rp == "auto":
-        return 1, float(getattr(cfg, "sata_decode_churn", 0.25))
+        return 1, float(cfg.sata.decode.churn)
     return int(rp), None
 
 
@@ -681,9 +681,9 @@ def _attend_sata_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         plan, qg, k, pos, topk_k=cfg.topk_k, k_block=k_block,
         replan_interval=interval, churn_budget=churn_budget,
         page_table=page_table,
-        replan_mode=getattr(cfg, "sata_replan_mode", "exact"),
-        sketch_factor=getattr(cfg, "sata_sketch_factor", 4),
-        retire_decay=getattr(cfg, "sata_retire_decay", 0.9))
+        replan_mode=cfg.sata.decode.replan_mode,
+        sketch_factor=cfg.sata.decode.sketch_factor,
+        retire_decay=cfg.sata.retire.decay)
     out = sata_decode_attention(qg, k, v, plan["kv_indices"],
                                 plan["kv_counts"], thr, pos,
                                 k_block=k_block, page_table=page_table)

@@ -1,8 +1,290 @@
-"""Model configuration — one frozen dataclass covers all assigned archs."""
+"""Model configuration — one frozen dataclass covers all assigned archs.
+
+The ~26 SATA / KV-cache knobs live in **nested frozen dataclasses**
+(``cfg.sata.kernel.block``, ``cfg.kv.page_size``, ...), grouped by the
+subsystem that reads them:
+
+    cfg.sata.kernel   SataKernelConfig   prefill kernel + selection
+    cfg.sata.decode   SataDecodeConfig   incremental decode plan
+    cfg.sata.qos      QosConfig          degradation ladder
+    cfg.sata.retire   RetireConfig       cascade token retirement
+    cfg.kv            KVCacheConfig      cache layout / page pool
+
+The legacy flat spellings (``cfg.sata_block``, ``kv_page_size=...``)
+keep working through a deprecation shim: ``ModelConfig(...)`` (and
+therefore ``dataclasses.replace``) accepts the flat kwargs and folds
+them into the nested groups, and flat attribute reads resolve through
+properties — each flat name warns **once per process** on first use.
+New code should use the nested paths; see the migration table in
+README.md.
+"""
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class SataKernelConfig:
+    """Prefill-side SATA: chunked selection + compacted-grid kernel."""
+    s_f: int = 128                       # SATA tile size (kernel plan)
+    use: bool = False                    # route topk attn through the
+                                         # compacted-grid Pallas kernel
+    block: int = 128                     # kernel q/k tile edge
+    schedule: str = "compact"            # compact | dense kernel grid
+    selection: str = "auto"              # auto | chunked | dense —
+                                         # chunked streams q_chunk×S
+                                         # score tiles (no (BH,S,S)
+                                         # buffer); auto follows the
+                                         # topk_impl bisect decision
+    max_kv_blocks: Optional[int] = None  # static per-row occupancy
+                                         # bound (occupancy_bound on
+                                         # calibration plans) — jitted
+                                         # serving gets a compact grid
+                                         # without a concrete mask
+    bound_fallback: str = "dense"        # dense | truncate — when a
+                                         # row's occupancy exceeds
+                                         # max_kv_blocks, "dense" reruns
+                                         # the batch on the full-width
+                                         # (dense-cost) grid (loss-free
+                                         # escape hatch); "truncate"
+                                         # keeps the first `bound` blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class SataDecodeConfig:
+    """Decode-side SATA: the incremental KV-block plan + gather kernel."""
+    mode: str = "auto"                   # auto | on | off — route
+                                         # single-token decode through
+                                         # the incremental KV-block
+                                         # plan + gather kernel; auto
+                                         # follows the bisect decision
+                                         # at the cache length
+    block: Optional[int] = None          # decode k-block edge
+                                         # (default: sata.kernel.block)
+    blocks: Optional[int] = None         # plan width P (selected
+                                         # k-blocks kept per slot/head);
+                                         # None = full nkb (exact —
+                                         # nothing dropped)
+    replan: Union[int, str] = 1          # full re-plan every N steps
+                                         # (1 = every step = exact
+                                         # top-k; >1 uses the block-
+                                         # summary incremental plan in
+                                         # between; "auto" derives the
+                                         # trigger from observed plan
+                                         # churn — see ``churn``)
+    churn: float = 0.25                  # "auto" re-plan budget: full
+                                         # re-plan once accumulated
+                                         # blocks entering/retiring per
+                                         # (slot, head) reaches this
+                                         # fraction of the plan width P
+    summary: str = "fp32"                # fp32 | int8 — decode
+                                         # block-summary backend; int8
+                                         # stores conservative quantized
+                                         # bounds (+ per-block scale/
+                                         # zero), ~4× less plan-side
+                                         # summary traffic; summaries
+                                         # only RANK — the exact token
+                                         # threshold is unaffected
+    replan_mode: str = "exact"           # exact | sketch — periodic
+                                         # re-plan flavor; sketch ranks
+                                         # super-block sketches first
+                                         # and runs exact bisection only
+                                         # on surviving candidates
+                                         # (sub-linear re-plan traffic,
+                                         # approximate)
+    sketch_factor: int = 4               # blocks per super-block sketch
+                                         # (largest divisor of nkb used)
+
+
+@dataclasses.dataclass(frozen=True)
+class QosConfig:
+    """Per-slot degradation ladder (overload regime)."""
+    ladder: bool = False                 # under pool / deadline
+                                         # pressure the serve loop steps
+                                         # slots down quality rungs
+                                         # (budget → interval → int8 →
+                                         # sketch) instead of
+                                         # preempting; per-slot knob
+                                         # vectors live in the plan
+                                         # state so rungs apply without
+                                         # re-tracing
+    clear_steps: int = 4                 # hysteresis: consecutive
+                                         # pressure-free steps before
+                                         # stepping one rung back up
+
+
+@dataclasses.dataclass(frozen=True)
+class RetireConfig:
+    """Cascade token retirement (SpAtten) → mid-stream page reclaim."""
+    mode: str = "off"                    # off | on — accumulated block
+                                         # importance rides the plan's
+                                         # score pass; cold blocks are
+                                         # retired, their pages freed
+                                         # back to the pool mid-stream.
+                                         # LOSSY by design once a pass
+                                         # fires; "off" is bitwise
+                                         # identical to the
+                                         # pre-retirement stack
+    decay: float = 0.9                   # exponential decay of the
+                                         # accumulated per-block
+                                         # importance per step
+    watermark: float = 0.75              # per-slot live-token watermark
+                                         # (fraction of max_len) that
+                                         # triggers a retirement pass;
+                                         # pool pressure (a deferred
+                                         # claim) also triggers
+    keep: float = 0.5                    # retained-token budget: a pass
+                                         # keeps this fraction of the
+                                         # slot's live blocks (the
+                                         # hottest by importance; the
+                                         # current append block and
+                                         # trie-/swap-pinned pages are
+                                         # never retired)
+
+
+@dataclasses.dataclass(frozen=True)
+class SataConfig:
+    """All SATA knobs, grouped by the subsystem that reads them."""
+    kernel: SataKernelConfig = SataKernelConfig()
+    decode: SataDecodeConfig = SataDecodeConfig()
+    qos: QosConfig = QosConfig()
+    retire: RetireConfig = RetireConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheConfig:
+    """Serving KV-cache layout."""
+    layout: str = "contiguous"           # contiguous | paged — paged
+                                         # serves from a global page
+                                         # pool + per-slot page table
+                                         # (pages allocated on append,
+                                         # freed on reset_slot), so
+                                         # short prefixes stop reserving
+                                         # max_len HBM
+    page_size: int = 0                   # tokens per page (0 = the
+                                         # decode k-block edge; SATA
+                                         # decode requires equality —
+                                         # plan blocks ARE pages)
+    pool_pages: int = 0                  # physical pages in the pool
+                                         # (0 = slots·max_pages + 1:
+                                         # contiguous-equivalent
+                                         # capacity + overflow page)
+    prefix_cache: bool = False           # shared-prefix page cache
+                                         # (paged layout only): a
+                                         # prompt-prefix trie maps
+                                         # cached prompt pages into new
+                                         # slots (refcounted, copy-on-
+                                         # write on append; prefill runs
+                                         # only on the unmatched tail)
+    lazy_cow: bool = False               # lazy copy-on-write: a
+                                         # partial-page prefix match
+                                         # skips the eager CoW copy when
+                                         # appended rows land past the
+                                         # shared rows — the sole
+                                         # appender holds a write lease
+                                         # (revoked the moment another
+                                         # slot maps the page) instead
+                                         # of copying
+
+    def __post_init__(self):
+        if self.layout not in ("contiguous", "paged"):
+            raise ValueError(f"kv.layout must be 'contiguous' or 'paged', "
+                             f"got {self.layout!r}")
+        if self.page_size < 0 or self.pool_pages < 0:
+            raise ValueError("kv.page_size / kv.pool_pages must be >= 0")
+
+    def check_decode_block(self, decode_block: Optional[int]) -> None:
+        """Construction-time form of the paged-route equality SATA
+        decode requires: when both ``page_size`` and the decode k-block
+        edge are set explicitly, they must match (plan blocks ARE
+        pages, so the decode kernel's index maps can dereference the
+        page table).  Called from ``ModelConfig.__post_init__`` —
+        page-size mismatches fail at config construction, not at the
+        first ``init_kv_cache`` shape assert."""
+        if (self.layout == "paged" and self.page_size
+                and decode_block and decode_block != self.page_size):
+            raise ValueError(
+                f"paged SATA decode needs kv_page_size == the decode "
+                f"k-block edge, got kv.page_size={self.page_size} vs "
+                f"sata.decode.block={decode_block}: the plan's logical "
+                f"blocks must BE pages for the decode kernel's index "
+                f"maps to dereference the page table (set them equal, "
+                f"or leave kv_page_size=0 to inherit the block edge)")
+
+
+# flat legacy spelling -> (top-level field, *nested path)
+_FLAT_MAP = {
+    "sata_s_f": ("sata", "kernel", "s_f"),
+    "use_sata_kernel": ("sata", "kernel", "use"),
+    "sata_block": ("sata", "kernel", "block"),
+    "sata_schedule": ("sata", "kernel", "schedule"),
+    "sata_selection": ("sata", "kernel", "selection"),
+    "sata_max_kv_blocks": ("sata", "kernel", "max_kv_blocks"),
+    "sata_bound_fallback": ("sata", "kernel", "bound_fallback"),
+    "sata_decode": ("sata", "decode", "mode"),
+    "sata_decode_block": ("sata", "decode", "block"),
+    "sata_decode_blocks": ("sata", "decode", "blocks"),
+    "sata_decode_replan": ("sata", "decode", "replan"),
+    "sata_decode_churn": ("sata", "decode", "churn"),
+    "sata_summary": ("sata", "decode", "summary"),
+    "sata_replan_mode": ("sata", "decode", "replan_mode"),
+    "sata_sketch_factor": ("sata", "decode", "sketch_factor"),
+    "sata_qos_ladder": ("sata", "qos", "ladder"),
+    "sata_qos_clear_steps": ("sata", "qos", "clear_steps"),
+    "sata_retire": ("sata", "retire", "mode"),
+    "sata_retire_decay": ("sata", "retire", "decay"),
+    "sata_retire_watermark": ("sata", "retire", "watermark"),
+    "sata_retire_keep": ("sata", "retire", "keep"),
+    "kv_cache_layout": ("kv", "layout"),
+    "kv_page_size": ("kv", "page_size"),
+    "kv_pool_pages": ("kv", "pool_pages"),
+    "kv_prefix_cache": ("kv", "prefix_cache"),
+    "kv_lazy_cow": ("kv", "lazy_cow"),
+}
+
+# flat names already warned about (one DeprecationWarning per flat name
+# per process — construction and attribute reads share the registry)
+_warned_flat: set = set()
+
+
+def _warn_flat(name: str, how: str) -> None:
+    if name in _warned_flat:
+        return
+    _warned_flat.add(name)
+    path = ".".join(_FLAT_MAP[name])
+    warnings.warn(
+        f"flat config knob '{name}' ({how}) is deprecated; use the "
+        f"nested 'cfg.{path}' (construction accepts "
+        f"'{path.split('.')[0]}=...' groups)",
+        DeprecationWarning, stacklevel=3)
+
+
+def _fold_flat(kw: dict) -> dict:
+    """Fold legacy flat kwargs in ``kw`` into the nested ``sata`` /
+    ``kv`` groups (explicit flat values win over group values — that is
+    what ``dataclasses.replace(cfg, sata_decode="on")`` means)."""
+    flat = {k: kw.pop(k) for k in list(kw) if k in _FLAT_MAP}
+    if not flat:
+        return kw
+    for name in flat:
+        _warn_flat(name, "constructor kwarg")
+    groups = {"sata": kw.get("sata", SataConfig()),
+              "kv": kw.get("kv", KVCacheConfig())}
+    for name, val in flat.items():
+        path = _FLAT_MAP[name]
+        top, inner = path[0], path[1:]
+        node = groups[top]
+        if len(inner) == 2:  # sata.<group>.<field>
+            sub = getattr(node, inner[0])
+            sub = dataclasses.replace(sub, **{inner[1]: val})
+            node = dataclasses.replace(node, **{inner[0]: sub})
+        else:                # kv.<field>
+            node = dataclasses.replace(node, **{inner[0]: val})
+        groups[top] = node
+    kw.update(groups)
+    return kw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -17,159 +299,16 @@ class ModelConfig:
     vocab_size: int
     head_dim: Optional[int] = None            # default d_model // n_heads
 
-    # --- attention / SATA ---
-    attention_variant: str = "topk"           # "dense" | "topk" (SATA workload)
+    # --- attention workload ---
+    attention_variant: str = "topk"           # "dense" | "topk" (SATA)
     topk_k: int = 64                          # selected keys per query
     topk_impl: str = "auto"                   # sort | bisect | auto
     topk_blocks: int = 0                      # >0: block-topk granularity
-    sata_s_f: int = 128                       # SATA tile size (kernel plan)
-    use_sata_kernel: bool = False             # route topk attn through the
-                                              # compacted-grid Pallas kernel
-    sata_block: int = 128                     # kernel q/k tile edge
-    sata_schedule: str = "compact"            # compact | dense kernel grid
-    sata_selection: str = "auto"              # auto | chunked | dense —
-                                              # chunked streams q_chunk×S
-                                              # score tiles (no (BH,S,S)
-                                              # buffer); auto follows the
-                                              # topk_impl bisect decision
-    sata_max_kv_blocks: Optional[int] = None  # static per-row occupancy
-                                              # bound (occupancy_bound on
-                                              # calibration plans) — jitted
-                                              # serving gets a compact grid
-                                              # without a concrete mask
-    sata_bound_fallback: str = "dense"        # dense | truncate — when a
-                                              # row's occupancy exceeds
-                                              # sata_max_kv_blocks, "dense"
-                                              # reruns the batch on the
-                                              # full-width (dense-cost)
-                                              # grid (loss-free escape
-                                              # hatch); "truncate" keeps
-                                              # the first `bound` blocks
-    sata_decode: str = "auto"                 # auto | on | off — route
-                                              # single-token decode through
-                                              # the incremental KV-block
-                                              # plan + gather kernel; auto
-                                              # follows the bisect decision
-                                              # at the cache length
-    sata_decode_block: Optional[int] = None   # decode k-block edge
-                                              # (default: sata_block)
-    sata_decode_blocks: Optional[int] = None  # plan width P (selected
-                                              # k-blocks kept per slot/
-                                              # head); None = full nkb
-                                              # (exact — nothing dropped)
-    sata_decode_replan: Union[int, str] = 1   # full re-plan every N steps
-                                              # (1 = every step = exact
-                                              # top-k; >1 uses the block-
-                                              # summary incremental plan
-                                              # in between; "auto" derives
-                                              # the trigger from observed
-                                              # plan churn — see
-                                              # sata_decode_churn)
-    sata_decode_churn: float = 0.25           # "auto" re-plan budget: full
-                                              # re-plan once accumulated
-                                              # blocks entering/retiring
-                                              # per (slot, head) reaches
-                                              # this fraction of the plan
-                                              # width P
-    sata_summary: str = "fp32"                # fp32 | int8 — decode
-                                              # block-summary backend;
-                                              # int8 stores conservative
-                                              # quantized bounds (+ per-
-                                              # block scale/zero), ~4×
-                                              # less plan-side summary
-                                              # traffic; summaries only
-                                              # RANK — the exact token
-                                              # threshold is unaffected
-    sata_replan_mode: str = "exact"           # exact | sketch — periodic
-                                              # re-plan flavor; sketch
-                                              # ranks super-block
-                                              # sketches first and runs
-                                              # exact bisection only on
-                                              # surviving candidates
-                                              # (sub-linear re-plan
-                                              # traffic, approximate)
-    sata_sketch_factor: int = 4               # blocks per super-block
-                                              # sketch (largest divisor
-                                              # of nkb is used)
-    sata_qos_ladder: bool = False             # per-slot degradation
-                                              # ladder: under pool /
-                                              # deadline pressure the
-                                              # serve loop steps slots
-                                              # down quality rungs
-                                              # (budget → interval →
-                                              # int8 → sketch) instead
-                                              # of preempting; per-slot
-                                              # knob vectors live in the
-                                              # plan state so rungs
-                                              # apply without re-tracing
-    sata_qos_clear_steps: int = 4             # hysteresis: consecutive
-                                              # pressure-free steps
-                                              # before stepping one rung
-                                              # back up
-    sata_retire: str = "off"                  # off | on — cascade token
-                                              # retirement (SpAtten):
-                                              # accumulated block
-                                              # importance rides the
-                                              # plan's score pass; cold
-                                              # blocks are retired, their
-                                              # pages freed back to the
-                                              # pool mid-stream.  LOSSY
-                                              # by design once a pass
-                                              # fires; "off" is bitwise
-                                              # identical to the
-                                              # pre-retirement stack
-    sata_retire_decay: float = 0.9            # exponential decay of the
-                                              # accumulated per-block
-                                              # importance per step
-    sata_retire_watermark: float = 0.75       # per-slot live-token
-                                              # watermark (fraction of
-                                              # max_len) that triggers a
-                                              # retirement pass; pool
-                                              # pressure (a deferred
-                                              # claim) also triggers
-    sata_retire_keep: float = 0.5             # retained-token budget: a
-                                              # pass keeps this fraction
-                                              # of the slot's live blocks
-                                              # (the hottest by
-                                              # importance; the current
-                                              # append block and trie-/
-                                              # swap-pinned pages are
-                                              # never retired)
 
-    # --- serving KV-cache layout ---
-    kv_cache_layout: str = "contiguous"       # contiguous | paged — paged
-                                              # serves from a global page
-                                              # pool + per-slot page table
-                                              # (pages allocated on append,
-                                              # freed on reset_slot), so
-                                              # short prefixes stop
-                                              # reserving max_len HBM
-    kv_page_size: int = 0                     # tokens per page (0 = the
-                                              # decode k-block edge; SATA
-                                              # decode requires equality —
-                                              # plan blocks ARE pages)
-    kv_pool_pages: int = 0                    # physical pages in the pool
-                                              # (0 = slots·max_pages + 1:
-                                              # contiguous-equivalent
-                                              # capacity + overflow page)
-    kv_prefix_cache: bool = False             # shared-prefix page cache
-                                              # (paged layout only): a
-                                              # prompt-prefix trie maps
-                                              # cached prompt pages into
-                                              # new slots (refcounted,
-                                              # copy-on-write on append;
-                                              # prefill runs only on the
-                                              # unmatched tail)
-    kv_lazy_cow: bool = False                 # lazy copy-on-write: a
-                                              # partial-page prefix match
-                                              # skips the eager CoW copy
-                                              # when appended rows land
-                                              # past the shared rows —
-                                              # the sole appender holds a
-                                              # write lease (revoked the
-                                              # moment another slot maps
-                                              # the page) instead of
-                                              # copying
+    # --- SATA + KV-cache knobs (nested; flat spellings shimmed) ---
+    sata: SataConfig = SataConfig()
+    kv: KVCacheConfig = KVCacheConfig()
+
     qk_norm: bool = False
     rope_theta: float = 10000.0
     causal: bool = True
@@ -215,6 +354,13 @@ class ModelConfig:
     scan_layers: bool = True
     micro_steps: int = 1                      # grad-accumulation microbatches
     rwkv_chunk: int = 256                     # time-scan remat chunk
+
+    def __post_init__(self):
+        # the paged-route footgun, caught at construction: an explicit
+        # kv_page_size that disagrees with an explicit decode block
+        # edge can never serve (init_kv_cache keeps the clamped-shape
+        # backstop for the defaulted cases construction can't see)
+        self.kv.check_decode_block(self.sata.decode.block)
 
     @property
     def hd(self) -> int:
@@ -270,3 +416,37 @@ class ModelConfig:
         dense_ffn = self.n_experts * (3 * d * self.d_ff)
         active_ffn = self.experts_per_token * (3 * d * self.d_ff)
         return self.param_count() - self.n_layers * (dense_ffn - active_ffn)
+
+
+# --- legacy flat-kwarg constructor shim -----------------------------------
+# ``dataclasses.replace`` passes unknown change-keys straight through to
+# ``cls(**merged)``, so wrapping __init__ makes BOTH
+# ``ModelConfig(..., sata_block=64)`` and
+# ``dataclasses.replace(cfg, sata_decode="on")`` fold into the nested
+# groups.
+_generated_init = ModelConfig.__init__
+
+
+def _compat_init(self, *args, **kw):
+    _generated_init(self, *args, **_fold_flat(kw))
+
+
+_compat_init.__wrapped__ = _generated_init
+ModelConfig.__init__ = _compat_init
+
+
+def _make_flat_property(flat_name: str, path: Tuple[str, ...]):
+    def _get(self):
+        _warn_flat(flat_name, "attribute read")
+        node = self
+        for p in path:
+            node = getattr(node, p)
+        return node
+    _get.__name__ = flat_name
+    _get.__doc__ = f"Deprecated flat alias for ``cfg.{'.'.join(path)}``."
+    return property(_get)
+
+
+for _name, _path in _FLAT_MAP.items():
+    setattr(ModelConfig, _name, _make_flat_property(_name, _path))
+del _name, _path

@@ -527,8 +527,8 @@ def prefill_prompt(params: Params, cfg: ModelConfig, tokens: jax.Array,
         seed = plan_from_prefill(
             k_pad, qg, jnp.full((b,), m + sp - 1, jnp.int32),
             topk_k=cfg.topk_k, k_block=blk,
-            plan_blocks=getattr(cfg, "sata_decode_blocks", None),
-            summary=getattr(cfg, "sata_summary", "fp32"))
+            plan_blocks=cfg.sata.decode.blocks,
+            summary=cfg.sata.decode.summary)
         return h, (kc, vc, seed)
 
     xs = (params["layers"] if prefix_kv is None else

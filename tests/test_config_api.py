@@ -1,0 +1,194 @@
+"""Structured-config API: flat↔nested equivalence, warn-once
+deprecation shims, construction-time validation, and nested-config
+serialization through the checkpoint meta_blob."""
+import dataclasses
+import pickle
+import warnings
+
+import pytest
+
+import repro.launch.serve as serve_mod
+from repro.models import config as config_mod
+from repro.models.config import (KVCacheConfig, ModelConfig, QosConfig,
+                                 RetireConfig, SataConfig,
+                                 SataDecodeConfig, SataKernelConfig)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_registry():
+    """Each test observes its own first-use warnings."""
+    saved = set(config_mod._warned_flat)
+    config_mod._warned_flat.clear()
+    yield
+    config_mod._warned_flat.clear()
+    config_mod._warned_flat.update(saved)
+
+
+def _cfg(**kw):
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                       n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                       attention_variant="topk", topk_k=8, **kw)
+
+
+# ---------------------------------------------------------------------------
+# flat ↔ nested equivalence
+# ---------------------------------------------------------------------------
+
+def test_flat_kwargs_fold_into_nested_groups():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        flat = _cfg(sata_block=64, sata_decode="on", sata_decode_block=8,
+                    kv_cache_layout="paged", kv_page_size=8,
+                    kv_prefix_cache=True, sata_qos_ladder=True,
+                    sata_retire="on")
+    nested = _cfg(
+        sata=SataConfig(kernel=SataKernelConfig(block=64),
+                        decode=SataDecodeConfig(mode="on", block=8),
+                        qos=QosConfig(ladder=True),
+                        retire=RetireConfig(mode="on")),
+        kv=KVCacheConfig(layout="paged", page_size=8, prefix_cache=True))
+    assert flat == nested
+    assert flat.sata.kernel.block == 64
+    assert flat.kv.page_size == 8
+
+
+def test_flat_properties_read_nested_values():
+    cfg = _cfg(sata=SataConfig(decode=SataDecodeConfig(mode="on",
+                                                       replan=4)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert cfg.sata_decode == "on"
+        assert cfg.sata_decode_replan == 4
+        assert cfg.kv_cache_layout == "contiguous"
+
+
+def test_replace_accepts_flat_and_nested_keys():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        c1 = dataclasses.replace(_cfg(), sata_decode="on", kv_pool_pages=7)
+    c2 = dataclasses.replace(
+        _cfg(),
+        sata=dataclasses.replace(_cfg().sata,
+                                 decode=SataDecodeConfig(mode="on")),
+        kv=KVCacheConfig(pool_pages=7))
+    assert c1 == c2
+
+
+def test_every_flat_name_is_mapped():
+    cfg = _cfg()
+    for flat, path in config_mod._FLAT_MAP.items():
+        node = cfg
+        for part in path:
+            node = getattr(node, part)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            assert getattr(cfg, flat) == node, flat
+
+
+# ---------------------------------------------------------------------------
+# deprecation warnings: exactly once per flat name per process
+# ---------------------------------------------------------------------------
+
+def test_flat_read_warns_exactly_once():
+    cfg = _cfg()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg.sata_block
+        cfg.sata_block
+        cfg.sata_block
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "sata_block" in str(dep[0].message)
+    assert "sata.kernel.block" in str(dep[0].message)
+
+
+def test_flat_constructor_kwarg_warns_once():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        _cfg(sata_decode="on")
+        _cfg(sata_decode="on")
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+
+
+def test_nested_access_never_warns():
+    cfg = _cfg()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg.sata.kernel.block
+        cfg.sata.decode.mode
+        cfg.kv.layout
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation (the page-size/block footgun)
+# ---------------------------------------------------------------------------
+
+def test_paged_page_block_mismatch_raises_at_construction():
+    with pytest.raises(ValueError, match="kv_page_size == the decode"):
+        _cfg(sata=SataConfig(decode=SataDecodeConfig(mode="on", block=4)),
+             kv=KVCacheConfig(layout="paged", page_size=8))
+
+
+def test_paged_matching_page_block_constructs():
+    cfg = _cfg(sata=SataConfig(decode=SataDecodeConfig(mode="on",
+                                                       block=8)),
+               kv=KVCacheConfig(layout="paged", page_size=8))
+    assert cfg.kv.page_size == cfg.sata.decode.block == 8
+
+
+def test_kv_layout_validated():
+    with pytest.raises(ValueError, match="layout"):
+        KVCacheConfig(layout="interleaved")
+
+
+# ---------------------------------------------------------------------------
+# serialization: nested configs through the PR 8 checkpoint meta_blob
+# ---------------------------------------------------------------------------
+
+def test_nested_config_checkpoint_meta_roundtrip(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    cfg = _cfg(sata=SataConfig(kernel=SataKernelConfig(block=64),
+                               decode=SataDecodeConfig(mode="on", block=8,
+                                                       replan=2)),
+               kv=KVCacheConfig(layout="paged", page_size=8,
+                                prefix_cache=True))
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(0, {"x": __import__("numpy").zeros((2,))},
+             meta_blob=pickle.dumps({"cfg": cfg, "step": 0}))
+    meta = pickle.loads(mgr.load_meta(0))
+    assert meta["cfg"] == cfg
+    assert meta["cfg"].sata.decode.replan == 2
+    assert hash(meta["cfg"]) == hash(cfg)
+
+
+def test_pickle_roundtrip_plain():
+    cfg = _cfg(sata=SataConfig(decode=SataDecodeConfig(summary="int8")))
+    assert pickle.loads(pickle.dumps(cfg)) == cfg
+
+
+# ---------------------------------------------------------------------------
+# serve() signature shim
+# ---------------------------------------------------------------------------
+
+def test_serve_legacy_kwargs_fold():
+    opt, res = serve_mod._fold_serve_legacy(
+        None, None, {"n_requests": 3, "gen_len": 5,
+                     "audit_pages": False})
+    assert opt.n_requests == 3 and opt.gen_len == 5
+    assert res.audit_pages is False
+
+
+def test_serve_legacy_overrides_options_base():
+    base = serve_mod.ServeOptions(n_requests=9, batch_slots=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        opt, _ = serve_mod._fold_serve_legacy(base, None,
+                                              {"n_requests": 3})
+    assert opt.n_requests == 3 and opt.batch_slots == 2
+
+
+def test_serve_unknown_kwarg_raises():
+    with pytest.raises(TypeError, match="bogus"):
+        serve_mod._fold_serve_legacy(None, None, {"bogus": 1})

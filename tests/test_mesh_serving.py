@@ -1,0 +1,176 @@
+"""Mesh-sharded serving: shard_map parity for sequence-parallel
+selection and tensor-parallel decode, plus the cross-replica prefix
+index.
+
+The shard_map tests need >= 2 devices — plain CPU tier-1 sees one and
+skips; the CI ``mesh`` job forces a simulated mesh with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import mesh as M
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=N)")
+
+BH, S, SK, D = 4, 64, 64, 16
+B, KV, G, SMAX, KB = 2, 8, 2, 64, 8
+
+
+def _qkv(seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((BH, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH, SK, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH, SK, D)), jnp.float32)
+    return q, k, v
+
+
+@multi_device
+def test_sequence_sharded_selection_parity():
+    q, k, v = _qkv()
+    ref, rstats = M.sequence_local_attention(q, k, v, k_sel=8,
+                                             q_block=8, k_block=8)
+    mesh = M.make_shard_mesh(2)
+    out, stats = M.sequence_sharded_attention(mesh, q, k, v, k_sel=8,
+                                              q_block=8, k_block=8)
+    # bitwise: thresholds and occupancy are row-local, the epilogue is
+    # shared, and the tile buffers have identical padded layout
+    assert (stats["thresholds"] == rstats["thresholds"]).all()
+    assert (stats["block_map"] == rstats["block_map"]).all()
+    assert float(jnp.abs(out - ref).max()) == 0.0
+
+
+@multi_device
+def test_sequence_sharded_fetch_is_plan_proportional():
+    q, k, v = _qkv(1)
+    _, rstats = M.sequence_local_attention(q, k, v, k_sel=8,
+                                           q_block=8, k_block=8)
+    mesh = M.make_shard_mesh(2)
+    _, stats = M.sequence_sharded_attention(mesh, q, k, v, k_sel=8,
+                                            q_block=8, k_block=8)
+    per_shard = np.asarray(stats["fetched_tiles_per_shard"])
+    # the shards' compact fetches partition the single-device plan
+    assert per_shard.sum() == int(rstats["fetched_tiles"])
+    assert (per_shard > 0).all()
+
+
+def _decode_inputs(seed=2):
+    rng = np.random.default_rng(seed)
+    pos0 = 32
+    kc = jnp.asarray(rng.standard_normal((B, SMAX, KV, D)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, SMAX, KV, D)), jnp.float32)
+    kc = kc.at[:, pos0 + 1:].set(0.0)
+    vc = vc.at[:, pos0 + 1:].set(0.0)
+    qg = jnp.asarray(rng.standard_normal((B, KV, G, D)), jnp.float32)
+    return qg, kc, vc, kc[:, pos0:pos0 + 1], jnp.full((B,), pos0,
+                                                      jnp.int32)
+
+
+def _reference_step(qg, kc, vc, kn, pos, plan):
+    from repro.core.decode_plan import (decode_plan_update,
+                                        update_block_summaries)
+    from repro.kernels.ops import sata_decode_attention
+    plan = update_block_summaries(plan, kn, pos, k_block=KB)
+    plan, thr = decode_plan_update(plan, qg, kc, pos, topk_k=8,
+                                   k_block=KB, replan_interval=1)
+    out = sata_decode_attention(qg, kc, vc, plan["kv_indices"],
+                                plan["kv_counts"], thr, pos, k_block=KB)
+    return out, plan
+
+
+@multi_device
+def test_tensor_parallel_decode_parity():
+    from repro.core.decode_plan import init_decode_plan
+    qg, kc, vc, kn, pos = _decode_inputs()
+    oref, pref = _reference_step(qg, kc, vc, kn, pos,
+                                 init_decode_plan(B, KV, SMAX, D, KB))
+    mesh = M.make_shard_mesh(2)
+    out, pnew = M.tensor_parallel_decode_step(
+        mesh, qg, kc, vc, kn, pos, init_decode_plan(B, KV, SMAX, D, KB),
+        topk_k=8, k_block=KB, replan_interval=1)
+    assert float(jnp.abs(out - oref).max()) == 0.0
+    for name in pref:
+        assert (np.asarray(pnew[name]) == np.asarray(pref[name])).all(), \
+            name
+
+
+@multi_device
+def test_tensor_parallel_decode_multi_step_carry():
+    """The sharded plan feeds straight back — three steps stay bitwise
+    with the single-device carry."""
+    from repro.core.decode_plan import init_decode_plan
+    rng = np.random.default_rng(3)
+    mesh = M.make_shard_mesh(2)
+    plan_r = init_decode_plan(B, KV, SMAX, D, KB)
+    plan_s = init_decode_plan(B, KV, SMAX, D, KB)
+    kc = jnp.zeros((B, SMAX, KV, D), jnp.float32)
+    vc = jnp.zeros((B, SMAX, KV, D), jnp.float32)
+    for step in range(3):
+        p = 16 + step
+        pos = jnp.full((B,), p, jnp.int32)
+        kn = jnp.asarray(rng.standard_normal((B, 1, KV, D)), jnp.float32)
+        vn = jnp.asarray(rng.standard_normal((B, 1, KV, D)), jnp.float32)
+        qg = jnp.asarray(rng.standard_normal((B, KV, G, D)), jnp.float32)
+        kc = kc.at[:, p:p + 1].set(kn)
+        vc = vc.at[:, p:p + 1].set(vn)
+        oref, plan_r = _reference_step(qg, kc, vc, kn, pos, plan_r)
+        out, plan_s = M.tensor_parallel_decode_step(
+            mesh, qg, kc, vc, kn, pos, plan_s, topk_k=8, k_block=KB,
+            replan_interval=1)
+        assert float(jnp.abs(out - oref).max()) == 0.0, step
+
+
+def test_plan_pspecs_cover_every_leaf():
+    from repro.core.decode_plan import init_decode_plan
+    for summary in ("fp32", "int8"):
+        plan = init_decode_plan(2, 4, 32, 8, 8, summary=summary,
+                                qos=True, retire=True)
+        specs = M.plan_pspecs(plan, "kv")
+        assert set(specs) == set(plan)
+        for name, val in plan.items():
+            assert len(specs[name]) == val.ndim, name
+
+
+def test_shared_prefix_index_publish_lookup():
+    from repro.core.paging import SharedPrefixIndex
+    idx = SharedPrefixIndex()
+    toks = np.arange(16, dtype=np.int64)
+    page = 8
+    payload = {"k_pages": np.zeros((1, 2, page, 2, 4), np.float32)}
+    n = idx.publish(0, toks, page, payload)
+    assert n == 2
+    # same replica looking up its own pages: no remote pages
+    hit = idx.lookup(0, toks)
+    assert hit is not None and hit[0] == 16 and hit[2] == 0
+    # other replica: both pages are remote-owned
+    hit = idx.lookup(1, toks)
+    assert hit is not None and hit[0] == 16 and hit[2] == 2
+    assert hit[1]["k_pages"].shape[1] == 2
+    # re-publish dedups (first publisher wins)
+    assert idx.publish(1, toks, page, payload) == 0
+
+
+def test_serve_replicated_cross_replica_hits():
+    import repro.launch.serve as serve_mod
+    from repro.configs.archs import SMOKE
+    cfg = dataclasses.replace(
+        SMOKE["qwen3-4b"], attention_variant="topk", topk_impl="bisect",
+        sata_decode="on", sata_decode_block=8, kv_cache_layout="paged",
+        kv_page_size=8, kv_prefix_cache=True)
+    out = serve_mod.serve_replicated(
+        "qwen3-4b", n_replicas=2, smoke=True, cfg=cfg,
+        options=serve_mod.ServeOptions(n_requests=4, batch_slots=2,
+                                       gen_len=3, max_len=64,
+                                       prompt_len=17,
+                                       shared_prefix_len=16))
+    assert out["outputs_equal"]
+    assert out["cross_replica_hits"] >= 1
+    assert out["migrated_pages"] >= 2
+    assert 0.0 < out["cross_replica_hit_rate"] <= 1.0

@@ -451,10 +451,12 @@ def test_decode_fetch_stats_plan_side():
 # ---------------------------------------------------------------------------
 
 def test_paged_init_rejects_mismatched_page_size():
-    cfg = dataclasses.replace(_cfg(), kv_cache_layout="paged",
-                              kv_page_size=8, sata_decode_block=4)
+    # the page/block equality is validated at CONFIG CONSTRUCTION now
+    # (KVCacheConfig.check_decode_block via ModelConfig.__post_init__),
+    # not at the first init_kv_cache shape assert
     with pytest.raises(ValueError, match="kv_page_size"):
-        attn.init_kv_cache(cfg, 2, 16, jnp.float32)
+        dataclasses.replace(_cfg(), kv_cache_layout="paged",
+                            kv_page_size=8, sata_decode_block=4)
 
 
 def test_paged_init_rejects_vlm():
